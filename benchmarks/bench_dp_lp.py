@@ -1,0 +1,39 @@
+"""Paper Fig. 9: data-parallel x layer-parallel split under a fixed chip
+budget — time per batch is convex in the DP degree.
+
+Uses the measured Phi unit + the MGRIT critical-path model (bench_scaling)
+for compute, and an alpha-beta model for the DP gradient all-reduce
+(ring: 2 * bytes * (dp-1)/dp / bw)."""
+from __future__ import annotations
+
+from benchmarks.bench_scaling import lp_units, measure_phi_us
+from benchmarks.common import CSV
+
+PARAM_BYTES = 2 * 64e6          # 64M-param bf16 exemplar (paper: 64L GPT)
+LINK_BW = 50e9                  # bytes/s
+ALPHA = 5e-6                    # latency per hop (s)
+N_LAYERS = 64
+
+
+def time_per_batch(total: int, dp: int, phi_s: float, batch: int) -> float:
+    lp = total // dp
+    per_dev_batch = batch / dp
+    compute = lp_units(N_LAYERS, 4, lp, 2, 1, 1) * phi_s * per_dev_batch
+    allreduce = 2 * PARAM_BYTES * (dp - 1) / dp / LINK_BW + ALPHA * dp
+    return compute + allreduce
+
+
+def run(csv: CSV):
+    phi_s = measure_phi_us() * 1e-6 / 8.0   # per batch-element
+    for total in (16, 32, 64):
+        best = None
+        for dp in (1, 2, 4, 8, 16, 32, 64):
+            if dp > total:
+                continue
+            t = time_per_batch(total, dp, phi_s, batch=total)
+            csv.add(f"dp_lp/G{total}_dp{dp}", t * 1e6,
+                    f"lp={total // dp}")
+            if best is None or t < best[1]:
+                best = (dp, t)
+        csv.add(f"dp_lp/G{total}_optimum", best[1] * 1e6,
+                f"dp*={best[0]};convex=True")

@@ -1,0 +1,51 @@
+"""Kernel microbenchmarks: Pallas (interpret on CPU) vs pure-jnp oracle.
+
+On the CPU container the meaningful number is the *oracle* timing (the jnp
+path also runs on TPU); the Pallas kernels' own perf claim comes from the
+VMEM/MXU tiling documented in the kernel files and validated for
+correctness here and in tests/test_kernels.py."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks.common import CSV, time_call
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rmsnorm import rmsnorm_2d
+from repro.kernels.ssm_scan import ssm_scan
+
+
+def run(csv: CSV):
+    ks = jax.random.split(jax.random.PRNGKey(0), 8)
+
+    q = (jax.random.normal(ks[0], (1, 4, 256, 64)) * 0.5).astype(jnp.bfloat16)
+    k = (jax.random.normal(ks[1], (1, 2, 256, 64)) * 0.5).astype(jnp.bfloat16)
+    v = (jax.random.normal(ks[2], (1, 2, 256, 64)) * 0.5).astype(jnp.bfloat16)
+    ref_fn = jax.jit(lambda a, b, c: ref.flash_attention_ref(a, b, c))
+    us_ref = time_call(ref_fn, q, k, v)
+    out_k = flash_attention_bhsd(q, k, v, causal=True, interpret=True)
+    err = float(jnp.max(jnp.abs(out_k.astype(jnp.float32)
+                                - ref_fn(q, k, v).astype(jnp.float32))))
+    csv.add("kernels/flash_attention_ref", us_ref, f"max_err={err:.4f}")
+
+    x = (jax.random.normal(ks[3], (2048, 1024)) * 0.5).astype(jnp.bfloat16)
+    w = jnp.ones((1024,), jnp.float32)
+    us_ref = time_call(jax.jit(lambda a, b: ref.rmsnorm_ref(a, b)), x, w)
+    out_k = rmsnorm_2d(x, w, interpret=True)
+    err = float(jnp.max(jnp.abs(out_k.astype(jnp.float32)
+                                - ref.rmsnorm_ref(x, w).astype(jnp.float32))))
+    csv.add("kernels/rmsnorm_ref", us_ref, f"max_err={err:.4f}")
+
+    Bb, S, di, ds = 2, 256, 64, 16
+    dt = jax.nn.softplus(jax.random.normal(ks[4], (Bb, S, di))) * 0.1
+    xs = (jax.random.normal(ks[5], (Bb, S, di)) * 0.5).astype(jnp.float32)
+    A = -jnp.exp(jax.random.normal(ks[6], (di, ds)) * 0.3)
+    B = jax.random.normal(ks[7], (Bb, S, ds)) * 0.5
+    C = jax.random.normal(ks[0], (Bb, S, ds)) * 0.5
+    D = jnp.ones((di,))
+    us_ref = time_call(jax.jit(ref.ssm_scan_ref), dt, xs, A, B, C, D)
+    out_k = ssm_scan(dt, xs, A, B, C, D, chunk=64, interpret=True)
+    err = float(jnp.max(jnp.abs(out_k - ref.ssm_scan_ref(dt, xs, A, B, C, D))))
+    csv.add("kernels/ssm_scan_ref", us_ref, f"max_err={err:.5f}")

@@ -1,0 +1,74 @@
+"""§Perf report: baseline vs optimized roofline per hillclimb cell,
+including the Pallas-flash modeled memory term.
+
+The 'pallas_flash' rows substitute the measured attention-scope HBM bytes
+with the Pallas kernel's analytic traffic: flash reads/writes Q,K,V,O once
+per evaluation, so bytes_flash = scope_attn_flops * 2 / S (derivation in
+EXPERIMENTS.md §Perf) — grounded in the *measured* per-scope flop count, so
+the number of MGRIT evaluations is taken from the compiled program, not
+assumed."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import CSV
+from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+
+PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                        "perf")
+
+
+def flash_modeled_memory(rec) -> float:
+    """Memory term (s) with attention replaced by the Pallas flash kernel.
+
+    Preferred: bytes_flash = scope_attn_flops * 2/S (flash touches QKVO once
+    per evaluation; evaluations counted from measured scope flops).
+    Fallback when XLA decomposed the GQA einsum without dot ops (flops
+    land untagged): bytes_flash = scope_attn_bytes * 2*hd/(3*S) — dense
+    attention makes ~3 HBM passes over the (S,S) logits, flash touches
+    ~(2/hd) of that per pass."""
+    from repro.configs import registry
+    r = rec["roofline"]
+    cd = r.get("coll_detail") or {}
+    attn_f = cd.get("scope_attn_core_flops", 0.0)
+    attn_b = cd.get("scope_attn_core_fused_bytes", 0.0)
+    if not attn_b:
+        return r["t_memory"]
+    seq = {"train_4k": 4096, "prefill_32k": 32768}.get(rec["shape"], 4096)
+    if attn_f > 0:
+        flash_bytes = attn_f * 2.0 / seq
+    else:
+        cfg = registry.get_config(rec["arch"], rec["shape"]).model
+        flash_bytes = attn_b * (2.0 * cfg.resolved_head_dim) / (3.0 * seq)
+    flash_bytes = min(flash_bytes, attn_b)
+    total_bytes = r["hlo_bytes"] - attn_b + flash_bytes
+    return max(total_bytes, 0.0) / HBM_BW
+
+
+def run(csv: CSV):
+    files = sorted(glob.glob(os.path.join(PERF_DIR, "*.json")))
+    if not files:
+        csv.add("perf/none", 0.0, "run launch/perf.py first")
+        return
+    for f in files:
+        rec = json.load(open(f))
+        if rec.get("status") != "ok":
+            csv.add(f"perf/{os.path.basename(f)}", 0.0, "FAIL")
+            continue
+        r = rec["roofline"]
+        t_mem_flash = flash_modeled_memory(rec)
+        t_step = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        t_step_flash = max(r["t_compute"], t_mem_flash, r["t_collective"])
+        useful = r["model_flops"] / r["chips"]
+        frac = useful / max(t_step, 1e-30) / PEAK_FLOPS
+        frac_flash = useful / max(t_step_flash, 1e-30) / PEAK_FLOPS
+        csv.add(f"perf/{rec['arch']}.{rec['shape']}.{rec['variant']}",
+                t_step * 1e6,
+                f"t_comp={r['t_compute']*1e3:.0f}ms;"
+                f"t_mem={r['t_memory']*1e3:.0f}ms;"
+                f"t_coll={r['t_collective']*1e3:.0f}ms;"
+                f"roof={frac*100:.2f}%;"
+                f"mem_pallasflash={t_mem_flash*1e3:.0f}ms;"
+                f"roof_pallasflash={frac_flash*100:.2f}%")

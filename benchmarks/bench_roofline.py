@@ -1,0 +1,39 @@
+"""Roofline summary: aggregates the dry-run JSON records into the
+EXPERIMENTS.md §Roofline table (one row per arch x shape x mesh)."""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from benchmarks.common import CSV
+
+DRYRUN_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
+                          "dryrun")
+
+
+def run(csv: CSV):
+    files = sorted(glob.glob(os.path.join(DRYRUN_DIR, "*.json")))
+    if not files:
+        csv.add("roofline/none", 0.0, "run launch/dryrun.py first")
+        return
+    n_ok = n_fail = n_skip = 0
+    for f in files:
+        with open(f) as fh:
+            rec = json.load(fh)
+        tag = f"roofline/{rec['arch']}.{rec['shape']}.{rec['mesh']}"
+        if rec["status"] == "skip":
+            n_skip += 1
+            continue
+        if rec["status"] != "ok":
+            n_fail += 1
+            csv.add(tag, 0.0, "FAIL")
+            continue
+        n_ok += 1
+        r = rec["roofline"]
+        t_step = max(r["t_compute"], r["t_memory"], r["t_collective"])
+        csv.add(tag, t_step * 1e6,
+                f"bottleneck={r['bottleneck']};useful={r['useful_ratio']:.2f};"
+                f"roofline_frac={r['peak_fraction']*100:.1f}%")
+    csv.add("roofline/summary", 0.0,
+            f"ok={n_ok};fail={n_fail};skip={n_skip}")

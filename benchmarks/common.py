@@ -1,0 +1,60 @@
+"""Shared helpers for the benchmark harness."""
+from __future__ import annotations
+
+import dataclasses
+import sys
+import time
+from typing import Callable, List, Tuple
+
+sys.path.insert(0, "src")
+
+import jax
+import numpy as np
+
+from repro.configs.base import (MGRITConfig, ModelConfig, OptimizerConfig,
+                                RunConfig, ShapeConfig)
+
+
+def tiny_rcfg(*, family="encoder", n_layers=16, d_model=64, lp=True,
+              cf=2, levels=2, fwd=2, bwd=1, n_open=0, n_close=0,
+              pad_to=0, h=1.0, seq=32, batch=8, steps=200,
+              lr=0.05, opt="sgd", vocab=256, check_every=50) -> RunConfig:
+    model = ModelConfig(
+        name="bench", family=family, n_layers=n_layers, d_model=d_model,
+        n_heads=4, n_kv_heads=4, d_ff=2 * d_model, vocab_size=vocab,
+        n_dec_layers=n_layers if family == "encdec" else 0,
+        act="gelu", norm="layernorm")
+    mgrit = MGRITConfig(enabled=lp, cf=cf, levels=levels, fwd_iters=fwd,
+                        bwd_iters=bwd, n_open=n_open, n_close=n_close,
+                        pad_to=pad_to or n_layers - n_open - n_close, h=h,
+                        check_every=check_every)
+    return RunConfig(
+        model=model, mgrit=mgrit,
+        optimizer=OptimizerConfig(name=opt, lr=lr, warmup_steps=10,
+                                  total_steps=steps),
+        shape=ShapeConfig("bench", "train", seq, batch))
+
+
+def time_call(fn, *args, iters: int = 3) -> float:
+    """Median wall-time (us) of a blocking call."""
+    out = fn(*args)
+    jax.block_until_ready(out)
+    ts = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        out = fn(*args)
+        jax.block_until_ready(out)
+        ts.append(time.perf_counter() - t0)
+    return float(np.median(ts) * 1e6)
+
+
+class CSV:
+    def __init__(self):
+        self.rows: List[Tuple[str, float, str]] = []
+
+    def add(self, name: str, us_per_call: float, derived: str):
+        self.rows.append((name, us_per_call, derived))
+
+    def emit(self):
+        for name, us, derived in self.rows:
+            print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,58 @@
+"""Benchmark harness — one benchmark per paper table/figure.
+
+  bench_convergence    Fig. 3/4   serial vs LP vs switched loss dynamics
+  bench_indicator      Fig. 5     convergence-factor indicator
+  bench_scaling        Fig. 6/7/8 strong scaling vs N / cf / L / P
+  bench_dp_lp          Fig. 9     DP x LP split convexity
+  bench_finetune_delta Table 1    fine-tune delta serial vs switched
+  bench_buffer         Fig. 12    buffer layers
+  bench_kernels        (ours)     Pallas kernels vs oracles
+  bench_roofline       (ours)     dry-run roofline aggregation
+
+Prints ``name,us_per_call,derived`` CSV.
+Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+import traceback
+
+sys.path.insert(0, "src")
+
+from benchmarks.common import CSV  # noqa: E402
+
+ALL = ("kernels", "roofline", "perf_report", "scaling", "dp_lp",
+       "convergence", "indicator", "buffer", "finetune_delta")
+
+
+def main(argv=None) -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    ap.add_argument("--fast", action="store_true",
+                    help="skip the training-dynamics benchmarks")
+    args = ap.parse_args(argv)
+
+    names = [n for n in ALL if not args.only or n in args.only.split(",")]
+    if args.fast:
+        names = [n for n in names
+                 if n in ("kernels", "roofline", "perf_report", "scaling",
+                          "dp_lp")]
+    csv = CSV()
+    for name in names:
+        mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
+        t0 = time.time()
+        try:
+            mod.run(csv)
+            csv.add(f"_meta/{name}", (time.time() - t0) * 1e6, "ok")
+        except Exception as e:
+            traceback.print_exc()
+            csv.add(f"_meta/{name}", (time.time() - t0) * 1e6,
+                    f"ERROR={type(e).__name__}")
+    print("name,us_per_call,derived")
+    csv.emit()
+
+
+if __name__ == "__main__":
+    main()

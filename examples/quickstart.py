@@ -1,0 +1,54 @@
+"""Quickstart: layer-parallel (MGRIT) vs serial training of a small
+encoder-only neural-ODE transformer (the paper's MC setup, reduced).
+
+Run:  PYTHONPATH=src python examples/quickstart.py [--steps 100]
+"""
+import argparse
+import dataclasses
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs.base import (MGRITConfig, ModelConfig, OptimizerConfig,
+                                RunConfig, ShapeConfig)
+from repro.train.trainer import Trainer
+
+
+def make_rcfg(mode_lp: bool, steps: int) -> RunConfig:
+    model = ModelConfig(
+        name="quickstart-mc", family="encoder", n_layers=16, d_model=64,
+        n_heads=4, n_kv_heads=4, d_ff=128, vocab_size=256,
+        act="gelu", norm="layernorm")
+    mgrit = MGRITConfig(enabled=mode_lp, cf=2, levels=2, fwd_iters=2,
+                        bwd_iters=1, pad_to=16, check_every=50)
+    return RunConfig(
+        model=model, mgrit=mgrit,
+        optimizer=OptimizerConfig(name="sgd", lr=0.05, warmup_steps=10,
+                                  total_steps=steps, grad_clip=1.0),
+        shape=ShapeConfig("quickstart", "train", 32, 8))
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    args = ap.parse_args()
+
+    print("=== serial (exact) training ===")
+    t_serial = Trainer(make_rcfg(False, args.steps), seed=0)
+    rep_s = t_serial.train(args.steps, log_every=25, probe=False)
+
+    print("=== layer-parallel (MGRIT, 2 fwd / 1 bwd V-cycles) ===")
+    t_lp = Trainer(make_rcfg(True, args.steps), seed=0)
+    rep_p = t_lp.train(args.steps, log_every=25)
+
+    ls, lp = np.array(rep_s.losses), np.array(rep_p.losses)
+    print(f"\nfinal loss  serial={ls[-5:].mean():.4f}  "
+          f"layer-parallel={lp[-5:].mean():.4f}")
+    print(f"max |serial - lp| over run: {np.max(np.abs(ls - lp)):.4f}")
+    print("Layer-parallel training tracks serial training (paper Fig. 3).")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""Encoder-decoder layer-parallel training (the paper's MT task + novel
+enc-dec neural-ODE formulation, Eq. 3), reduced for CPU.
+
+Two chained MGRIT grids: encoder solve feeds the decoder's cross-attention.
+
+Run:  PYTHONPATH=src python examples/translation.py --steps 100
+"""
+import argparse
+import dataclasses
+import sys
+
+import numpy as np
+
+sys.path.insert(0, "src")
+
+from repro.configs import registry
+from repro.configs.base import OptimizerConfig, ShapeConfig
+from repro.configs.reduce import reduce_config
+from repro.train.trainer import Trainer
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--steps", type=int, default=100)
+    args = ap.parse_args()
+
+    base = registry.get_config("mt_marian")
+    rcfg = reduce_config(base, seq=24, batch=8)
+    rcfg = dataclasses.replace(
+        rcfg,
+        mgrit=dataclasses.replace(rcfg.mgrit, fwd_iters=2, bwd_iters=2,
+                                  check_every=40),
+        optimizer=OptimizerConfig(name="adamw", lr=1e-3, warmup_steps=20,
+                                  total_steps=args.steps),
+        shape=ShapeConfig("mt", "train", 24, 8))
+
+    print("=== enc-dec layer-parallel (Eq. 3, two chained MGRIT grids) ===")
+    t_lp = Trainer(rcfg, seed=0)
+    rep_lp = t_lp.train(args.steps, log_every=20)
+
+    print("=== enc-dec serial baseline ===")
+    ser = dataclasses.replace(
+        rcfg, mgrit=dataclasses.replace(rcfg.mgrit, enabled=False))
+    t_s = Trainer(ser, seed=0)
+    rep_s = t_s.train(args.steps, log_every=20, probe=False)
+
+    lp, ls = np.array(rep_lp.losses), np.array(rep_s.losses)
+    print(f"\nfinal loss  serial={ls[-5:].mean():.4f}  lp={lp[-5:].mean():.4f}"
+          f"  (paper Fig. 3 right: LP tracks serial; a late-training gap is"
+          f" recovered by the serial switch)")
+
+
+if __name__ == "__main__":
+    main()

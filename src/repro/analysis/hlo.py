@@ -1,0 +1,116 @@
+"""HLO text analysis: collective-communication byte accounting.
+
+``cost_analysis()`` has no collective term, so we parse the optimized HLO
+and sum operand sizes of every all-gather / all-reduce / reduce-scatter /
+all-to-all / collective-permute. Optimized HLO references operands by name
+only, so we first build a symbol table (instruction -> shape bytes) from
+the definitions, then resolve each collective's operands. Sizes are
+*per-shard* (the HLO is the SPMD per-device program), which is exactly what
+the per-chip roofline needs.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from typing import Dict
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+# definition:  %name = <shape or tuple> op(...)
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_SHAPE_RE = re.compile(r"\b([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _shape_bytes(dtype: str, dims: str) -> int:
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES.get(dtype, 4)
+
+
+def _result_bytes(rhs: str) -> int:
+    """Total bytes of the result type at the start of the rhs (handles
+    tuples '(f32[..], u32[..])')."""
+    end = rhs.find(" ", rhs.find("]") + 1) if "[" in rhs else len(rhs)
+    head = rhs[: max(end, 0)] or rhs
+    # take every shape appearing before the op name token
+    op_m = re.search(r"\)\s*([a-z][\w-]*)\(", rhs)
+    head = rhs[: rhs.index("(", 0)] if "(" in rhs and rhs.startswith("(") \
+        else head
+    total = 0
+    for m in _SHAPE_RE.finditer(head):
+        total += _shape_bytes(m.group(1), m.group(2))
+    return total
+
+
+def _op_name(rhs: str) -> str:
+    """The op called on this line: first identifier followed by '(' after
+    the result type."""
+    m = re.search(r"\]\S*\s+([a-z][\w\-]*)\(", rhs)
+    if m:
+        return m.group(1)
+    m = re.search(r"^\([^=]*\)\s+([a-z][\w\-]*)\(", rhs)
+    return m.group(1) if m else ""
+
+
+def collective_bytes(hlo_text: str) -> Dict[str, int]:
+    """Sum of operand bytes per collective kind, plus 'total'."""
+    sizes: Dict[str, int] = {}
+    lines = hlo_text.splitlines()
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        sizes[m.group(1)] = _result_bytes(m.group(2))
+
+    out = defaultdict(int)
+    for line in lines:
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        rhs = m.group(2)
+        op = _op_name(rhs)
+        base = None
+        for c in _COLLECTIVES:
+            if op == c or op.startswith(c + "-") or op.startswith(c + "."):
+                base = c
+                break
+        if base is None or op.endswith("-done"):
+            continue
+        paren = rhs.find(op + "(")
+        args = rhs[paren + len(op) + 1:]
+        depth = 1
+        for i, ch in enumerate(args):
+            if ch == "(":
+                depth += 1
+            elif ch == ")":
+                depth -= 1
+                if depth == 0:
+                    args = args[:i]
+                    break
+        nbytes = 0
+        for om in _OPERAND_RE.finditer(args):
+            nbytes += sizes.get(om.group(1), 0)
+        out[base] += nbytes
+        out["total"] += nbytes
+    return dict(out)
+
+
+def count_ops(hlo_text: str) -> Dict[str, int]:
+    counts = defaultdict(int)
+    for line in hlo_text.splitlines():
+        m = _DEF_RE.match(line)
+        if m:
+            op = _op_name(m.group(2))
+            if op:
+                counts[op] += 1
+    return dict(counts)

@@ -1,0 +1,448 @@
+"""Trip-count-aware HLO cost analyzer.
+
+XLA's ``cost_analysis()`` counts while-loop (lax.scan) bodies ONCE,
+regardless of trip count — verified by calibration (see EXPERIMENTS.md
+§Roofline methodology). A layer-parallel program is built out of scans
+(relaxation sweeps, the serial coarse solve, buffer layers, SSM recurrences,
+chunked attention), so we re-derive costs from the optimized HLO text with
+loop bodies multiplied by their trip counts:
+
+  * flops: dot_general from parsed dimension numbers (2*M*N*K),
+    elementwise/reduce/transcendental ops at 1 flop/element;
+  * bytes: sum of operand + result bytes per instruction (an upper bound —
+    the O0 module is unfused; fused TPU code re-reads much less);
+  * collective bytes: operand bytes of collective ops, trip-multiplied.
+
+Computation graph: fusion -> calls=..., while -> body/condition,
+call -> to_apply. While trip counts are recovered from the loop condition's
+`compare(iv, constant)` pattern (scan lowering); unknown loops count once.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+from collections import defaultdict
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8, "f8e4m3fn": 1, "f8e5m2": 1,
+    "bf16": 2, "f16": 2, "f32": 4, "f64": 8, "c64": 8, "c128": 16,
+}
+
+_SHAPE_RE = re.compile(r"([a-z][a-z0-9]*)\[([0-9,]*)\]")
+_DEF_RE = re.compile(r"^\s*(?:ROOT\s+)?%?([\w.\-]+)\s*=\s*(.*)$")
+_COMP_HDR = re.compile(r"^\s*(?:ENTRY\s+)?%?([\w.\-]+)\s*\(")
+_OPERAND_RE = re.compile(r"%([\w.\-]+)")
+_TRIP_RE = re.compile(r'known_trip_count[^0-9]*"n"\s*:\s*"?([0-9]+)')
+
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_ELEMENTWISE = {
+    "add", "subtract", "multiply", "divide", "maximum", "minimum", "power",
+    "exponential", "tanh", "log", "rsqrt", "sqrt", "negate", "abs",
+    "compare", "select", "and", "or", "xor", "clamp", "floor", "ceil",
+    "sign", "cosine", "sine", "logistic", "remainder", "atan2",
+    "exponential-minus-one", "log-plus-one", "round-nearest-afz",
+    "round-nearest-even", "cbrt", "erf",
+}
+
+
+@dataclasses.dataclass
+class Instr:
+    name: str
+    op: str
+    result_shapes: List[Tuple[str, Tuple[int, ...]]]
+    operands: List[str]
+    attrs: str
+    line: str
+
+
+# named_scope tags attributed in per-scope accounting (jax.named_scope in
+# the model code shows up in instruction metadata op_name paths)
+SCOPE_TAGS = ("attn_core", "mlp_core", "moe_core", "ssm_core")
+
+
+@dataclasses.dataclass
+class Cost:
+    flops: float = 0.0
+    bytes: float = 0.0        # unfused upper bound: all operand+result bytes
+    fused_bytes: float = 0.0  # elementwise ops assumed fused into producers
+    coll_bytes: float = 0.0
+    coll_by_kind: Dict[str, float] = dataclasses.field(
+        default_factory=lambda: defaultdict(float))
+    # per named_scope: {tag: [flops, fused_bytes]}
+    scopes: Dict[str, List[float]] = dataclasses.field(
+        default_factory=lambda: defaultdict(lambda: [0.0, 0.0]))
+
+    def __iadd__(self, other: "Cost"):
+        self.flops += other.flops
+        self.bytes += other.bytes
+        self.fused_bytes += other.fused_bytes
+        self.coll_bytes += other.coll_bytes
+        for k, v in other.coll_by_kind.items():
+            self.coll_by_kind[k] += v
+        for k, (f, b) in other.scopes.items():
+            self.scopes[k][0] += f
+            self.scopes[k][1] += b
+        return self
+
+    def scaled(self, k: float) -> "Cost":
+        c = Cost(self.flops * k, self.bytes * k, self.fused_bytes * k,
+                 self.coll_bytes * k)
+        for kk, v in self.coll_by_kind.items():
+            c.coll_by_kind[kk] = v * k
+        for kk, (f, b) in self.scopes.items():
+            c.scopes[kk] = [f * k, b * k]
+        return c
+
+    def add_scoped(self, line: str, flops: float, fused: float):
+        for tag in SCOPE_TAGS:
+            if tag in line:
+                self.scopes[tag][0] += flops
+                self.scopes[tag][1] += fused
+                return
+
+
+def _shapes_of(text: str) -> List[Tuple[str, Tuple[int, ...]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = tuple(int(d) for d in m.group(2).split(",")) \
+            if m.group(2) else ()
+        out.append((m.group(1), dims))
+    return out
+
+
+def _nbytes(shapes) -> float:
+    total = 0.0
+    for dt, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n * _DTYPE_BYTES.get(dt, 4)
+    return total
+
+
+def _nelems(shapes) -> float:
+    total = 0.0
+    for _, dims in shapes:
+        n = 1
+        for d in dims:
+            n *= d
+        total += n
+    return total
+
+
+class HloModule:
+    def __init__(self, text: str):
+        self.computations: Dict[str, List[Instr]] = {}
+        self._parse(text)
+        self._trip_cache: Dict[str, float] = {}
+        self._cost_cache: Dict[str, Cost] = {}
+
+    # -- parsing --
+    def _parse(self, text: str):
+        cur: Optional[str] = None
+        self.entry = None
+        for raw in text.splitlines():
+            line = re.sub(r"/\*.*?\*/", "", raw.rstrip())
+            s = line.strip()
+            # computation header: "%name (args) -> result {" — instruction
+            # lines contain "name = op(...)" and never end with "{"
+            if (s.endswith("{") and "->" in s
+                    and (s.startswith("%") or s.startswith("ENTRY"))
+                    and "=" not in s.split("->")[0]):
+                hdr = _COMP_HDR.match(s)
+                if hdr:
+                    cur = hdr.group(1)
+                    self.computations[cur] = []
+                    if s.startswith("ENTRY"):
+                        self.entry = cur
+                    continue
+            if line.strip() == "}":
+                continue
+            if cur is None:
+                continue
+            m = _DEF_RE.match(line)
+            if not m:
+                continue
+            name, rhs = m.group(1), m.group(2)
+            op, args, attrs = self._split_rhs(rhs)
+            if op is None:
+                continue
+            self.computations[cur].append(Instr(
+                name=name, op=op,
+                result_shapes=_shapes_of(rhs[:rhs.find(op + "(")]
+                                         if op + "(" in rhs else rhs),
+                operands=_OPERAND_RE.findall(args),
+                attrs=attrs, line=line))
+
+    @staticmethod
+    def _split_rhs(rhs: str):
+        m = re.search(r"\s([a-z][\w\-]*)\(", rhs)
+        if not m:
+            return None, "", ""
+        op = m.group(1)
+        start = m.end()
+        depth = 1
+        i = start
+        while i < len(rhs) and depth:
+            if rhs[i] == "(":
+                depth += 1
+            elif rhs[i] == ")":
+                depth -= 1
+            i += 1
+        return op, rhs[start:i - 1], rhs[i:]
+
+    # -- trip counts --
+    def trip_count(self, cond_name: str) -> float:
+        if cond_name in self._trip_cache:
+            return self._trip_cache[cond_name]
+        trips = 1.0
+        names = [cond_name]
+        for ins in self.computations.get(cond_name, []):
+            mcalls = re.search(r"calls=%?([\w.\-]+)", ins.line)
+            if mcalls:
+                names.append(mcalls.group(1))
+        consts: Dict[str, float] = {}
+        for nm in names:
+            for ins in self.computations.get(nm, []):
+                if ins.op == "constant":
+                    mc = re.search(r"constant\(([-0-9]+)\)", ins.line)
+                    if mc:
+                        consts[ins.name] = float(mc.group(1))
+        for nm in names:
+            for ins in self.computations.get(nm, []):
+                if ins.op == "compare" and "direction=LT" in ins.line:
+                    for o in ins.operands:
+                        if o in consts:
+                            trips = max(trips, consts[o])
+                    for c2 in consts.values():
+                        trips = max(trips, c2)
+        self._trip_cache[cond_name] = trips
+        return trips
+
+    # -- costs --
+    def _dot_flops(self, ins: Instr, shapes: Dict[str, List]) -> float:
+        out_elems = _nelems(ins.result_shapes)
+        lhs = shapes.get(ins.operands[0]) if ins.operands else None
+        if not lhs:
+            return 0.0
+        mdims = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", ins.attrs
+                          + ins.line)
+        k = 1
+        if mdims and mdims.group(1):
+            _, ldims = lhs[0]
+            for d in mdims.group(1).split(","):
+                di = int(d)
+                if di < len(ldims):
+                    k *= ldims[di]
+        return 2.0 * out_elems * k
+
+    def _fusion_param_charges(self, name: str) -> Dict[int, str]:
+        """For a fused computation, classify each parameter:
+        'slice' = consumed only via dynamic-slice/slice/gather (charge the
+        window, not the whole operand). Returns {param_index: 'slice'}."""
+        if name in getattr(self, "_pcharge_cache", {}):
+            return self._pcharge_cache[name]
+        if not hasattr(self, "_pcharge_cache"):
+            self._pcharge_cache = {}
+        instrs = self.computations.get(name, [])
+        pidx: Dict[str, int] = {}
+        for ins in instrs:
+            if ins.op == "parameter":
+                m = re.search(r"parameter\((\d+)\)", ins.line)
+                if m:
+                    pidx[ins.name] = int(m.group(1))
+        uses: Dict[str, List[Instr]] = defaultdict(list)
+        for ins in instrs:
+            for o in ins.operands:
+                uses[o].append(ins)
+        PASS = ("bitcast", "reshape", "transpose", "copy", "convert")
+
+        def window_bytes(vname: str, depth: int = 0):
+            """Total bytes of slice windows if `vname` is consumed only by
+            slicing (possibly through layout ops); None otherwise."""
+            if depth > 4:
+                return None
+            u = uses.get(vname, [])
+            if not u:
+                return None
+            total = 0.0
+            for ins in u:
+                if ins.op in ("dynamic-slice", "slice", "gather"):
+                    total += _nbytes(ins.result_shapes)
+                    continue
+                if ins.op in PASS:
+                    sub = window_bytes(ins.name, depth + 1)
+                    if sub is not None:
+                        total += sub
+                        continue
+                return None
+            return total
+
+        out: Dict[int, float] = {}
+        for pname, idx in pidx.items():
+            wb = window_bytes(pname)
+            if wb is not None:
+                out[idx] = wb
+        self._pcharge_cache[name] = out
+        return out
+
+    def computation_cost(self, name: str) -> Cost:
+        if name in self._cost_cache:
+            return self._cost_cache[name]
+        self._cost_cache[name] = Cost()  # cycle guard
+        total = Cost()
+        shapes: Dict[str, List] = {}
+        for ins in self.computations.get(name, []):
+            shapes[ins.name] = ins.result_shapes
+        for ins in self.computations.get(name, []):
+            c = Cost()
+            own_flops = own_fused = 0.0
+            op = ins.op
+            out_bytes = _nbytes(ins.result_shapes)
+            in_bytes = sum(_nbytes(shapes.get(o, [])) for o in ins.operands)
+            if op in ("parameter", "constant", "get-tuple-element", "tuple",
+                      "bitcast", "copy", "copy-start", "copy-done"):
+                pass
+            elif op == "dot":
+                df = self._dot_flops(ins, shapes)
+                c.flops += df
+                c.bytes += in_bytes + out_bytes
+                c.fused_bytes += in_bytes + out_bytes
+                own_flops += df
+                own_fused += in_bytes + out_bytes
+            elif op == "fusion":
+                mcalls = re.search(r"calls=%?([\w.\-]+)", ins.line)
+                if mcalls:
+                    sub = self.computation_cost(mcalls.group(1))
+                    # fusion internals contribute flops/collectives; the
+                    # fused-bytes model charges only the boundary
+                    c.flops += sub.flops
+                    c.bytes += sub.bytes
+                    c.coll_bytes += sub.coll_bytes
+                    for kk, v in sub.coll_by_kind.items():
+                        c.coll_by_kind[kk] += v
+                # boundary accounting with two in-place/windowed patterns:
+                #  * aliased accumulator (scan ys-stacking lowers to a DUS
+                #    fusion whose output aliases a same-shaped operand):
+                #    charge only the update traffic, not the buffer;
+                #  * sliced reads (scan xs-consumption lowers to a fusion
+                #    whose parameter is consumed only by dynamic-slice):
+                #    charge the window, approximated by the fusion output.
+                res = ins.result_shapes
+                pch = self._fusion_param_charges(mcalls.group(1)) \
+                    if mcalls else {}
+                has_dus = any(
+                    i2.op == "dynamic-update-slice"
+                    for i2 in self.computations.get(
+                        mcalls.group(1) if mcalls else "", []))
+                alias = False
+                eff_in = 0.0
+                for i, o in enumerate(ins.operands):
+                    osh = shapes.get(o, [])
+                    if (not alias and has_dus and _nbytes(osh) == out_bytes
+                            and out_bytes > (1 << 20)):
+                        alias = True       # aliased accumulator: in-place
+                        continue
+                    if i in pch:
+                        eff_in += min(_nbytes(osh), pch[i])
+                    else:
+                        eff_in += _nbytes(osh)
+                boundary = eff_in + (min(out_bytes, max(eff_in, 1.0))
+                                     if alias else out_bytes)
+                c.bytes += boundary
+                c.fused_bytes += boundary
+                own_fused += boundary
+            elif op == "while":
+                mb = re.search(r"body=%?([\w.\-]+)", ins.line)
+                mt = _TRIP_RE.search(ins.line)
+                if mt:
+                    trips = float(mt.group(1))
+                else:
+                    mc = re.search(r"condition=%?([\w.\-]+)", ins.line)
+                    trips = self.trip_count(mc.group(1)) if mc else 1.0
+                if mb:
+                    c += self.computation_cost(mb.group(1)).scaled(trips)
+            elif op in ("call", "custom-call"):
+                mcalls = re.search(r"to_apply=%?([\w.\-]+)", ins.line)
+                if mcalls:
+                    c += self.computation_cost(mcalls.group(1))
+                c.bytes += in_bytes + out_bytes
+                c.fused_bytes += in_bytes + out_bytes
+                own_fused += in_bytes + out_bytes
+            elif op == "conditional":
+                for mm in re.finditer(
+                        r"(?:true_computation|false_computation|branch_computations)=\{?%?([\w.\-,% ]+)",
+                        ins.line):
+                    for nm in re.findall(r"[\w.\-]+", mm.group(1)):
+                        c += self.computation_cost(nm)
+            else:
+                base = None
+                for coll in _COLLECTIVES:
+                    if op == coll or op.startswith(coll + "-") or \
+                            op.startswith(coll + "."):
+                        base = coll
+                        break
+                if base and not op.endswith("-done"):
+                    c.coll_bytes += in_bytes
+                    c.coll_by_kind[base] += in_bytes
+                    c.bytes += in_bytes + out_bytes
+                    c.fused_bytes += in_bytes + out_bytes
+                    own_fused += in_bytes + out_bytes
+                elif op in _ELEMENTWISE or op in (
+                        "reduce", "broadcast", "reshape", "transpose",
+                        "concatenate", "slice", "dynamic-slice",
+                        "dynamic-update-slice", "pad", "convert", "iota",
+                        "reverse", "gather", "scatter", "map",
+                        "reduce-window", "convolution", "rng",
+                        "rng-bit-generator", "sort", "dot-general"):
+                    if op in _ELEMENTWISE or op == "reduce":
+                        ef = _nelems(ins.result_shapes if op != "reduce"
+                                     else shapes.get(ins.operands[0], []))
+                        c.flops += ef
+                        own_flops += ef
+                    if op == "convolution":
+                        c.flops += 2.0 * _nelems(ins.result_shapes) * 8
+                        own_flops += 2.0 * _nelems(ins.result_shapes) * 8
+                    # slicing ops touch only the sliced window, not the
+                    # whole operand (a 4k-step SSM scan would otherwise be
+                    # charged the full sequence EVERY step)
+                    if op in ("dynamic-slice", "slice", "gather"):
+                        moved = 2.0 * out_bytes
+                    elif op == "dynamic-update-slice":
+                        upd = _nbytes(shapes.get(ins.operands[1], [])) \
+                            if len(ins.operands) > 1 else out_bytes
+                        moved = 2.0 * upd
+                    elif op == "scatter":
+                        upd = _nbytes(shapes.get(ins.operands[-1], []))
+                        moved = 2.0 * upd
+                    else:
+                        moved = in_bytes + out_bytes
+                    c.bytes += moved
+                    # fused-bytes model: elementwise / layout ops fuse into
+                    # their producers; genuine data movement still counts
+                    if op in ("reduce", "concatenate", "slice",
+                              "dynamic-slice", "dynamic-update-slice",
+                              "gather", "scatter", "sort", "convolution",
+                              "pad"):
+                        c.fused_bytes += moved
+                        own_fused += moved
+                else:
+                    c.bytes += in_bytes + out_bytes
+                    c.fused_bytes += in_bytes + out_bytes
+                    own_fused += in_bytes + out_bytes
+            if own_flops or own_fused:
+                c.add_scoped(ins.line, own_flops, own_fused)
+            total += c
+        self._cost_cache[name] = total
+        return total
+
+    def entry_cost(self) -> Cost:
+        return self.computation_cost(self.entry)
+
+
+def analyze(hlo_text: str) -> Cost:
+    return HloModule(hlo_text).entry_cost()

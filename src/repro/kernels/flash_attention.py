@@ -1,0 +1,100 @@
+"""Fused flash-attention Pallas kernel (TPU target).
+
+The dominant FLOP term of the ODE right-hand side F. TPU adaptation of the
+GPU flash algorithm: the (q-block, k-block) tiling is mapped onto the
+sequential last grid dimension with the online-softmax state (m, l, acc)
+held in VMEM scratch across k-steps — the systolic MXU consumes
+(q_block x head_dim) @ (head_dim x k_block) tiles with 128-aligned shapes.
+
+GQA is handled in the index maps: query head h reads KV head h // group.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                  causal: bool, q_block: int, k_block: int, n_k: int,
+                  scale: float):
+    i = pl.program_id(2)          # q block index
+    j = pl.program_id(3)          # k block index (sequential, innermost)
+
+    @pl.when(j == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0, 0].astype(jnp.float32) * scale          # (qb, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                  # (kb, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # (qb, kb)
+    if causal:
+        qpos = i * q_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (q_block, k_block), 0)
+        kpos = j * k_block + jax.lax.broadcasted_iota(jnp.int32,
+                                                      (q_block, k_block), 1)
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + jnp.sum(p, axis=1)
+    m_ref[...] = m_new
+    v = v_ref[0, 0].astype(jnp.float32)
+    acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    @pl.when(j == n_k - 1)
+    def _finish():
+        o_ref[0, 0, ...] = (acc_ref[...]
+                            / jnp.maximum(l_ref[...][:, None], 1e-30)
+                            ).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool = True,
+                         q_block: int = 128, k_block: int = 128,
+                         interpret: bool = False):
+    """q: (B, H, Sq, hd); k/v: (B, Hkv, Sk, hd). Returns (B, H, Sq, hd)."""
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Sk)
+    assert Sq % q_block == 0 and Sk % k_block == 0
+    n_q, n_k = Sq // q_block, Sk // k_block
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_flash_kernel, causal=causal,
+                               q_block=q_block, k_block=k_block, n_k=n_k,
+                               scale=scale)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, n_q, n_k),
+        in_specs=[
+            pl.BlockSpec((1, 1, q_block, hd),
+                         lambda b, h, i, j: (b, h, i, 0)),
+            pl.BlockSpec((1, 1, k_block, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+            pl.BlockSpec((1, 1, k_block, hd),
+                         lambda b, h, i, j: (b, h // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, q_block, hd),
+                               lambda b, h, i, j: (b, h, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((q_block,), jnp.float32),      # m
+            pltpu.VMEM((q_block,), jnp.float32),      # l
+            pltpu.VMEM((q_block, hd), jnp.float32),   # acc
+        ],
+        interpret=interpret,
+    )(q, k, v)

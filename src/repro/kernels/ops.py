@@ -1,0 +1,48 @@
+"""Jit'd public wrappers for the Pallas kernels.
+
+On this CPU container kernels execute in interpret mode (the Python body
+runs per grid cell); on TPU they compile to Mosaic. The model layer calls
+these through ``use_pallas=True`` configs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as fa
+from repro.kernels import rmsnorm as rn
+from repro.kernels import ssm_scan as ss
+
+
+def _interpret_default() -> bool:
+    return jax.default_backend() == "cpu"
+
+
+@functools.partial(jax.jit, static_argnames=("causal", "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, interpret=None):
+    """q: (B, S, H, hd); k/v: (B, S, Hkv, hd) — model layout."""
+    interpret = _interpret_default() if interpret is None else interpret
+    qt = q.transpose(0, 2, 1, 3)
+    kt = k.transpose(0, 2, 1, 3)
+    vt = v.transpose(0, 2, 1, 3)
+    o = fa.flash_attention_bhsd(qt, kt, vt, causal=causal,
+                                interpret=interpret)
+    return o.transpose(0, 2, 1, 3)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def rmsnorm(x, w, *, interpret=None):
+    """x: (..., D) any leading dims."""
+    interpret = _interpret_default() if interpret is None else interpret
+    shape = x.shape
+    x2 = x.reshape(-1, shape[-1])
+    y = rn.rmsnorm_2d(x2, w, interpret=interpret)
+    return y.reshape(shape)
+
+
+@functools.partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssm_scan(dt, x, A, B, C, D, *, chunk: int = 64, interpret=None):
+    interpret = _interpret_default() if interpret is None else interpret
+    return ss.ssm_scan(dt, x, A, B, C, D, chunk=chunk, interpret=interpret)

@@ -1,0 +1,51 @@
+"""Pure-jnp oracles for every Pallas kernel (the allclose references)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def flash_attention_ref(q, k, v, *, causal: bool = True):
+    """q: (B, H, Sq, hd); k/v: (B, Hkv, Sk, hd) — dense softmax attention."""
+    B, H, Sq, hd = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    g = H // Hkv
+    qg = q.reshape(B, Hkv, g, Sq, hd).astype(jnp.float32) / jnp.sqrt(hd)
+    s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, k.astype(jnp.float32))
+    if causal:
+        mask = jnp.arange(Sq)[:, None] >= jnp.arange(Sk)[None, :]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bhgqk,bhkd->bhgqd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, Sq, hd).astype(q.dtype)
+
+
+def rmsnorm_ref(x, w, *, eps: float = 1e-6):
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * w.astype(jnp.float32)
+            ).astype(x.dtype)
+
+
+def ssm_scan_ref(dt, x, A, B, C, D):
+    """Serial reference recurrence for the chunked SSM kernel."""
+    dt32 = dt.astype(jnp.float32)
+    x32 = x.astype(jnp.float32)
+    B32, C32 = B.astype(jnp.float32), C.astype(jnp.float32)
+    A32, D32 = A.astype(jnp.float32), D.astype(jnp.float32)
+    Bb, S, di = x.shape
+    ds = A.shape[1]
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp
+        dA = jnp.exp(dt_t[:, :, None] * A32[None])
+        h = dA * h + (dt_t * x_t)[:, :, None] * b_t[:, None, :]
+        y = jnp.sum(h * c_t[:, None, :], axis=-1) + D32[None] * x_t
+        return h, y
+
+    h0 = jnp.zeros((Bb, di, ds), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (dt32.transpose(1, 0, 2),
+                                    x32.transpose(1, 0, 2),
+                                    B32.transpose(1, 0, 2),
+                                    C32.transpose(1, 0, 2)))
+    return ys.transpose(1, 0, 2).astype(x.dtype)

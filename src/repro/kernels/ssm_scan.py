@@ -1,0 +1,74 @@
+"""Chunked selective-scan Pallas kernel (Mamba1 core; TPU target).
+
+The GPU reference implementation relies on warp-level parallel prefix
+scans; the TPU-native adaptation instead keeps the SSM state h (d_inner x
+d_state) resident in VMEM scratch across *sequence chunks* (the sequential
+last grid dimension), so the recurrence never round-trips HBM between
+steps. Within a chunk, steps are a fori_loop over VMEM-resident tiles —
+the same chunking idea MGRIT applies over depth, here applied over the
+sequence ("time") dimension of the SSM.
+
+  h_{t} = exp(dt_t * A) * h_{t-1} + dt_t * B_t * x_t        (B outer d)
+  y_t   = (h_t * C_t).sum(d_state) + D * x_t
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssm_kernel(dt_ref, x_ref, A_ref, B_ref, C_ref, D_ref, o_ref, h_ref, *,
+                chunk: int, n_chunks: int):
+    c = pl.program_id(1)        # chunk index (sequential)
+
+    @pl.when(c == 0)
+    def _init():
+        h_ref[...] = jnp.zeros_like(h_ref)
+
+    A = A_ref[...].astype(jnp.float32)                  # (di, ds)
+    D = D_ref[...].astype(jnp.float32)                  # (di,)
+
+    def step(t, h):
+        dt_t = dt_ref[0, t, :].astype(jnp.float32)      # (di,)
+        x_t = x_ref[0, t, :].astype(jnp.float32)        # (di,)
+        b_t = B_ref[0, t, :].astype(jnp.float32)        # (ds,)
+        c_t = C_ref[0, t, :].astype(jnp.float32)        # (ds,)
+        dA = jnp.exp(dt_t[:, None] * A)                 # (di, ds)
+        h = dA * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        y = jnp.sum(h * c_t[None, :], axis=1) + D * x_t
+        o_ref[0, t, :] = y.astype(o_ref.dtype)
+        return h
+
+    h = jax.lax.fori_loop(0, chunk, step, h_ref[...])
+    h_ref[...] = h
+
+
+def ssm_scan(dt, x, A, B, C, D, *, chunk: int = 64, interpret: bool = False):
+    """dt/x: (Bb, S, di); A: (di, ds); B/C: (Bb, S, ds); D: (di,).
+    Returns y (Bb, S, di)."""
+    Bb, S, di = x.shape
+    ds = A.shape[1]
+    chunk = min(chunk, S)
+    assert S % chunk == 0
+    n_chunks = S // chunk
+    kernel = functools.partial(_ssm_kernel, chunk=chunk, n_chunks=n_chunks)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bb, n_chunks),
+        in_specs=[
+            pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((di, ds), lambda b, c: (0, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((1, chunk, ds), lambda b, c: (b, c, 0)),
+            pl.BlockSpec((di,), lambda b, c: (0,)),
+        ],
+        out_specs=pl.BlockSpec((1, chunk, di), lambda b, c: (b, c, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bb, S, di), x.dtype),
+        scratch_shapes=[pltpu.VMEM((di, ds), jnp.float32)],
+        interpret=interpret,
+    )(dt, x, A, B, C, D)

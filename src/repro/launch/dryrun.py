@@ -1,0 +1,164 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+# ^ MUST precede any jax import: jax locks the device count on first init.
+
+import argparse      # noqa: E402
+import json          # noqa: E402
+import sys           # noqa: E402
+import time          # noqa: E402
+import traceback     # noqa: E402
+
+import jax           # noqa: E402
+
+from repro.analysis import roofline as rl                     # noqa: E402
+from repro.configs import registry                            # noqa: E402
+from repro.configs.base import SHAPES                         # noqa: E402
+from repro.launch import specs as specs_mod                   # noqa: E402
+from repro.launch import steps as steps_mod                   # noqa: E402
+from repro.launch.mesh import make_production_mesh            # noqa: E402
+from repro.optim import optimizers                            # noqa: E402
+from repro.parallel.params import batch_specs, param_specs    # noqa: E402
+
+"""Multi-pod dry-run: .lower().compile() of every (arch x shape x mesh) cell.
+
+Proves the distribution config is coherent without hardware: sharding
+mismatches, compile-time OOM and unsupported collectives all fail here.
+Writes one JSON record per cell under experiments/dryrun/.
+"""
+
+OUTDIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                      "experiments", "dryrun")
+
+ASSIGNED = ("zamba2_1p2b", "deepseek_7b", "phi4_mini_3p8b", "qwen3_1p7b",
+            "granite_34b", "qwen2_vl_7b", "grok1_314b", "qwen3_moe_235b",
+            "seamless_m4t_v2", "falcon_mamba_7b")
+
+
+def run_cell(arch: str, shape: str, multi_pod: bool, verbose: bool = True,
+             mutate=None):
+    mesh_name = "pod2x16x16" if multi_pod else "pod16x16"
+    skip = registry.shape_supported(arch, shape)
+    if skip:
+        return {"arch": arch, "shape": shape, "mesh": mesh_name,
+                "status": "skip", "reason": skip}
+    rcfg = registry.get_config(arch, shape)
+    if mutate is not None:
+        rcfg = mutate(rcfg)
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    chips = mesh.devices.size
+    t0 = time.time()
+
+    params_sds = specs_mod.params_specs(rcfg)
+    kind = rcfg.shape.kind
+    if kind == "train":
+        batch_sds = specs_mod.input_specs(rcfg)
+        opt_sds = jax.eval_shape(
+            lambda p: optimizers.init_opt_state(rcfg.optimizer, p),
+            params_sds)
+        ps, os_, bs = steps_mod.shardings_for_train(
+            rcfg, mesh, params_sds, opt_sds, batch_sds)
+        fn = steps_mod.make_train_fn(rcfg, mesh)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=(ps, os_, bs)).lower(
+                params_sds, opt_sds, batch_sds)
+            compiled = lowered.compile()
+        tokens = rcfg.shape.global_batch * rcfg.shape.seq_len
+    elif kind == "prefill":
+        batch_sds = specs_mod.input_specs(rcfg)
+        ps = param_specs(params_sds, rcfg, mesh)
+        bs = batch_specs(batch_sds, rcfg, mesh)
+        fn = steps_mod.make_prefill_fn(rcfg, mesh)
+        with mesh:
+            lowered = jax.jit(fn, in_shardings=(ps, bs)).lower(
+                params_sds, batch_sds)
+            compiled = lowered.compile()
+        tokens = rcfg.shape.global_batch * rcfg.shape.seq_len
+    else:  # decode
+        dec = specs_mod.input_specs(rcfg)
+        cache_sds, tok_sds = dec[0], dec[1]
+        ps, cs, ts = steps_mod.shardings_for_decode(
+            rcfg, mesh, params_sds, cache_sds)
+        fn = steps_mod.make_serve_fn(rcfg, mesh)
+        with mesh:
+            if len(dec) == 3:
+                xa_sh = batch_specs({"src_embeds": dec[2]}, rcfg, mesh)[
+                    "src_embeds"]
+                lowered = jax.jit(fn, in_shardings=(ps, cs, ts, xa_sh)) \
+                    .lower(params_sds, cache_sds, tok_sds, dec[2])
+            else:
+                lowered = jax.jit(fn, in_shardings=(ps, cs, ts)).lower(
+                    params_sds, cache_sds, tok_sds)
+            compiled = lowered.compile()
+        tokens = rcfg.shape.global_batch  # one new token per sequence
+
+    mem = compiled.memory_analysis()
+    hlo_dir = os.environ.get("REPRO_HLO_DIR", "")
+    if hlo_dir:
+        import gzip
+        os.makedirs(hlo_dir, exist_ok=True)
+        tag = f"{arch}__{shape}__{mesh_name}"
+        with gzip.open(os.path.join(hlo_dir, tag + ".hlo.gz"), "wt") as f:
+            f.write(compiled.as_text())
+    roof = rl.from_compiled(arch, shape, mesh_name, chips, compiled, rcfg,
+                            tokens)
+    rec = {
+        "arch": arch, "shape": shape, "mesh": mesh_name, "status": "ok",
+        "chips": chips,
+        "compile_s": round(time.time() - t0, 1),
+        "memory_analysis": {
+            k: float(getattr(mem, k, 0) or 0) for k in (
+                "argument_size_in_bytes", "output_size_in_bytes",
+                "temp_size_in_bytes", "alias_size_in_bytes")},
+        "roofline": json.loads(roof.to_json()),
+    }
+    if verbose:
+        print(f"[{arch} x {shape} x {mesh_name}] compiled in "
+              f"{rec['compile_s']}s")
+        print("  memory_analysis:", rec["memory_analysis"])
+        print("  flops/chip = %.3e  bytes/chip = %.3e  coll/chip = %.3e"
+              % (roof.hlo_flops, roof.hlo_bytes, roof.coll_bytes))
+        print("  terms (ms): compute=%.2f memory=%.2f collective=%.2f -> %s"
+              % (roof.t_compute * 1e3, roof.t_memory * 1e3,
+                 roof.t_collective * 1e3, roof.bottleneck))
+    return rec
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", choices=["single", "multi", "both"],
+                    default="single")
+    ap.add_argument("--outdir", default=OUTDIR)
+    args = ap.parse_args(argv)
+
+    archs = ASSIGNED if args.arch == "all" else [args.arch]
+    shapes = [s.name for s in SHAPES] if args.shape == "all" else [args.shape]
+    meshes = {"single": [False], "multi": [True],
+              "both": [False, True]}[args.mesh]
+
+    os.makedirs(args.outdir, exist_ok=True)
+    failures = []
+    for arch in archs:
+        for shape in shapes:
+            for mp in meshes:
+                tag = f"{arch}__{shape}__{'multi' if mp else 'single'}"
+                try:
+                    rec = run_cell(arch, shape, mp)
+                except Exception as e:  # a failure here is a bug in our system
+                    traceback.print_exc()
+                    rec = {"arch": arch, "shape": shape,
+                           "mesh": "multi" if mp else "single",
+                           "status": "FAIL", "error": repr(e)}
+                    failures.append(tag)
+                with open(os.path.join(args.outdir, tag + ".json"), "w") as f:
+                    json.dump(rec, f, indent=1)
+    if failures:
+        print("FAILURES:", failures)
+        sys.exit(1)
+    print("dry-run: all requested cells compiled")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,36 @@
+"""Production meshes.
+
+Single pod: (16, 16) = ("data", "model") — 256 chips (TPU v5e pod).
+Multi-pod: (2, 16, 16) = ("pod", "data", "model") — 512 chips.
+
+The 'model' axis carries the paper's layer-parallel (MGRIT chunk) dimension
+during training and Megatron TP during serving; 'data'(+'pod') carry batch,
+FSDP storage sharding and expert parallelism (DESIGN.md §4).
+
+Functions, not module constants: importing this module must never touch
+jax device state.
+"""
+from __future__ import annotations
+
+import numpy as np
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    n = int(np.prod(shape))
+    devices = jax.devices()
+    if len(devices) < n:
+        raise RuntimeError(
+            f"need {n} devices for mesh {shape}; have {len(devices)}. "
+            "The dry-run sets XLA_FLAGS=--xla_force_host_platform_device_count=512 "
+            "before importing jax (launch/dryrun.py).")
+    return jax.make_mesh(shape, axes, devices=devices[:n])
+
+
+def make_host_mesh():
+    """1x1 mesh on the single real device (tests, examples)."""
+    return jax.make_mesh((1, 1), ("data", "model"),
+                         devices=jax.devices()[:1])

@@ -1,0 +1,87 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("XLA_FLAGS", "")
+                           + " --xla_force_host_platform_device_count=512")
+
+import argparse      # noqa: E402
+import dataclasses   # noqa: E402
+import json          # noqa: E402
+
+from repro.launch import dryrun  # noqa: E402
+
+"""§Perf hillclimb driver: lower+compile one (arch, shape) cell under a
+named optimization variant and record the roofline delta vs the
+paper-faithful baseline. Variants compose via --variant a+b+c.
+
+  baseline    the paper-faithful configuration (as in configs/<arch>.py)
+  flashattn   flash-style chunked attention from 2k seq (kills the S^2
+              logits materialization; models the Pallas kernel's tiling)
+  bf16params  bf16 stored params + fp32 master in the optimizer (halves
+              weight reads and FSDP all-gather bytes)
+  moegroup    GShard dispatch groups of 512 tokens (shrinks dispatch/
+              combine tensors ~8x for 4k sequences)
+  shardl1     shard the first coarse MGRIT level's relaxation too
+  cf<k>       override the MGRIT coarsening factor
+  mb<k>       gradient-accumulation microbatches (memory bound)
+"""
+
+OUTDIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                      "experiments", "perf")
+
+
+def apply_variant(rcfg, name: str):
+    for part in name.split("+"):
+        if part == "baseline":
+            continue
+        elif part == "flashattn":
+            rcfg = dataclasses.replace(
+                rcfg, model=dataclasses.replace(rcfg.model, attn_chunk=2048))
+        elif part == "bf16params":
+            rcfg = dataclasses.replace(
+                rcfg, model=dataclasses.replace(rcfg.model,
+                                                param_dtype="bfloat16"))
+        elif part == "moegroup":
+            assert rcfg.model.moe is not None
+            rcfg = dataclasses.replace(
+                rcfg, model=dataclasses.replace(
+                    rcfg.model, moe=dataclasses.replace(
+                        rcfg.model.moe, group_size=512)))
+        elif part == "shardl1":
+            rcfg = dataclasses.replace(
+                rcfg, mgrit=dataclasses.replace(rcfg.mgrit, shard_levels=2))
+        elif part.startswith("cf"):
+            rcfg = dataclasses.replace(
+                rcfg, mgrit=dataclasses.replace(rcfg.mgrit,
+                                                cf=int(part[2:])))
+        elif part.startswith("mb"):
+            rcfg = dataclasses.replace(rcfg, microbatches=int(part[2:]))
+        elif part.startswith("iters"):
+            f, b = part[5:].split("x")
+            rcfg = dataclasses.replace(
+                rcfg, mgrit=dataclasses.replace(
+                    rcfg.mgrit, fwd_iters=int(f), bwd_iters=int(b)))
+        else:
+            raise ValueError(f"unknown variant {part}")
+    return rcfg
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", default="train_4k")
+    ap.add_argument("--variant", required=True)
+    ap.add_argument("--multi", action="store_true")
+    ap.add_argument("--outdir", default=OUTDIR)
+    args = ap.parse_args(argv)
+
+    rec = dryrun.run_cell(args.arch, args.shape, args.multi,
+                          mutate=lambda r: apply_variant(r, args.variant))
+    rec["variant"] = args.variant
+    os.makedirs(args.outdir, exist_ok=True)
+    tag = f"{args.arch}__{args.shape}__{args.variant.replace('+', '_')}"
+    with open(os.path.join(args.outdir, tag + ".json"), "w") as f:
+        json.dump(rec, f, indent=1)
+    print("wrote", tag, rec["status"])
+
+
+if __name__ == "__main__":
+    main()

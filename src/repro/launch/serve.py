@@ -1,0 +1,61 @@
+"""Serving launcher: batched generation with the ServeEngine.
+
+  PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1p7b \
+      [--reduced] [--batch 4] [--new-tokens 8] [--max-len 64]
+
+On the production meshes, serving shards with Megatron TP + flash-decoding
+KV-seq sharding (configs/registry.decode_sharding); on this CPU container
+use --reduced.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+
+import numpy as np
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--ckpt", default="", help="restore params from here")
+    args = ap.parse_args(argv)
+
+    import jax
+    from repro.configs import registry
+    from repro.configs.reduce import reduce_config
+    from repro.models import transformer
+    from repro.serve.engine import Request, ServeEngine
+
+    rcfg = registry.get_config(args.arch, "decode_32k")
+    if args.reduced:
+        rcfg = reduce_config(rcfg)
+    params = transformer.init_model(jax.random.PRNGKey(args.seed), rcfg)
+    if args.ckpt:
+        from repro.train import checkpoint as ckpt_mod
+        restored = ckpt_mod.restore(args.ckpt, params, {"step": 0})
+        if restored:
+            params = restored[0]
+            print(f"restored params from step {restored[2]}")
+
+    engine = ServeEngine(rcfg, params, max_len=args.max_len)
+    rng = np.random.default_rng(args.seed)
+    reqs = [Request(prompt=rng.integers(
+                0, rcfg.model.vocab_size,
+                size=int(rng.integers(4, 12))).astype(np.int32),
+                    max_new_tokens=args.new_tokens)
+            for _ in range(args.batch)]
+    for i, r in enumerate(engine.generate(reqs)):
+        print(f"request {i}: prompt[{len(r.prompt)}] -> "
+              f"{list(map(int, r.output))}")
+    print(f"throughput: {engine.throughput_probe(args.batch):.1f} tok/s")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

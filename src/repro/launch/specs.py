@@ -1,0 +1,81 @@
+"""ShapeDtypeStruct stand-ins for every model input (no device allocation).
+
+``input_specs(rcfg)`` returns the abstract inputs for the shape kind:
+  train   -> batch dict for train_step
+  prefill -> batch dict for prefill_step
+  decode  -> (cache, tokens) for serve_step  (one new token against a
+             KV/SSM cache of seq_len)
+
+Modality frontends are STUBS per the assignment: vlm gets precomputed patch
+embeddings, audio enc-dec gets precomputed frame embeddings.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import RunConfig
+from repro.configs.qwen2_vl_7b import MM_TOKENS
+from repro.models import transformer
+
+I32 = jnp.int32
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def train_batch_specs(rcfg: RunConfig) -> Dict[str, Any]:
+    cfg, shp = rcfg.model, rcfg.shape
+    B, S = shp.global_batch, shp.seq_len
+    dt = jnp.dtype(cfg.dtype)
+    batch = {}
+    if cfg.family == "encdec":
+        batch["src_embeds"] = _sds((B, S, cfg.d_model), dt)
+        batch["tokens"] = _sds((B, S), I32)
+        batch["labels"] = _sds((B, S), I32)
+    elif cfg.frontend == "vision":
+        batch["mm_embeds"] = _sds((B, MM_TOKENS, cfg.d_model), dt)
+        batch["tokens"] = _sds((B, S - MM_TOKENS), I32)
+        batch["labels"] = _sds((B, S - MM_TOKENS), I32)
+    else:
+        batch["tokens"] = _sds((B, S), I32)
+        batch["labels"] = _sds((B, S), I32)
+    return batch
+
+
+def prefill_batch_specs(rcfg: RunConfig) -> Dict[str, Any]:
+    b = train_batch_specs(rcfg)
+    b.pop("labels", None)
+    return b
+
+
+def decode_specs(rcfg: RunConfig) -> Tuple[Any, Any]:
+    cfg, shp = rcfg.model, rcfg.shape
+    B, S = shp.global_batch, shp.seq_len
+    cache = jax.eval_shape(
+        lambda: transformer.init_cache(rcfg, B, S))
+    tokens = _sds((B, 1), I32)
+    if cfg.family == "encdec":
+        # cross-attention context from the encoder (bounded length)
+        xa = _sds((B, min(S, 4096), cfg.d_model), jnp.dtype(cfg.dtype))
+        return (cache, tokens, xa)
+    return (cache, tokens)
+
+
+def params_specs(rcfg: RunConfig):
+    """Abstract model params + optimizer state (eval_shape: no allocation)."""
+    key = jax.random.PRNGKey(0)
+    params = jax.eval_shape(lambda: transformer.init_model(key, rcfg))
+    return params
+
+
+def input_specs(rcfg: RunConfig):
+    kind = rcfg.shape.kind
+    if kind == "train":
+        return train_batch_specs(rcfg)
+    if kind == "prefill":
+        return prefill_batch_specs(rcfg)
+    return decode_specs(rcfg)

@@ -1,0 +1,117 @@
+"""Jitted step builders: train_step / prefill_step / serve_step with
+GSPMD shardings derived from the config's logical-axis rules."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig
+from repro.models import transformer
+from repro.optim import optimizers
+from repro.parallel import params as pshard
+from repro.parallel.sharding import axis_rules
+
+
+def make_train_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
+    """Returns train_step(params, opt_state, batch) -> (params, opt_state,
+    metrics). Gradient accumulation over microbatches bounds the live MGRIT
+    state memory (EXPERIMENTS.md §Dry-run)."""
+    mode = "lp" if rcfg.mgrit.enabled else "serial"
+    nmb = rcfg.microbatches
+
+    def loss(p, b):
+        l, diag = transformer.loss_fn(p, b, rcfg, mode=mode)
+        return l, diag
+
+    def train_step(params, opt_state, batch):
+        ctx = axis_rules(mesh, rcfg.sharding) if mesh is not None else \
+            _nullctx()
+        with ctx:
+            if nmb > 1:
+                mb = jax.tree.map(
+                    lambda a: a.reshape((nmb, a.shape[0] // nmb)
+                                        + a.shape[1:]), batch)
+
+                def acc(carry, b_i):
+                    g_acc, l_acc = carry
+                    (l, diag), g = jax.value_and_grad(loss, has_aux=True)(
+                        params, b_i)
+                    g_acc = jax.tree.map(
+                        lambda a, g_: a + g_.astype(jnp.float32), g_acc, g)
+                    return (g_acc, l_acc + l), diag
+
+                g0 = jax.tree.map(
+                    lambda p: jnp.zeros(p.shape, jnp.float32), params)
+                (grads, lsum), diags = jax.lax.scan(acc, (g0, 0.0), mb)
+                grads = jax.tree.map(lambda g: g / nmb, grads)
+                lval = lsum / nmb
+                diag = jax.tree.map(lambda a: a[-1], diags)
+            else:
+                (lval, diag), grads = jax.value_and_grad(
+                    loss, has_aux=True)(params, batch)
+            params2, opt_state2, om = optimizers.apply_updates(
+                rcfg.optimizer, params, grads, opt_state)
+        metrics = {"loss": lval, "fwd_norms": diag["fwd_norms"], **om}
+        return params2, opt_state2, metrics
+
+    return train_step
+
+
+def make_prefill_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
+    def prefill_step(params, batch):
+        ctx = axis_rules(mesh, rcfg.sharding) if mesh is not None else \
+            _nullctx()
+        with ctx:
+            logits = transformer.prefill(params, batch, rcfg)
+            nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return nxt, logits
+
+    return prefill_step
+
+
+def make_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
+    """One-token decode against a seq_len KV/SSM cache (greedy)."""
+    encdec = rcfg.model.family == "encdec"
+
+    def serve_step(params, cache, tokens, xa=None):
+        ctx = axis_rules(mesh, rcfg.sharding) if mesh is not None else \
+            _nullctx()
+        with ctx:
+            logits, cache2 = transformer.decode_step(params, cache, tokens,
+                                                     rcfg, xa=xa)
+            nxt = jnp.argmax(logits[:, -1].astype(jnp.float32), axis=-1)
+        return nxt[:, None], cache2
+
+    if not encdec:
+        return lambda params, cache, tokens: serve_step(params, cache, tokens)
+    return serve_step
+
+
+class _nullctx:
+    def __enter__(self):
+        return None
+
+    def __exit__(self, *a):
+        return False
+
+
+def shardings_for_train(rcfg: RunConfig, mesh: Mesh, params_sds,
+                        opt_sds, batch_sds):
+    ps = pshard.param_specs(params_sds, rcfg, mesh)
+    os_ = {"step": NamedSharding(mesh, P())}
+    for k in ("m", "v", "master"):
+        if k in opt_sds:
+            os_[k] = ps
+    bs = pshard.batch_specs(batch_sds, rcfg, mesh)
+    return ps, os_, bs
+
+
+def shardings_for_decode(rcfg: RunConfig, mesh: Mesh, params_sds, cache_sds):
+    ps = pshard.param_specs(params_sds, rcfg, mesh)
+    cs = pshard.cache_specs(cache_sds, rcfg, mesh)
+    ts = NamedSharding(mesh, P(None, None))
+    return ps, cs, ts

@@ -1,0 +1,201 @@
+"""Grouped-query attention with RoPE, qk-norm, KV cache, and cross-attention.
+
+Layout conventions:
+  activations        (B, S, D)          logical ("batch","seq","embed")
+  q after projection (B, S, H, hd)      logical ("batch","seq","heads","head_dim")
+  kv cache           (B, S_max, Hkv, hd) logical ("batch","kv_seq","kv_heads","head_dim")
+
+The dense attention math lives in ``dot_attention``; when
+``use_pallas=True`` the fused Pallas flash-attention kernel
+(:mod:`repro.kernels.ops`) is used instead for the self-attention hot spot.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import apply_rope, dense_init, preln_output_scale, rms_norm, rope_freqs
+from repro.parallel.sharding import logical_constraint
+
+
+def init_attention(key, cfg: ModelConfig, cross: bool = False):
+    d, hd = cfg.d_model, cfg.resolved_head_dim
+    h, hkv = cfg.n_heads, cfg.n_kv_heads
+    pdt = cfg.param_dtype
+    ks = jax.random.split(key, 6)
+    oscale = 0.02 * preln_output_scale(cfg.n_layers)
+    p = {
+        "wq": dense_init(ks[0], (d, h, hd), pdt),
+        "wk": dense_init(ks[1], (d, hkv, hd), pdt),
+        "wv": dense_init(ks[2], (d, hkv, hd), pdt, scale=oscale / 0.02 * 0.02),
+        "wo": dense_init(ks[3], (h, hd, d), pdt, scale=oscale),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = jnp.ones((hd,), jnp.dtype(pdt))
+        p["k_norm"] = jnp.ones((hd,), jnp.dtype(pdt))
+    return p
+
+
+def _project_qkv(params, x, xa, cfg: ModelConfig):
+    dt = jnp.dtype(cfg.dtype)
+    q = jnp.einsum("bsd,dhk->bshk", x, params["wq"].astype(dt))
+    src = x if xa is None else xa
+    k = jnp.einsum("bsd,dhk->bshk", src, params["wk"].astype(dt))
+    v = jnp.einsum("bsd,dhk->bshk", src, params["wv"].astype(dt))
+    if cfg.qk_norm:
+        q = rms_norm(q, params["q_norm"])
+        k = rms_norm(k, params["k_norm"])
+    return q, k, v
+
+
+def dot_attention(q, k, v, *, causal: bool, q_offset=0,
+                  scale: Optional[float] = None):
+    """Reference dense GQA attention.
+
+    q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd). ``q_offset`` is the absolute
+    position of q[.., 0] for causal masking against a longer k (KV cache).
+    """
+    B, Sq, H, hd = q.shape
+    Hkv = k.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg.astype(jnp.float32),
+                        k.astype(jnp.float32)) * scale
+    if causal:
+        Sk = k.shape[1]
+        qpos = jnp.arange(Sq)[:, None] + q_offset
+        kpos = jnp.arange(Sk)[None, :]
+        mask = qpos >= kpos
+        logits = jnp.where(mask[None, None, None], logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs.astype(v.dtype), v)
+    return out.reshape(B, Sq, H, hd)
+
+
+def chunked_attention(q, k, v, *, causal: bool, q_block: int = 512,
+                      k_block: int = 512):
+    """Flash-style online-softmax attention in pure jnp (double blocked
+    scan). Memory is O(Sq*Ck + Sk) per head instead of O(Sq*Sk) — this is
+    the lowering-safe path for 32k prefill and the oracle for the Pallas
+    kernel."""
+    B, Sq, H, hd = q.shape
+    Sk, Hkv = k.shape[1], k.shape[2]
+    g = H // Hkv
+    scale = hd ** -0.5
+    q_block = min(q_block, Sq)
+    k_block = min(k_block, Sk)
+    nq, nk = Sq // q_block, Sk // k_block
+    # fold gqa groups: (B, Hkv, g, Sq, hd)
+    qh = q.reshape(B, Sq, Hkv, g, hd).transpose(0, 2, 3, 1, 4) * scale
+    kh = k.transpose(0, 2, 1, 3)                     # (B, Hkv, Sk, hd)
+    vh = v.transpose(0, 2, 1, 3)
+
+    qs = qh.reshape(B, Hkv, g, nq, q_block, hd).transpose(3, 0, 1, 2, 4, 5)
+    ks = kh.reshape(B, Hkv, nk, k_block, hd).transpose(2, 0, 1, 3, 4)
+    vs = vh.reshape(B, Hkv, nk, k_block, hd).transpose(2, 0, 1, 3, 4)
+
+    def q_step(_, qi_and_idx):
+        qi, iq = qi_and_idx                          # (B,Hkv,g,qb,hd)
+        qpos = iq * q_block + jnp.arange(q_block)
+
+        def k_step(carry, kv_idx):
+            m, l, acc = carry
+            kj, vj, jk = kv_idx
+            s = jnp.einsum("bhgqd,bhkd->bhgqk", qi.astype(jnp.float32),
+                           kj.astype(jnp.float32))
+            if causal:
+                kpos = jk * k_block + jnp.arange(k_block)
+                mask = qpos[:, None] >= kpos[None, :]
+                s = jnp.where(mask[None, None, None], s, -1e30)
+            m_new = jnp.maximum(m, jnp.max(s, axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l = l * corr + jnp.sum(p, axis=-1)
+            acc = acc * corr[..., None] + jnp.einsum(
+                "bhgqk,bhkd->bhgqd", p, vj.astype(jnp.float32))
+            return (m_new, l, acc), None
+
+        m0 = jnp.full((B, Hkv, g, q_block), -jnp.inf, jnp.float32)
+        l0 = jnp.zeros((B, Hkv, g, q_block), jnp.float32)
+        a0 = jnp.zeros((B, Hkv, g, q_block, hd), jnp.float32)
+        (m, l, acc), _ = jax.lax.scan(
+            k_step, (m0, l0, a0), (ks, vs, jnp.arange(nk)))
+        out = acc / jnp.maximum(l[..., None], 1e-30)
+        return None, out.astype(v.dtype)
+
+    _, outs = jax.lax.scan(q_step, None, (qs, jnp.arange(nq)))
+    # outs: (nq, B, Hkv, g, qb, hd) -> (B, Sq, H, hd)
+    out = outs.transpose(1, 2, 3, 0, 4, 5).reshape(B, Hkv, g, Sq, hd)
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hd)
+
+
+ATTN_CHUNK_THRESHOLD = 8192
+
+
+def attention_apply(params, x, cfg: ModelConfig, *, causal: bool,
+                    rope=None, positions=None, xa=None, cache=None,
+                    use_pallas: bool = False):
+    """Self/cross attention.
+
+    x: (B, S, D). rope: precomputed (cos, sin) — shared across layers and a
+    differentiable "extra" input for the layer-parallel custom VJP. xa:
+    encoder output for cross-attention (no rope, no cache rotation). cache:
+    dict(k, v, index) for autoregressive decode — the new k/v are scattered
+    at ``index`` and attention runs over the full cache.
+    Returns (out, new_cache).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = x.astype(dt)
+    q, k, v = _project_qkv(params, x, xa, cfg)
+    q = logical_constraint(q, ("batch", "seq", "heads", "head_dim"))
+    k = logical_constraint(k, ("batch", "seq", "kv_heads", "head_dim"))
+
+    if xa is None and rope is None and positions is not None:
+        rope = rope_freqs(cfg.resolved_head_dim, cfg.rope_theta, positions)
+    if xa is None and rope is not None:
+        cos, sin = rope
+        q = apply_rope(q, cos, sin)
+        k = apply_rope(k, cos, sin)
+
+    new_cache = None
+    q_offset = 0
+    if cache is not None:
+        idx = cache["index"]
+        ck = jax.lax.dynamic_update_slice_in_dim(cache["k"], k.astype(cache["k"].dtype), idx, axis=1)
+        cv = jax.lax.dynamic_update_slice_in_dim(cache["v"], v.astype(cache["v"].dtype), idx, axis=1)
+        ck = logical_constraint(ck, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        cv = logical_constraint(cv, ("batch", "kv_seq", "kv_heads", "head_dim"))
+        new_cache = {"k": ck, "v": cv, "index": idx + x.shape[1]}
+        k, v = ck, cv
+        q_offset = idx
+
+    with jax.named_scope("attn_core"):
+        if use_pallas and cache is None and xa is None and q.shape[1] > 1:
+            from repro.kernels import ops as kops
+            out = kops.flash_attention(q, k, v, causal=causal)
+        elif (cache is None and q.shape[1] >= (cfg.attn_chunk
+                                               or ATTN_CHUNK_THRESHOLD)
+              and q.shape[1] == k.shape[1] and q.shape[1] % 512 == 0):
+            out = chunked_attention(q, k, v, causal=causal and xa is None)
+        else:
+            out = dot_attention(q, k, v, causal=causal and xa is None,
+                                q_offset=q_offset)
+    out = logical_constraint(out, ("batch", "seq", "heads", "head_dim"))
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    y = logical_constraint(y, ("batch", "seq", "embed"))
+    return y, new_cache
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int):
+    """Stacked-over-layers KV cache: (L, B, S, Hkv, hd)."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    return {
+        "k": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+        "v": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
+        "index": jnp.zeros((), jnp.int32),
+    }

@@ -1,0 +1,109 @@
+"""Pre-LN transformer blocks in neural-ODE form (paper Eq. 1-2).
+
+Each block defines F such that one layer is the forward-Euler step
+``Z_{n+1} = Z_n + h * F(t_n, Z_n)``:
+
+  encoder/decoder (Eq. 1):  F = phi1(X) + phi2(X + phi1(X)),
+                            phi1 = SA o LN, phi2 = MLP o LN
+  enc-dec decoder (Eq. 2):  Ybar = phi1(Y) + phi3(Y + phi1(Y), X_enc)
+                            F = Ybar + phi2(Y + Ybar)
+  moe:                      phi2 = MoE o LN
+  mamba1/mamba2:            F = Mixer o LN  (standard residual SSM block)
+
+Block params are homogeneous within a kind, so they stack over the layer
+(time) axis for the MGRIT solver.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import ssm as ssm_mod
+from repro.models.attention import attention_apply, init_attention
+from repro.models.layers import init_norm, norm_apply
+from repro.models.mlp import init_mlp, mlp_apply
+from repro.models.moe import init_moe, moe_apply
+
+
+def block_kind(cfg: ModelConfig) -> str:
+    if cfg.family == "ssm":
+        return "mamba1" if cfg.ssm.version == 1 else "mamba2"
+    if cfg.family == "hybrid":
+        return "mamba2"
+    if cfg.moe is not None:
+        return "attn_moe"
+    return "attn_mlp"
+
+
+def init_block(key, cfg: ModelConfig, kind: Optional[str] = None):
+    kind = kind or block_kind(cfg)
+    ks = jax.random.split(key, 8)
+    if kind == "mamba1":
+        return {"norm": init_norm(cfg), "mixer": ssm_mod.init_mamba1(ks[0], cfg)}
+    if kind == "mamba2":
+        return {"norm": init_norm(cfg), "mixer": ssm_mod.init_mamba2(ks[0], cfg)}
+    p = {
+        "ln1": init_norm(cfg),
+        "attn": init_attention(ks[0], cfg),
+        "ln2": init_norm(cfg),
+    }
+    if kind == "attn_moe":
+        p["moe"] = init_moe(ks[1], cfg)
+    elif kind == "encdec_dec":
+        p["mlp"] = init_mlp(ks[1], cfg)
+        p["ln3"] = init_norm(cfg)
+        p["xattn"] = init_attention(ks[2], cfg, cross=True)
+    else:
+        p["mlp"] = init_mlp(ks[1], cfg)
+    return p
+
+
+def block_F(params, z, cfg: ModelConfig, *, kind: str, causal: bool,
+            rope=None, positions=None, xa=None, cache=None,
+            use_pallas: bool = False):
+    """Evaluate F(t, z). Returns (F_value, new_cache)."""
+    if kind in ("mamba1", "mamba2"):
+        zn = norm_apply(params["norm"], z, cfg)
+        fn = ssm_mod.mamba1_apply if kind == "mamba1" else ssm_mod.mamba2_apply
+        f, new_cache = fn(params["mixer"], zn, cfg, cache=cache)
+        return f, new_cache
+
+    # phi1 = SA o LN
+    a, new_cache = attention_apply(
+        params["attn"], norm_apply(params["ln1"], z, cfg), cfg,
+        causal=causal, rope=rope, positions=positions, cache=cache,
+        use_pallas=use_pallas)
+    if kind == "encdec_dec":
+        # Ybar = phi1(Y) + phi3(Y + phi1(Y), X)
+        ca, _ = attention_apply(
+            params["xattn"], norm_apply(params["ln3"], z + a, cfg), cfg,
+            causal=False, xa=xa)
+        ybar = a + ca
+        mlp_in = norm_apply(params["ln2"], z + ybar, cfg)
+        f = ybar + mlp_apply(params["mlp"], mlp_in, cfg)
+        return f, new_cache
+
+    # F = phi1 + phi2(z + phi1)
+    h_in = norm_apply(params["ln2"], z + a, cfg)
+    if kind == "attn_moe":
+        f = a + moe_apply(params["moe"], h_in, cfg)
+    else:
+        f = a + mlp_apply(params["mlp"], h_in, cfg)
+    return f, new_cache
+
+
+def block_step(params, z, cfg: ModelConfig, *, kind: str, causal: bool,
+               h: float = 1.0, gate=None, rope=None, positions=None, xa=None,
+               cache=None, use_pallas: bool = False):
+    """One Euler step Phi(z) = z + h*gate*F(z). ``gate`` (0/1) marks padded
+    identity layers used for layer-parallel divisibility padding."""
+    f, new_cache = block_F(params, z, cfg, kind=kind, causal=causal,
+                           rope=rope, positions=positions, xa=xa, cache=cache,
+                           use_pallas=use_pallas)
+    scale = jnp.asarray(h, z.dtype)
+    if gate is not None:
+        scale = scale * gate.astype(z.dtype)
+    return z + scale * f, new_cache

@@ -1,0 +1,113 @@
+"""Common neural layers: norms, rotary embeddings, token embeddings.
+
+Everything is purely functional: ``init_*`` builds a params pytree (dict of
+jnp arrays), ``*_apply``-style functions consume it. No framework dependency;
+pytrees compose with vmap for stacked-layer (neural ODE time grid) weights.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+
+# ---------------------------------------------------------------------------
+# Norms
+# ---------------------------------------------------------------------------
+
+
+def init_norm(cfg: ModelConfig, dim: Optional[int] = None):
+    d = dim or cfg.d_model
+    p = {"scale": jnp.ones((d,), dtype=jnp.dtype(cfg.param_dtype))}
+    if cfg.norm == "layernorm":
+        p["bias"] = jnp.zeros((d,), dtype=jnp.dtype(cfg.param_dtype))
+    return p
+
+
+def norm_apply(params, x, cfg: ModelConfig, eps: float = 1e-6):
+    dtype = x.dtype
+    x32 = x.astype(jnp.float32)
+    if cfg.norm == "layernorm":
+        mu = jnp.mean(x32, axis=-1, keepdims=True)
+        var = jnp.var(x32, axis=-1, keepdims=True)
+        y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+        y = y * params["scale"].astype(jnp.float32) + params["bias"].astype(jnp.float32)
+    else:  # rmsnorm
+        ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+        y = x32 * jax.lax.rsqrt(ms + eps) * params["scale"].astype(jnp.float32)
+    return y.astype(dtype)
+
+
+def rms_norm(x, scale, eps: float = 1e-6):
+    """Bare RMSNorm used for qk-norm (per-head)."""
+    x32 = x.astype(jnp.float32)
+    ms = jnp.mean(jnp.square(x32), axis=-1, keepdims=True)
+    return (x32 * jax.lax.rsqrt(ms + eps) * scale.astype(jnp.float32)).astype(x.dtype)
+
+
+# ---------------------------------------------------------------------------
+# Rotary position embeddings
+# ---------------------------------------------------------------------------
+
+
+def rope_freqs(head_dim: int, theta: float, positions: jnp.ndarray):
+    """positions: int32 (..., S). Returns cos/sin of shape (..., S, head_dim//2)."""
+    half = head_dim // 2
+    inv = 1.0 / (theta ** (jnp.arange(0, half, dtype=jnp.float32) / half))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, cos, sin):
+    """x: (B, S, H, D). cos/sin: (S, D/2) or (B, S, D/2), broadcast over H."""
+    half = x.shape[-1] // 2
+    x1, x2 = x[..., :half], x[..., half:]
+    if cos.ndim == 2:       # (S, D/2)
+        c, s = cos[None, :, None, :], sin[None, :, None, :]
+    else:                   # (B, S, D/2)
+        c, s = cos[:, :, None, :], sin[:, :, None, :]
+    c, s = c.astype(x.dtype), s.astype(x.dtype)
+    return jnp.concatenate([x1 * c - x2 * s, x2 * c + x1 * s], axis=-1)
+
+
+# ---------------------------------------------------------------------------
+# Embeddings
+# ---------------------------------------------------------------------------
+
+
+def init_embedding(key, cfg: ModelConfig):
+    pdt = jnp.dtype(cfg.param_dtype)
+    k1, k2 = jax.random.split(key)
+    p = {"tok": jax.random.normal(k1, (cfg.vocab_size, cfg.d_model), pdt) * 0.02}
+    if not cfg.tie_embeddings:
+        p["out"] = jax.random.normal(k2, (cfg.vocab_size, cfg.d_model), pdt) * 0.02
+    return p
+
+
+def embed_tokens(params, tokens, cfg: ModelConfig):
+    emb = params["tok"].astype(jnp.dtype(cfg.dtype))
+    return jnp.take(emb, tokens, axis=0)
+
+
+def unembed(params, x, cfg: ModelConfig):
+    w = params.get("out", params["tok"]).astype(jnp.dtype(cfg.dtype))
+    return jnp.einsum("...d,vd->...v", x, w)
+
+
+# ---------------------------------------------------------------------------
+# Linear init helpers (pre-LN scaled init, Wang et al. 2024 / paper App. C)
+# ---------------------------------------------------------------------------
+
+
+def dense_init(key, shape, dtype, scale: float = 0.02):
+    return jax.random.normal(key, shape, jnp.dtype(dtype)) * scale
+
+
+def preln_output_scale(n_layers: int) -> float:
+    """Paper App. C: scale MLP/value/output projections by sqrt(log 2L)
+    (DeepNet-style stabilization for very deep pre-LN nets). Used as a
+    *divisor* on init std to keep the residual stream bounded."""
+    import math
+    return 1.0 / max(1.0, math.sqrt(math.log(2 * max(n_layers, 1))))

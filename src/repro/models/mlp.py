@@ -1,0 +1,37 @@
+"""Feed-forward sublayers: SwiGLU / GELU MLP."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, preln_output_scale
+from repro.parallel.sharding import logical_constraint
+
+
+def init_mlp(key, cfg: ModelConfig, d_ff: int = 0):
+    d, ff = cfg.d_model, d_ff or cfg.d_ff
+    ks = jax.random.split(key, 3)
+    oscale = 0.02 * preln_output_scale(cfg.n_layers)
+    p = {
+        "w_in": dense_init(ks[0], (d, ff), cfg.param_dtype),
+        "w_out": dense_init(ks[1], (ff, d), cfg.param_dtype, scale=oscale),
+    }
+    if cfg.act == "silu":
+        p["w_gate"] = dense_init(ks[2], (d, ff), cfg.param_dtype)
+    return p
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    with jax.named_scope("mlp_core"):
+        dt = jnp.dtype(cfg.dtype)
+        x = x.astype(dt)
+        h = jnp.einsum("bsd,df->bsf", x, params["w_in"].astype(dt))
+        if cfg.act == "silu":
+            g = jnp.einsum("bsd,df->bsf", x, params["w_gate"].astype(dt))
+            h = jax.nn.silu(g) * h
+        else:
+            h = jax.nn.gelu(h)
+        h = logical_constraint(h, ("batch", "seq", "mlp"))
+        y = jnp.einsum("bsf,fd->bsd", h, params["w_out"].astype(dt))
+        return logical_constraint(y, ("batch", "seq", "embed"))

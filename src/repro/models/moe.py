@@ -1,0 +1,114 @@
+"""Top-k Mixture-of-Experts FFN (GShard-style capacity dispatch).
+
+The dispatch/combine are expressed as dense einsums over an ``experts``
+logical axis so GSPMD inserts the expert-parallel all_to_all when the axis is
+sharded (qwen3-moe: 128 experts over the 16-way data axis). FLOPs scale with
+capacity (≈ top_k/num_experts of dense-all-experts), matching the paper's
+6·N_active·D accounting.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init, preln_output_scale
+from repro.parallel.sharding import logical_constraint
+
+CAPACITY_FACTOR = 1.25
+
+
+def init_moe(key, cfg: ModelConfig):
+    assert cfg.moe is not None
+    d = cfg.d_model
+    e = cfg.moe.num_experts
+    ff = cfg.moe.d_ff or cfg.d_ff
+    ks = jax.random.split(key, 4)
+    oscale = 0.02 * preln_output_scale(cfg.n_layers)
+    return {
+        "router": dense_init(ks[0], (d, e), cfg.param_dtype),
+        "w_in": dense_init(ks[1], (e, d, ff), cfg.param_dtype),
+        "w_gate": dense_init(ks[2], (e, d, ff), cfg.param_dtype),
+        "w_out": dense_init(ks[3], (e, ff, d), cfg.param_dtype, scale=oscale),
+    }
+
+
+def capacity(seq: int, cfg: ModelConfig) -> int:
+    m = cfg.moe
+    c = int(math.ceil(seq * m.top_k / m.num_experts * CAPACITY_FACTOR))
+    return max(4, min(seq, c))
+
+
+def moe_apply(params, x, cfg: ModelConfig):
+    """x: (B, S, D) -> (B, S, D). With ``group_size`` set, the sequence is
+    split into GShard-style groups so the (B,S,E,C) dispatch/combine
+    tensors shrink by S/group_size (capacity is per-group) — a §Perf
+    optimization; routing quality is per-group instead of per-sequence."""
+    m = cfg.moe
+    g = m.group_size
+    if g and x.shape[1] > g and x.shape[1] % g == 0:
+        B0, S0, D0 = x.shape
+        xg = x.reshape(B0 * (S0 // g), g, D0)
+        y = _moe_dense(params, xg, cfg)
+        return y.reshape(B0, S0, D0)
+    return _moe_dense(params, x, cfg)
+
+
+def _moe_dense(params, x, cfg: ModelConfig):
+    with jax.named_scope("moe_core"):
+        return _moe_dense_inner(params, x, cfg)
+
+
+def _moe_dense_inner(params, x, cfg: ModelConfig):
+    m = cfg.moe
+    dt = jnp.dtype(cfg.dtype)
+    x = x.astype(dt)
+    B, S, D = x.shape
+    E, K, C = m.num_experts, m.top_k, capacity(S, cfg)
+
+    logits = jnp.einsum("bsd,de->bse", x, params["router"].astype(dt))
+    probs = jax.nn.softmax(logits.astype(jnp.float32), axis=-1)
+    gate_vals, gate_idx = jax.lax.top_k(probs, K)           # (B,S,K)
+    gate_vals = gate_vals / jnp.maximum(
+        jnp.sum(gate_vals, -1, keepdims=True), 1e-9)
+
+    # Build dispatch/combine tensors (B,S,E,C).
+    dispatch = jnp.zeros((B, S, E, C), dtype=jnp.bool_)
+    combine = jnp.zeros((B, S, E, C), dtype=jnp.float32)
+    # per-(expert) running position counters, choice-major like GShard
+    onehot_k = jax.nn.one_hot(gate_idx, E, dtype=jnp.int32)  # (B,S,K,E)
+    prio = onehot_k.transpose(0, 2, 1, 3).reshape(B, K * S, E)  # choice-major
+    pos_in_e = jnp.cumsum(prio, axis=1) - prio                  # (B,K*S,E)
+    pos_in_e = pos_in_e.reshape(B, K, S, E).transpose(0, 2, 1, 3)  # (B,S,K,E)
+    for k in range(K):
+        oh = onehot_k[:, :, k, :]                               # (B,S,E)
+        pos = jnp.sum(pos_in_e[:, :, k, :] * oh, axis=-1)       # (B,S)
+        keep = (jnp.sum(pos_in_e[:, :, k, :] * oh, -1) < C) & (
+            jnp.sum(oh, -1) > 0)
+        pos_oh = jax.nn.one_hot(jnp.where(keep, pos, C), C + 1,
+                                dtype=jnp.float32)[..., :C]     # (B,S,C)
+        d_k = oh.astype(jnp.float32)[..., None] * pos_oh[:, :, None, :]
+        dispatch = dispatch | (d_k > 0)
+        combine = combine + d_k * gate_vals[:, :, k, None, None]
+
+    xe = jnp.einsum("bsec,bsd->ebcd", dispatch.astype(dt), x)   # (E,B,C,D)
+    xe = logical_constraint(xe, ("experts", "batch", None, "embed"))
+    h = jnp.einsum("ebcd,edf->ebcf", xe, params["w_in"].astype(dt))
+    g = jnp.einsum("ebcd,edf->ebcf", xe, params["w_gate"].astype(dt))
+    h = jax.nn.silu(g) * h
+    h = logical_constraint(h, ("experts", "batch", None, "mlp"))
+    ye = jnp.einsum("ebcf,efd->ebcd", h, params["w_out"].astype(dt))
+    y = jnp.einsum("bsec,ebcd->bsd", combine.astype(dt), ye)
+    return logical_constraint(y, ("batch", "seq", "embed"))
+
+
+def load_balance_loss(logits, gate_idx, cfg: ModelConfig):
+    """Switch-style auxiliary loss (used by the serial training path)."""
+    m = cfg.moe
+    probs = jax.nn.softmax(logits.astype(jnp.float32), -1)
+    me = jnp.mean(probs, axis=(0, 1))
+    oh = jax.nn.one_hot(gate_idx[..., 0], m.num_experts)
+    ce = jnp.mean(oh, axis=(0, 1))
+    return m.num_experts * jnp.sum(me * ce) * m.aux_loss_weight

@@ -1,0 +1,216 @@
+"""Mamba1 (falcon-mamba) and Mamba2 (zamba2 backbone) state-space blocks.
+
+The reference sequence mixer is a ``lax.scan`` over time (memory-light,
+exactly the recurrence); the perf-critical chunked scan for TPU lives in
+:mod:`repro.kernels.ssm_scan`. Decode carries an O(1) cache
+(conv window + SSM state) — this is why the ssm/hybrid archs run the
+``long_500k`` shape.
+"""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models.layers import dense_init
+from repro.parallel.sharding import logical_constraint
+
+
+def _dt_rank(cfg: ModelConfig) -> int:
+    return cfg.ssm.dt_rank or int(math.ceil(cfg.d_model / 16))
+
+
+# ---------------------------------------------------------------------------
+# Mamba 1
+# ---------------------------------------------------------------------------
+
+
+def init_mamba1(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    dtr = _dt_rank(cfg)
+    ks = jax.random.split(key, 6)
+    pdt = cfg.param_dtype
+    A = jnp.tile(jnp.arange(1, s.d_state + 1, dtype=jnp.float32), (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), pdt),
+        "conv_w": dense_init(ks[1], (s.d_conv, di), pdt, scale=0.1),
+        "conv_b": jnp.zeros((di,), jnp.dtype(pdt)),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * s.d_state), pdt),
+        "dt_proj": dense_init(ks[3], (dtr, di), pdt, scale=dtr ** -0.5),
+        "dt_bias": jnp.log(jnp.expm1(
+            jnp.clip(jax.random.uniform(ks[4], (di,)) * 0.1 + 1e-3, 1e-4))).astype(jnp.dtype(pdt)),
+        "A_log": jnp.log(A).astype(jnp.dtype(pdt)),
+        "D": jnp.ones((di,), jnp.dtype(pdt)),
+        "out_proj": dense_init(ks[5], (di, d), pdt),
+    }
+
+
+def _causal_conv(x, w, b, cache=None):
+    """Depthwise causal conv. x: (B,S,di), w: (K,di). cache: (B,K-1,di)."""
+    K = w.shape[0]
+    if cache is not None:
+        xp = jnp.concatenate([cache, x], axis=1)
+        new_cache = xp[:, -(K - 1):, :] if K > 1 else cache
+    else:
+        xp = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+        new_cache = None
+    S = x.shape[1]
+    out = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    return out + b[None, None, :], new_cache
+
+
+def mamba1_apply(params, x, cfg: ModelConfig, cache: Optional[dict] = None):
+    """x: (B,S,D) -> (B,S,D). cache: {"conv": (B,K-1,di), "h": (B,di,ds)}."""
+    with jax.named_scope("ssm_core"):
+        return _mamba1_apply(params, x, cfg, cache)
+
+
+def _mamba1_apply(params, x, cfg: ModelConfig, cache: Optional[dict] = None):
+    s = cfg.ssm
+    dt_ = jnp.dtype(cfg.dtype)
+    x = x.astype(dt_)
+    B, S, D = x.shape
+    di = s.expand * D
+    dtr = _dt_rank(cfg)
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = logical_constraint(xin, ("batch", "seq", "mlp"))
+    conv_cache = cache["conv"] if cache is not None else None
+    xc, new_conv = _causal_conv(xin, params["conv_w"].astype(dt_),
+                                params["conv_b"].astype(dt_), conv_cache)
+    xc = jax.nn.silu(xc)
+
+    dbc = jnp.einsum("bse,ef->bsf", xc, params["x_proj"].astype(dt_))
+    dtr_v, Bm, Cm = jnp.split(dbc, [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dtr_v, params["dt_proj"].astype(dt_))
+        + params["dt_bias"].astype(dt_))                       # (B,S,di)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))          # (di,ds)
+
+    dt32, xc32 = dt.astype(jnp.float32), xc.astype(jnp.float32)
+    B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp                              # (B,di),(B,di),(B,ds),(B,ds)
+        dA = jnp.exp(dt_t[:, :, None] * A[None])               # (B,di,ds)
+        h = dA * h + dt_t[:, :, None] * b_t[:, None, :] * x_t[:, :, None]
+        y = jnp.einsum("bes,bs->be", h, c_t)
+        return h, y
+
+    h0 = cache["h"] if cache is not None else jnp.zeros(
+        (B, di, s.d_state), jnp.float32)
+    xs = (dt32.transpose(1, 0, 2), xc32.transpose(1, 0, 2),
+          B32.transpose(1, 0, 2), C32.transpose(1, 0, 2))
+    hN, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(dt_)                      # (B,S,di)
+    y = y + params["D"].astype(dt_)[None, None, :] * xc
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+    new_cache = {"conv": new_conv, "h": hN} if cache is not None else None
+    return out, new_cache
+
+
+def init_mamba1_cache(cfg: ModelConfig, batch: int, n_layers: int):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    return {
+        "conv": jnp.zeros((n_layers, batch, s.d_conv - 1, di), jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((n_layers, batch, di, s.d_state), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# Mamba 2 (SSD, scalar per-head decay, single B/C group)
+# ---------------------------------------------------------------------------
+
+
+def init_mamba2(key, cfg: ModelConfig):
+    s = cfg.ssm
+    d = cfg.d_model
+    di = s.expand * d
+    nh = di // s.headdim
+    ks = jax.random.split(key, 4)
+    pdt = cfg.param_dtype
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * s.d_state + nh), pdt),
+        "conv_w": dense_init(ks[1], (s.d_conv, di + 2 * s.d_state), pdt, scale=0.1),
+        "conv_b": jnp.zeros((di + 2 * s.d_state,), jnp.dtype(pdt)),
+        "dt_bias": jnp.zeros((nh,), jnp.dtype(pdt)),
+        "A_log": jnp.log(jnp.arange(1, nh + 1, dtype=jnp.float32)).astype(jnp.dtype(pdt)),
+        "D": jnp.ones((nh,), jnp.dtype(pdt)),
+        "norm_scale": jnp.ones((di,), jnp.dtype(pdt)),
+        "out_proj": dense_init(ks[2], (di, d), pdt),
+    }
+
+
+def mamba2_apply(params, x, cfg: ModelConfig, cache: Optional[dict] = None):
+    """Mamba2 SSD mixer. cache: {"conv": (B,K-1,ci), "h": (B,nh,hd,ds)}."""
+    with jax.named_scope("ssm_core"):
+        return _mamba2_apply(params, x, cfg, cache)
+
+
+def _mamba2_apply(params, x, cfg: ModelConfig, cache: Optional[dict] = None):
+    s = cfg.ssm
+    dt_ = jnp.dtype(cfg.dtype)
+    x = x.astype(dt_)
+    B, S, D = x.shape
+    di = s.expand * D
+    nh = di // s.headdim
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * s.d_state], axis=-1)
+    conv_cache = cache["conv"] if cache is not None else None
+    xbc, new_conv = _causal_conv(xbc, params["conv_w"].astype(dt_),
+                                 params["conv_b"].astype(dt_), conv_cache)
+    xbc = jax.nn.silu(xbc)
+    xin, Bm, Cm = jnp.split(xbc, [di, di + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))  # (B,S,nh)
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))              # (nh,)
+
+    xh = xin.reshape(B, S, nh, s.headdim).astype(jnp.float32)
+    B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t = inp            # (B,nh),(B,nh,hd),(B,ds),(B,ds)
+        dA = jnp.exp(dt_t * A[None])         # (B,nh)
+        h = dA[:, :, None, None] * h + (dt_t[:, :, None] * x_t)[..., None] \
+            * b_t[:, None, None, :]
+        y = jnp.einsum("bhes,bs->bhe", h, c_t)
+        return h, y
+
+    h0 = cache["h"] if cache is not None else jnp.zeros(
+        (B, nh, s.headdim, s.d_state), jnp.float32)
+    xs = (dt.transpose(1, 0, 2), xh.transpose(1, 0, 2, 3),
+          B32.transpose(1, 0, 2), C32.transpose(1, 0, 2))
+    hN, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)                                   # (B,S,nh,hd)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, di).astype(dt_)
+    # gated RMSNorm (mamba2)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * params["norm_scale"].astype(jnp.float32)).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+    new_cache = {"conv": new_conv, "h": hN} if cache is not None else None
+    return out, new_cache
+
+
+def init_mamba2_cache(cfg: ModelConfig, batch: int, n_layers: int):
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    nh = di // s.headdim
+    ci = di + 2 * s.d_state
+    return {
+        "conv": jnp.zeros((n_layers, batch, s.d_conv - 1, ci), jnp.dtype(cfg.dtype)),
+        "h": jnp.zeros((n_layers, batch, nh, s.headdim, s.d_state), jnp.float32),
+    }

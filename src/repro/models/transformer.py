@@ -1,0 +1,374 @@
+"""Full models assembled around the layer-parallel trunk.
+
+Families:
+  decoder  — decoder-only LM (deepseek, phi4, qwen3, granite, grok,
+             qwen3-moe) and the vlm backbone (qwen2-vl, frontend stubbed)
+  encoder  — encoder-only (paper's BERT/MC/ViT configs)
+  encdec   — encoder-decoder (seamless-m4t; the paper's novel Eq. 3
+             formulation, implemented as two chained MGRIT grids)
+  ssm      — attention-free mamba1 trunk (falcon-mamba)
+  hybrid   — zamba2: mamba2 backbone + shared attention block every k layers
+             (heterogeneous -> serial trunk + TP; see DESIGN.md §6)
+
+Structure of params:
+  embed / [frontend] / open (serial buffer) / mid (ParallelNet) /
+  close (serial buffer) / final_norm / [enc_*, dec_* for encdec]
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import MGRITConfig, ModelConfig, RunConfig
+from repro.core import lp, mgrit
+from repro.core.lp import LPStatic, lp_forward, make_fwd_step, pad_depth
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
+from repro.models.blocks import block_F, block_kind, block_step, init_block
+from repro.models.layers import (embed_tokens, init_embedding, init_norm,
+                                 norm_apply, rope_freqs, unembed)
+from repro.parallel.sharding import logical_constraint
+
+
+# ---------------------------------------------------------------------------
+# Depth bookkeeping
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class DepthPlan:
+    n_open: int
+    n_close: int
+    n_mid_real: int
+    n_mid_padded: int
+
+    @property
+    def n_total_real(self):
+        return self.n_open + self.n_close + self.n_mid_real
+
+
+def depth_plan(n_layers: int, mg: MGRITConfig) -> DepthPlan:
+    n_open, n_close = mg.n_open, mg.n_close
+    n_mid = n_layers - n_open - n_close
+    assert n_mid > 0, "buffers consume all layers"
+    return DepthPlan(n_open, n_close, n_mid, pad_depth(n_mid, mg.pad_to))
+
+
+# ---------------------------------------------------------------------------
+# Init
+# ---------------------------------------------------------------------------
+
+
+def _stack_blocks(key, cfg: ModelConfig, n: int, kind: str):
+    if n == 0:
+        return None
+    keys = jax.random.split(key, n)
+    return jax.vmap(lambda k: init_block(k, cfg, kind))(keys)
+
+
+def init_model(key, rcfg: RunConfig):
+    cfg, mg = rcfg.model, rcfg.mgrit
+    kind = block_kind(cfg)
+    ks = jax.random.split(key, 10)
+    params: Dict[str, Any] = {"embed": init_embedding(ks[0], cfg),
+                              "final_norm": init_norm(cfg)}
+
+    if cfg.family == "encdec":
+        ep = depth_plan(cfg.n_layers, mg)
+        dp = depth_plan(cfg.n_dec_layers, mg)
+        params["enc_mid"] = {
+            "params": _stack_blocks(ks[1], cfg, ep.n_mid_padded, "attn_mlp"),
+            "gate": lp.make_gates(ep.n_mid_real, ep.n_mid_padded)}
+        params["dec_mid"] = {
+            "params": _stack_blocks(ks[2], cfg, dp.n_mid_padded, "encdec_dec"),
+            "gate": lp.make_gates(dp.n_mid_real, dp.n_mid_padded)}
+        return params
+
+    if cfg.family == "hybrid":
+        params["backbone"] = _stack_blocks(ks[1], cfg, cfg.n_layers, "mamba2")
+        params["shared_attn"] = init_block(ks[2], cfg, "attn_mlp")
+        return params
+
+    plan = depth_plan(cfg.n_layers, mg)
+    params["open"] = _stack_blocks(ks[1], cfg, plan.n_open, kind)
+    params["close"] = _stack_blocks(ks[2], cfg, plan.n_close, kind)
+    params["mid"] = {
+        "params": _stack_blocks(ks[3], cfg, plan.n_mid_padded, kind),
+        "gate": lp.make_gates(plan.n_mid_real, plan.n_mid_padded)}
+    return params
+
+
+# ---------------------------------------------------------------------------
+# Forward (train / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _rope_for(cfg: ModelConfig, seq: int):
+    pos = jnp.arange(seq, dtype=jnp.int32)
+    return rope_freqs(cfg.resolved_head_dim, cfg.rope_theta, pos)
+
+
+def _serial_buffer(stacked, z, cfg, *, kind, causal, rope, xa=None,
+                   use_pallas=False):
+    """Exact serial buffer layers (paper App. B, Delta-t = 1), normal AD."""
+    if stacked is None:
+        return z
+
+    def step(z, p):
+        z2, _ = block_step(p, z, cfg, kind=kind, causal=causal, h=1.0,
+                           rope=rope, xa=xa, use_pallas=use_pallas)
+        return z2, None
+
+    z, _ = jax.lax.scan(step, z, stacked)
+    return z
+
+
+def _trunk(params_mid, z, rcfg: RunConfig, *, kind, causal, rope, xa=None,
+           mode: str):
+    """The ParallelNet: MGRIT layer-parallel or exact serial trunk."""
+    cfg, mg = rcfg.model, rcfg.mgrit
+    if mode == "serial" or not mg.enabled:
+        mg = dataclasses.replace(mg, fwd_iters=0, bwd_iters=0)
+    static = LPStatic(cfg=cfg, mgrit=mg, kind=kind, causal=causal,
+                      use_pallas=rcfg.use_pallas)
+    extra = {"rope": rope}
+    if xa is not None:
+        extra["xa"] = xa
+    zT, norms = lp_forward(static, params_mid, z, extra)
+    return zT, norms
+
+
+def _embed_inputs(params, batch, cfg: ModelConfig):
+    """Token embeddings, with modality frontend stubs prepended."""
+    x = embed_tokens(params["embed"], batch["tokens"], cfg)
+    if cfg.frontend == "vision" and "mm_embeds" in batch:
+        x = jnp.concatenate(
+            [batch["mm_embeds"].astype(x.dtype), x], axis=1)
+    return x
+
+
+def forward(params, batch, rcfg: RunConfig, mode: str = "lp"):
+    """Returns (logits, diagnostics). batch: tokens (B,S) [+ mm_embeds /
+    src_embeds for stubbed modalities, + tgt tokens for encdec]."""
+    cfg = rcfg.model
+    kind = block_kind(cfg)
+    diagnostics = {}
+
+    if cfg.family == "encdec":
+        # --- encoder grid (Eq. 3: t < T_enc) ---
+        if cfg.frontend == "audio" and "src_embeds" in batch:
+            xe = batch["src_embeds"].astype(jnp.dtype(cfg.dtype))
+        else:
+            xe = _embed_inputs(params, {"tokens": batch["src_tokens"]}, cfg)
+        rope_e = _rope_for(cfg, xe.shape[1])
+        xe = logical_constraint(xe, ("batch", "seq", "embed"))
+        xN, n1 = _trunk(params["enc_mid"], xe, rcfg, kind="attn_mlp",
+                        causal=False, rope=rope_e, mode=mode)
+        # --- decoder grid (t >= T_enc), cross-attending to X_{N_enc} ---
+        y = embed_tokens(params["embed"], batch["tokens"], cfg)
+        rope_d = _rope_for(cfg, y.shape[1])
+        y = logical_constraint(y, ("batch", "seq", "embed"))
+        yN, n2 = _trunk(params["dec_mid"], y, rcfg, kind="encdec_dec",
+                        causal=True, rope=rope_d, xa=xN, mode=mode)
+        diagnostics["fwd_norms"] = jnp.concatenate([n1, n2])
+        z = yN
+    elif cfg.family == "hybrid":
+        z = _embed_inputs(params, batch, cfg)
+        z = logical_constraint(z, ("batch", "seq", "embed"))
+        rope = _rope_for(cfg, z.shape[1])
+        k = cfg.hybrid_attn_every
+        n_seg, rem = divmod(cfg.n_layers, k)
+        for s in range(n_seg):
+            seg = jax.tree.map(lambda a: a[s * k:(s + 1) * k],
+                               params["backbone"])
+            z = _serial_buffer(seg, z, cfg, kind="mamba2", causal=True,
+                               rope=None)
+            z, _ = block_step(params["shared_attn"], z, cfg, kind="attn_mlp",
+                              causal=True, rope=rope,
+                              use_pallas=rcfg.use_pallas)
+        if rem:
+            tail = jax.tree.map(lambda a: a[n_seg * k:], params["backbone"])
+            z = _serial_buffer(tail, z, cfg, kind="mamba2", causal=True,
+                               rope=None)
+        diagnostics["fwd_norms"] = jnp.zeros((1,), jnp.float32)
+    else:
+        causal = cfg.family != "encoder"
+        z = _embed_inputs(params, batch, cfg)
+        z = logical_constraint(z, ("batch", "seq", "embed"))
+        rope = None if kind in ("mamba1", "mamba2") else _rope_for(
+            cfg, z.shape[1])
+        z = _serial_buffer(params.get("open"), z, cfg, kind=kind,
+                           causal=causal, rope=rope,
+                           use_pallas=rcfg.use_pallas)
+        z, norms = _trunk(params["mid"], z, rcfg, kind=kind, causal=causal,
+                          rope=rope, mode=mode)
+        z = _serial_buffer(params.get("close"), z, cfg, kind=kind,
+                           causal=causal, rope=rope,
+                           use_pallas=rcfg.use_pallas)
+        diagnostics["fwd_norms"] = norms
+
+    z = norm_apply(params["final_norm"], z, cfg)
+    logits = unembed(params["embed"], z, cfg)
+    logits = logical_constraint(logits, ("batch", "seq", "vocab"))
+    return logits, diagnostics
+
+
+def lm_loss(logits, labels):
+    """Mean token cross-entropy in fp32 over a sharded vocab axis."""
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    return jnp.mean(lse - ll)
+
+
+def loss_fn(params, batch, rcfg: RunConfig, mode: str = "lp"):
+    logits, diagnostics = forward(params, batch, rcfg, mode=mode)
+    labels = batch["labels"]
+    if logits.shape[1] != labels.shape[1]:  # vlm: mm positions carry no loss
+        logits = logits[:, -labels.shape[1]:]
+    loss = lm_loss(logits, labels)
+    return loss, diagnostics
+
+
+# ---------------------------------------------------------------------------
+# Serving: prefill + single-token decode with caches
+# ---------------------------------------------------------------------------
+
+
+def _all_layers_stacked(params, cfg: ModelConfig):
+    """Concatenate open/mid/close stacks (+gates) for cache-based decode."""
+    parts, gates = [], []
+    for name in ("open", "mid", "close"):
+        p = params.get(name)
+        if p is None:
+            continue
+        if name == "mid":
+            parts.append(p["params"])
+            gates.append(p["gate"])
+        else:
+            parts.append(p)
+            gates.append(jnp.ones((jax.tree.leaves(p)[0].shape[0],),
+                                  jnp.float32))
+    stacked = jax.tree.map(lambda *xs: jnp.concatenate(xs, axis=0), *parts)
+    return stacked, jnp.concatenate(gates)
+
+
+def init_cache(rcfg: RunConfig, batch: int, max_len: int):
+    cfg = rcfg.model
+    kind = block_kind(cfg)
+    if cfg.family == "encdec":
+        plan = depth_plan(cfg.n_dec_layers, rcfg.mgrit)
+        return attn_mod.init_kv_cache(cfg, batch, max_len, plan.n_mid_padded)
+    if cfg.family == "hybrid":
+        return {"mamba": ssm_mod.init_mamba2_cache(cfg, batch, cfg.n_layers),
+                "attn": attn_mod.init_kv_cache(
+                    cfg, batch, max_len,
+                    cfg.n_layers // cfg.hybrid_attn_every)}
+    plan = depth_plan(cfg.n_layers, rcfg.mgrit)
+    n = plan.n_open + plan.n_mid_padded + plan.n_close
+    if kind == "mamba1":
+        return ssm_mod.init_mamba1_cache(cfg, batch, n)
+    if kind == "mamba2":
+        return ssm_mod.init_mamba2_cache(cfg, batch, n)
+    return attn_mod.init_kv_cache(cfg, batch, max_len, n)
+
+
+def decode_step(params, cache, tokens, rcfg: RunConfig, xa=None):
+    """One-token decode: tokens (B, 1). Returns (logits, new_cache).
+    Serial layer scan with per-layer cache slices (serving uses TP; the
+    paper's LP targets training — DESIGN.md §6)."""
+    cfg = rcfg.model
+    kind = block_kind(cfg)
+    z = embed_tokens(params["embed"], tokens, cfg)
+    z = logical_constraint(z, ("batch", "seq", "embed"))
+
+    if cfg.family == "hybrid":
+        return _decode_hybrid(params, cache, z, rcfg)
+
+    if cfg.family == "encdec":
+        stacked = params["dec_mid"]["params"]
+        gates = params["dec_mid"]["gate"]
+        dkind = "encdec_dec"
+    else:
+        stacked, gates = _all_layers_stacked(params, cfg)
+        dkind = kind
+
+    if dkind in ("mamba1", "mamba2"):
+        rope = None
+        idx = None
+    else:
+        idx = cache["index"]
+        pos = idx[None] if idx.ndim == 0 else idx
+        rope = rope_freqs(cfg.resolved_head_dim, cfg.rope_theta,
+                          jnp.atleast_1d(pos))
+
+    def step(z, xs):
+        p, gate, layer_cache = xs
+        if dkind in ("mamba1", "mamba2"):
+            lc = layer_cache
+        else:
+            lc = {"k": layer_cache["k"], "v": layer_cache["v"],
+                  "index": cache["index"]}
+        z2, new_lc = block_step(p, z, cfg, kind=dkind, causal=True, h=1.0,
+                                gate=gate, rope=rope, xa=xa, cache=lc)
+        if dkind not in ("mamba1", "mamba2"):
+            new_lc = {"k": new_lc["k"], "v": new_lc["v"]}
+        return z2, new_lc
+
+    layer_caches = {k: v for k, v in cache.items() if k != "index"}
+    z, new_layer_caches = jax.lax.scan(step, z, (stacked, gates, layer_caches))
+    new_cache = dict(new_layer_caches)
+    if "index" in cache:
+        new_cache["index"] = cache["index"] + 1
+    z = norm_apply(params["final_norm"], z, cfg)
+    logits = unembed(params["embed"], z, cfg)
+    return logits, new_cache
+
+
+def _decode_hybrid(params, cache, z, rcfg: RunConfig):
+    cfg = rcfg.model
+    k = cfg.hybrid_attn_every
+    n_seg, rem = divmod(cfg.n_layers, k)
+    idx = cache["attn"]["index"]
+    rope = rope_freqs(cfg.resolved_head_dim, cfg.rope_theta,
+                      jnp.atleast_1d(idx))
+    new_mamba = {"conv": [], "h": []}
+    new_attn = {"k": [], "v": []}
+    li = 0
+    for s in range(n_seg + (1 if rem else 0)):
+        span = k if s < n_seg else rem
+        for i in range(span):
+            p = jax.tree.map(lambda a: a[li], params["backbone"])
+            lc = {"conv": cache["mamba"]["conv"][li],
+                  "h": cache["mamba"]["h"][li]}
+            z, nlc = block_step(p, z, cfg, kind="mamba2", causal=True,
+                                cache=lc)
+            new_mamba["conv"].append(nlc["conv"])
+            new_mamba["h"].append(nlc["h"])
+            li += 1
+        if s < n_seg:
+            lc = {"k": cache["attn"]["k"][s], "v": cache["attn"]["v"][s],
+                  "index": idx}
+            z, nlc = block_step(params["shared_attn"], z, cfg,
+                                kind="attn_mlp", causal=True, rope=rope,
+                                cache=lc)
+            new_attn["k"].append(nlc["k"])
+            new_attn["v"].append(nlc["v"])
+    new_cache = {
+        "mamba": {kk: jnp.stack(vv) for kk, vv in new_mamba.items()},
+        "attn": {"k": jnp.stack(new_attn["k"]), "v": jnp.stack(new_attn["v"]),
+                 "index": idx + 1},
+    }
+    z = norm_apply(params["final_norm"], z, cfg)
+    logits = unembed(params["embed"], z, cfg)
+    return logits, new_cache
+
+
+def prefill(params, batch, rcfg: RunConfig):
+    """Prefill forward (no loss): returns logits. KV-cache population for
+    the chained decode is handled by the serving engine (repro.serve)."""
+    logits, _ = forward(params, batch, rcfg, mode="serial")
+    return logits

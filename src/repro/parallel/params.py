@@ -1,0 +1,170 @@
+"""Parameter / cache / batch sharding assignment (logical axes by tree path).
+
+``param_specs`` walks a params pytree (arrays or ShapeDtypeStructs) and
+assigns every leaf a PartitionSpec:
+
+  * stacked trunk leaves (under mid/enc_mid/dec_mid) get a leading "layers"
+    axis — the MGRIT chunk axis, sharded over the physical 'model' axis in
+    the paper's training regime;
+  * weight-matrix dims map to logical heads/mlp/embed/vocab/experts axes
+    (Megatron TP when the config routes them to 'model');
+  * if ``sharding.fsdp`` is set, the largest still-unsharded dim of every
+    big leaf is storage-sharded over the fsdp axis (ZeRO/FSDP; XLA
+    all-gathers just-in-time) — this is what makes grok-1-314b fit;
+  * every mapping is divisibility-checked against the mesh and dropped when
+    it does not divide (e.g. 28 heads over 16-way model).
+"""
+from __future__ import annotations
+
+from typing import Optional, Tuple
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import RunConfig, ShardingConfig
+from repro.parallel.sharding import resolve_axis
+
+# logical axis tuples by (leaf name, ndim) — without the stacked prefix
+_LEAF_AXES = {
+    ("tok", 2): ("vocab", "embed"),
+    ("out", 2): ("vocab", "embed"),
+    ("wq", 3): ("embed", "heads", "head_dim"),
+    ("wk", 3): ("embed", "kv_heads", "head_dim"),
+    ("wv", 3): ("embed", "kv_heads", "head_dim"),
+    ("wo", 3): ("heads", "head_dim", "embed"),
+    ("w_in", 2): ("embed", "mlp"),
+    ("w_gate", 2): ("embed", "mlp"),
+    ("w_out", 2): ("mlp", "embed"),
+    ("w_in", 3): ("experts", "embed", "mlp"),
+    ("w_gate", 3): ("experts", "embed", "mlp"),
+    ("w_out", 3): ("experts", "mlp", "embed"),
+    ("router", 2): ("embed", "experts"),
+    ("in_proj", 2): ("embed", "mlp"),
+    ("x_proj", 2): ("mlp", None),
+    ("dt_proj", 2): (None, "mlp"),
+    ("A_log", 2): ("mlp", None),
+    ("conv_w", 2): (None, "mlp"),
+    ("out_proj", 2): ("mlp", "embed"),
+}
+
+_STACKED_ROOTS = ("mid", "enc_mid", "dec_mid")
+_FSDP_MIN_SIZE = 1 << 22  # only storage-shard leaves >= 4M elements
+
+
+def _path_names(path) -> Tuple[str, ...]:
+    names = []
+    for k in path:
+        if hasattr(k, "key"):
+            names.append(str(k.key))
+        elif hasattr(k, "idx"):
+            names.append(str(k.idx))
+    return tuple(names)
+
+
+def logical_axes_for(path, shape) -> Tuple[Optional[str], ...]:
+    names = set(_path_names(path))
+    leaf = _path_names(path)[-1] if path else ""
+    in_trunk = bool(names & set(_STACKED_ROOTS))
+    in_buffer = bool(names & {"open", "close", "backbone"})
+    stacked = in_trunk or in_buffer
+    if leaf == "gate":
+        return ("layers",)
+    base_ndim = len(shape) - (1 if stacked else 0)
+    base = _LEAF_AXES.get((leaf, base_ndim), (None,) * base_ndim)
+    if stacked:
+        return (("layers",) if in_trunk else (None,)) + base
+    return base
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def build_spec(logical: Tuple[Optional[str], ...], shape,
+               cfg: ShardingConfig, mesh: Mesh,
+               nbytes: int = 0) -> P:
+    """Resolve logical names -> physical axes with divisibility checks,
+    per-tensor axis dedupe, and an FSDP fallback for large leaves."""
+    used = set()
+    phys = []
+    for dim, name in zip(shape, logical):
+        ax = resolve_axis(name, cfg, mesh)
+        if ax is not None:
+            axs = ax if isinstance(ax, tuple) else (ax,)
+            if any(a in used for a in axs) or dim % _axis_size(mesh, ax):
+                ax = None
+            else:
+                used.update(axs)
+        phys.append(ax)
+    # FSDP: storage-shard the largest unsharded dim of big leaves
+    if cfg.fsdp and cfg.fsdp in mesh.axis_names and cfg.fsdp not in used \
+            and int(np.prod(shape)) >= _FSDP_MIN_SIZE:
+        fs = mesh.shape[cfg.fsdp]
+        cands = [(d, i) for i, (d, ax) in enumerate(zip(shape, phys))
+                 if ax is None and d % fs == 0]
+        if cands:
+            _, i = max(cands)
+            phys[i] = cfg.fsdp
+    return P(*phys)
+
+
+def param_specs(params, rcfg: RunConfig, mesh: Mesh):
+    """Pytree of NamedShardings matching `params` (arrays or SDS)."""
+    cfg = rcfg.sharding
+
+    def one(path, leaf):
+        logical = logical_axes_for(path, leaf.shape)
+        spec = build_spec(logical, leaf.shape, cfg, mesh)
+        return NamedSharding(mesh, spec)
+
+    return jax.tree_util.tree_map_with_path(one, params)
+
+
+# ---------------------------------------------------------------------------
+# Batches and caches
+# ---------------------------------------------------------------------------
+
+_BATCH_AXES = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "src_tokens": ("batch", None),
+    "mm_embeds": ("batch", None, "embed"),
+    "src_embeds": ("batch", None, "embed"),
+}
+
+_CACHE_AXES = {
+    ("k", 5): (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+    ("v", 5): (None, "batch", "kv_seq", "kv_heads", "head_dim"),
+    ("conv", 4): (None, "batch", None, "mlp"),
+    ("h", 4): (None, "batch", "mlp", None),
+    ("h", 5): (None, "batch", "mlp", None, None),
+    ("index", 0): (),
+}
+
+
+def batch_specs(batch, rcfg: RunConfig, mesh: Mesh):
+    cfg = rcfg.sharding
+
+    def one(path, leaf):
+        name = _path_names(path)[-1]
+        logical = _BATCH_AXES.get(name, ("batch",) + (None,) * (leaf.ndim - 1))
+        return NamedSharding(mesh, build_spec(logical, leaf.shape, cfg, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, batch)
+
+
+def cache_specs(cache, rcfg: RunConfig, mesh: Mesh):
+    cfg = rcfg.sharding
+
+    def one(path, leaf):
+        name = _path_names(path)[-1]
+        logical = _CACHE_AXES.get((name, leaf.ndim),
+                                  (None,) * leaf.ndim)
+        return NamedSharding(mesh, build_spec(logical, leaf.shape, cfg, mesh))
+
+    return jax.tree_util.tree_map_with_path(one, cache)

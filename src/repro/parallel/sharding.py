@@ -1,0 +1,125 @@
+"""Logical-axis sharding (MaxText-style rules).
+
+Tensors throughout the model code are annotated with *logical* axis names
+(e.g. ``("batch", "seq", "embed")``). A ``ShardingConfig`` maps logical names
+to physical mesh axes. ``logical_constraint`` applies
+``with_sharding_constraint`` when called under an active mesh + rules context;
+it is a no-op otherwise, so the same model code runs on one CPU device in
+tests and on a 512-chip mesh in the dry-run.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+from typing import Optional, Sequence, Tuple
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.configs.base import ShardingConfig
+
+_ctx = threading.local()
+
+
+def _state():
+    if not hasattr(_ctx, "stack"):
+        _ctx.stack = []
+    return _ctx.stack
+
+
+@contextlib.contextmanager
+def axis_rules(mesh: Optional[Mesh], cfg: ShardingConfig):
+    """Activate logical->physical mapping for the enclosed trace."""
+    _state().append((mesh, cfg))
+    try:
+        yield
+    finally:
+        _state().pop()
+
+
+def current_rules() -> Tuple[Optional[Mesh], Optional[ShardingConfig]]:
+    st = _state()
+    return st[-1] if st else (None, None)
+
+
+def resolve_axis(logical: Optional[str], cfg: ShardingConfig,
+                 mesh: Mesh):
+    """Logical axis name -> physical mesh axis (or None)."""
+    if logical is None:
+        return None
+    phys = getattr(cfg, logical, None) if hasattr(cfg, logical) else None
+    # aliases that share a physical mapping
+    if phys is None:
+        alias = {"kv_heads": "heads", "seq": None, "head_dim": None,
+                 "state": None, "conv": None}.get(logical, None)
+        if alias is not None:
+            phys = getattr(cfg, alias, None)
+    if phys is None:
+        return None
+    if "+" in phys:  # compound mapping, e.g. "data+pod", "data+model"
+        axes = tuple(a for a in phys.split("+") if a in mesh.axis_names)
+        if phys == "data+pod":  # pod leads for contiguous batch shards
+            axes = tuple(a for a in ("pod", "data") if a in mesh.axis_names)
+        return axes if axes else None
+    if phys not in mesh.axis_names:
+        return None
+    return phys
+
+
+def _axis_size(mesh: Mesh, ax) -> int:
+    if ax is None:
+        return 1
+    if isinstance(ax, tuple):
+        size = 1
+        for a in ax:
+            size *= mesh.shape[a]
+        return size
+    return mesh.shape[ax]
+
+
+def spec_for(names: Sequence[Optional[str]], cfg: ShardingConfig,
+             mesh: Mesh, shape: Optional[Sequence[int]] = None) -> P:
+    axes = []
+    used = set()
+    for i, n in enumerate(names):
+        ax = resolve_axis(n, cfg, mesh)
+        if ax is not None:
+            flat = ax if isinstance(ax, tuple) else (ax,)
+            bad = any(a in used for a in flat)
+            if shape is not None and shape[i] % _axis_size(mesh, ax):
+                bad = True  # non-divisible: drop instead of erroring
+            if bad:
+                ax = None
+            else:
+                used.update(flat)
+        axes.append(ax)
+    return P(*axes)
+
+
+def logical_constraint(x, names: Sequence[Optional[str]]):
+    """Apply with_sharding_constraint using the active rules (no-op without)."""
+    mesh, cfg = current_rules()
+    if mesh is None or cfg is None:
+        return x
+    if x.ndim != len(names):
+        raise ValueError(f"rank {x.ndim} != names {names}")
+    spec = spec_for(names, cfg, mesh, x.shape)
+    # skip if nothing shards (avoids HLO noise)
+    if all(s is None for s in spec):
+        return x
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, cfg: ShardingConfig,
+                   names: Sequence[Optional[str]]) -> NamedSharding:
+    return NamedSharding(mesh, spec_for(names, cfg, mesh))
+
+
+def tree_shardings(mesh: Mesh, cfg: ShardingConfig, logical_tree):
+    """Map a pytree of logical-axis tuples to NamedShardings."""
+    return jax.tree.map(
+        lambda names: named_sharding(mesh, cfg, names),
+        logical_tree,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(n, (str, type(None))) for n in x),
+    )

@@ -1,0 +1,89 @@
+"""Pallas kernels vs pure-jnp oracles (interpret mode), sweeping
+shapes/dtypes per the assignment."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels import ref
+from repro.kernels.flash_attention import flash_attention_bhsd
+from repro.kernels.rmsnorm import rmsnorm_2d
+from repro.kernels.ssm_scan import ssm_scan
+
+
+def rand(key, shape, dtype):
+    return (jax.random.normal(key, shape) * 0.5).astype(dtype)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("B,H,Hkv,Sq,Sk,hd,causal", [
+    (1, 4, 4, 128, 128, 64, True),
+    (2, 4, 2, 128, 128, 32, True),     # GQA
+    (1, 8, 1, 256, 256, 64, True),     # MQA
+    (1, 2, 2, 128, 256, 64, False),    # cross-ish, non-causal
+    (2, 2, 2, 384, 384, 128, True),    # 3 q blocks, hd=128
+])
+def test_flash_attention_matches_ref(dtype, B, H, Hkv, Sq, Sk, hd, causal):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = rand(ks[0], (B, H, Sq, hd), dtype)
+    k = rand(ks[1], (B, Hkv, Sk, hd), dtype)
+    v = rand(ks[2], (B, Hkv, Sk, hd), dtype)
+    out = flash_attention_bhsd(q, k, v, causal=causal, interpret=True)
+    expect = ref.flash_attention_ref(q, k, v, causal=causal)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("R,D,rb", [(256, 512, 128), (512, 128, 256),
+                                    (64, 2048, 64)])
+def test_rmsnorm_matches_ref(dtype, R, D, rb):
+    ks = jax.random.split(jax.random.PRNGKey(1), 2)
+    x = rand(ks[0], (R, D), dtype)
+    w = jnp.ones((D,), jnp.float32) + rand(ks[1], (D,), jnp.float32) * 0.1
+    out = rmsnorm_2d(x, w, row_block=rb, interpret=True)
+    expect = ref.rmsnorm_ref(x, w)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 1e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("Bb,S,di,ds,chunk", [
+    (2, 128, 64, 16, 32),
+    (1, 64, 128, 8, 64),
+    (2, 256, 32, 16, 128),
+])
+def test_ssm_scan_matches_ref(dtype, Bb, S, di, ds, chunk):
+    ks = jax.random.split(jax.random.PRNGKey(2), 5)
+    dt = jax.nn.softplus(rand(ks[0], (Bb, S, di), jnp.float32)) * 0.2
+    x = rand(ks[1], (Bb, S, di), dtype)
+    A = -jnp.exp(rand(ks[2], (di, ds), jnp.float32))
+    B = rand(ks[3], (Bb, S, ds), dtype)
+    C = rand(ks[4], (Bb, S, ds), dtype)
+    D = jnp.ones((di,), jnp.float32)
+    out = ssm_scan(dt.astype(dtype), x, A, B, C, D, chunk=chunk,
+                   interpret=True)
+    expect = ref.ssm_scan_ref(dt.astype(dtype), x, A, B, C, D)
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(expect, np.float32),
+                               rtol=tol, atol=tol)
+
+
+def test_flash_attention_model_layout():
+    """ops.flash_attention consumes the model's (B,S,H,hd) layout and matches
+    the model's dense reference path."""
+    from repro.kernels import ops
+    from repro.models.attention import dot_attention
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    q = rand(ks[0], (2, 128, 4, 32), jnp.float32)
+    k = rand(ks[1], (2, 128, 2, 32), jnp.float32)
+    v = rand(ks[2], (2, 128, 2, 32), jnp.float32)
+    out = ops.flash_attention(q, k, v, causal=True, interpret=True)
+    expect = dot_attention(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=2e-4, atol=2e-4)

@@ -1,0 +1,124 @@
+"""Additional model-substrate tests: MoE properties, enc-dec decode oracle,
+mixed-precision master weights, grouped-dispatch consistency."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (MGRITConfig, ModelConfig, MoEConfig,
+                                OptimizerConfig, RunConfig, ShapeConfig)
+from repro.configs import registry
+from repro.configs.reduce import reduce_config
+from repro.models import transformer
+from repro.models.moe import capacity, init_moe, moe_apply
+from repro.optim import optimizers
+
+
+def moe_cfg(group_size=0):
+    return ModelConfig(name="m", family="decoder", n_layers=2, d_model=32,
+                       n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                       moe=MoEConfig(num_experts=4, top_k=2, d_ff=64,
+                                     group_size=group_size))
+
+
+def test_moe_batch_permutation_equivariance():
+    cfg = moe_cfg()
+    params = init_moe(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (4, 8, 32),
+                          jnp.float32) * 0.5
+    y = moe_apply(params, x, cfg)
+    perm = jnp.array([2, 0, 3, 1])
+    y_perm = moe_apply(params, x[perm], cfg)
+    np.testing.assert_allclose(np.asarray(y[perm], np.float32),
+                               np.asarray(y_perm, np.float32),
+                               rtol=2e-2, atol=2e-2)
+
+
+def test_moe_grouping_close_to_ungrouped():
+    """With ample capacity, 8-token groups route like whole-sequence
+    dispatch (same experts, same gates)."""
+    cfg0, cfgg = moe_cfg(0), moe_cfg(group_size=8)
+    params = init_moe(jax.random.PRNGKey(0), cfg0)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, 32)) * 0.5
+    y0 = moe_apply(params, x, cfg0)
+    yg = moe_apply(params, x, cfgg)
+    # tokens dropped by capacity may differ at group boundaries; most of
+    # the outputs must agree exactly
+    close = np.isclose(np.asarray(y0, np.float32),
+                       np.asarray(yg, np.float32), rtol=2e-2,
+                       atol=2e-2).mean()
+    assert close > 0.9, f"only {close:.2%} matched"
+
+
+def test_moe_capacity_bounds():
+    cfg = moe_cfg()
+    c = capacity(128, cfg)
+    assert 4 <= c <= 128
+    assert c >= 128 * cfg.moe.top_k / cfg.moe.num_experts  # >= avg load
+
+
+def test_encdec_decode_matches_teacher_forced():
+    rcfg = reduce_config(registry.get_config("seamless_m4t_v2"))
+    cfg = rcfg.model
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_model(key, rcfg)
+    B, T = 2, 6
+    src = jax.random.normal(key, (B, 8, cfg.d_model)) * 0.1
+    toks = jax.random.randint(jax.random.fold_in(key, 1), (B, T), 0,
+                              cfg.vocab_size)
+    full, _ = jax.jit(lambda p, b: transformer.forward(
+        p, b, rcfg, mode="serial"))(
+        params, {"src_embeds": src, "tokens": toks})
+    # decode through the decoder trunk with cross-attention to the same
+    # encoder output used by the full forward
+    from repro.models.transformer import _trunk, _rope_for
+    import repro.models.layers as L
+    xe = src.astype(jnp.dtype(cfg.dtype))
+    xN, _ = _trunk(params["enc_mid"], xe, rcfg, kind="attn_mlp",
+                   causal=False, rope=_rope_for(cfg, 8), mode="serial")
+    cache = transformer.init_cache(rcfg, B, T)
+    step = jax.jit(lambda p, c, t: transformer.decode_step(p, c, t, rcfg,
+                                                           xa=xN))
+    outs = []
+    for t in range(T):
+        lg, cache = step(params, cache, toks[:, t:t + 1])
+        outs.append(lg[:, 0])
+    dec = jnp.stack(outs, 1)
+    np.testing.assert_allclose(np.asarray(dec, np.float32),
+                               np.asarray(full, np.float32),
+                               rtol=3e-2, atol=3e-2)
+
+
+def test_bf16_master_weights_update_path():
+    """bf16 stored params + fp32 master: repeated tiny updates accumulate
+    in the master (they would vanish in bf16 alone)."""
+    cfg = OptimizerConfig(name="sgd", lr=1e-4, warmup_steps=0,
+                          schedule="constant", grad_clip=1e9)
+    params = {"w": jnp.ones((16,), jnp.bfloat16)}
+    state = optimizers.init_opt_state(cfg, params)
+    assert "master" in state
+    for _ in range(50):
+        grads = {"w": jnp.full((16,), 0.05, jnp.bfloat16)}
+        params, state, _ = optimizers.apply_updates(cfg, params, grads,
+                                                    state)
+    drift = 1.0 - float(state["master"]["w"][0])
+    # 50 steps of lr*m accumulation visible in fp32 master
+    assert drift > 1e-4
+    assert params["w"].dtype == jnp.bfloat16
+
+
+def test_gate_frozen_under_weight_decay():
+    cfg = OptimizerConfig(name="adamw", lr=0.1, weight_decay=0.5,
+                          warmup_steps=0, schedule="constant")
+    params = {"mid": {"gate": jnp.array([1.0, 0.0]),
+                      "params": {"w": jnp.ones((4,))}}}
+    state = optimizers.init_opt_state(cfg, params)
+    grads = jax.tree.map(jnp.ones_like, params)
+    for _ in range(5):
+        params, state, _ = optimizers.apply_updates(cfg, params, grads,
+                                                    state)
+    np.testing.assert_array_equal(np.asarray(params["mid"]["gate"]),
+                                  [1.0, 0.0])
+    assert float(params["mid"]["params"]["w"][0]) != 1.0

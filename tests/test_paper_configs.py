@@ -1,0 +1,65 @@
+"""Smoke tests for the paper's own architectures (reduced configs):
+BERT-128L (encoder MLM), GPT2-nanoGPT (decoder + buffer layers + Dt=1/16),
+ViT (encoder + patch stub), MC (tiny encoder), MT (Marian enc-dec)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.configs.reduce import reduce_config
+from repro.models import transformer
+
+PAPER = ["bert128", "gpt2_nanogpt", "vit32", "mc_tiny", "mt_marian"]
+SEQ, BATCH = 16, 2
+
+
+def make_batch(rcfg, key):
+    cfg = rcfg.model
+    ks = jax.random.split(key, 4)
+    b = {"tokens": jax.random.randint(ks[0], (BATCH, SEQ), 0,
+                                      cfg.vocab_size),
+         "labels": jax.random.randint(ks[1], (BATCH, SEQ), 0,
+                                      cfg.vocab_size)}
+    if cfg.family == "encdec":
+        b["src_tokens"] = jax.random.randint(ks[2], (BATCH, SEQ), 0,
+                                             cfg.vocab_size)
+    if cfg.frontend == "vision":
+        b["mm_embeds"] = jax.random.normal(ks[3], (BATCH, 4, cfg.d_model)) \
+            * 0.1
+    return b
+
+
+@pytest.mark.parametrize("arch", PAPER)
+def test_paper_arch_forward_and_grad(arch):
+    rcfg = reduce_config(registry.get_config(arch))
+    key = jax.random.PRNGKey(0)
+    params = transformer.init_model(key, rcfg)
+    batch = make_batch(rcfg, jax.random.fold_in(key, 1))
+    for mode in ("serial", "lp"):
+        val, grads = jax.jit(jax.value_and_grad(
+            lambda p: transformer.loss_fn(p, batch, rcfg, mode=mode)[0]))(
+            params)
+        assert np.isfinite(float(val)), f"{arch}/{mode}"
+        assert all(np.all(np.isfinite(np.asarray(g, np.float32)))
+                   for g in jax.tree.leaves(grads))
+
+
+def test_gpt2_buffer_structure():
+    """The paper's App. B GPT2 setup: 2+2 serial buffers, 16-layer
+    ParallelNet with h = 1/16."""
+    rcfg = registry.get_config("gpt2_nanogpt")
+    assert rcfg.mgrit.n_open == 2 and rcfg.mgrit.n_close == 2
+    assert abs(rcfg.mgrit.h - 1.0 / 16.0) < 1e-9
+    plan = transformer.depth_plan(rcfg.model.n_layers, rcfg.mgrit)
+    assert plan.n_mid_real == 16 and plan.n_mid_padded == 16
+    # serial forward (dash in Table 3) + 1 parallel backward iteration
+    assert rcfg.mgrit.fwd_iters == 0 and rcfg.mgrit.bwd_iters == 1
+
+
+def test_bert128_depth():
+    rcfg = registry.get_config("bert128")
+    assert rcfg.model.n_layers == 128
+    assert rcfg.mgrit.cf == 4 and rcfg.mgrit.levels == 2

@@ -1,0 +1,112 @@
+"""Hypothesis property-based tests on the system's invariants."""
+import hypothesis
+import hypothesis.strategies as st
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+
+from repro.analysis.hlo import collective_bytes
+from repro.core import mgrit
+from repro.core.lp import make_gates, pad_depth
+from repro.models.attention import chunked_attention, dot_attention
+from repro.parallel import compression
+
+SET = settings(max_examples=15, deadline=None,
+               suppress_health_check=[hypothesis.HealthCheck.too_slow])
+
+
+def toy_step(slot, z, h):
+    f = jnp.tanh(z @ slot["params"]["w"] + slot["params"]["b"])
+    return z + jnp.asarray(h, z.dtype) * slot["gate"].astype(z.dtype) * f
+
+
+def make_toy(seed, N, D=4, B=2):
+    k = jax.random.PRNGKey(seed)
+    kw, kb, kz = jax.random.split(k, 3)
+    stacked = {"params": {"w": jax.random.normal(kw, (N, D, D)) * 0.3,
+                          "b": jax.random.normal(kb, (N, D)) * 0.1},
+               "gate": jnp.ones((N,))}
+    return stacked, jax.random.normal(kz, (B, D))
+
+
+@SET
+@given(seed=st.integers(0, 50), cf=st.sampled_from([2, 4]),
+       j=st.integers(2, 4))
+def test_mgrit_exactness_property(seed, cf, j):
+    """MGRIT is exact after J = N/cf V-cycles for ANY toy problem."""
+    N = cf * j
+    stacked, z0 = make_toy(seed, N)
+    _, zT = mgrit.serial_solve(toy_step, stacked, z0, 0.3)
+    spec = mgrit.MGRITSpec(cf=cf, levels=2, iters=j, h=0.3, shard=False,
+                           znames=(None, None))
+    _, zT_mg, _ = mgrit.mgrit_solve(toy_step, stacked, z0, spec)
+    np.testing.assert_allclose(np.asarray(zT_mg), np.asarray(zT),
+                               rtol=1e-4, atol=1e-4)
+
+
+@SET
+@given(seed=st.integers(0, 50), n_pad=st.integers(0, 3))
+def test_gate_padding_is_identity(seed, n_pad):
+    """Padded (gate=0) trailing layers never change the solution."""
+    stacked, z0 = make_toy(seed, 8 + n_pad)
+    stacked["gate"] = stacked["gate"].at[8:].set(0.0)
+    ref = {"params": jax.tree.map(lambda a: a[:8], stacked["params"]),
+           "gate": jnp.ones((8,))}
+    _, zT_pad = mgrit.serial_solve(toy_step, stacked, z0, 0.5)
+    _, zT_ref = mgrit.serial_solve(toy_step, ref, z0, 0.5)
+    np.testing.assert_allclose(np.asarray(zT_pad), np.asarray(zT_ref),
+                               rtol=1e-6)
+
+
+@SET
+@given(n=st.integers(1, 100), p=st.sampled_from([4, 8, 16]))
+def test_pad_depth_invariants(n, p):
+    m = pad_depth(n, p)
+    assert m >= n and m % p == 0 and m - n < p
+    g = np.asarray(make_gates(n, m))
+    assert g.sum() == n and (g[:n] == 1).all() and (g[n:] == 0).all()
+
+
+@SET
+@given(seed=st.integers(0, 30),
+       sq=st.sampled_from([64, 128]),
+       h=st.sampled_from([(2, 2), (4, 2), (4, 1)]),
+       causal=st.booleans())
+def test_chunked_attention_matches_dense(seed, sq, h, causal):
+    H, Hkv = h
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = jax.random.normal(ks[0], (2, sq, H, 16)) * 0.5
+    k = jax.random.normal(ks[1], (2, sq, Hkv, 16)) * 0.5
+    v = jax.random.normal(ks[2], (2, sq, Hkv, 16)) * 0.5
+    out = chunked_attention(q, k, v, causal=causal, q_block=32, k_block=32)
+    ref = dot_attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-4, atol=2e-4)
+
+
+@SET
+@given(seed=st.integers(0, 100), scale=st.floats(1e-4, 10.0))
+def test_int8_quantization_bounded_error(seed, scale):
+    x = jax.random.normal(jax.random.PRNGKey(seed), (4096,)) * scale
+    q, s = compression.quantize_int8(x)
+    x2 = compression.dequantize_int8(q, s, x.shape)
+    err = float(jnp.max(jnp.abs(x - x2)))
+    assert err <= float(jnp.max(jnp.abs(x))) / 127.0 + 1e-6
+
+
+@given(kind=st.sampled_from(["all-reduce", "all-gather", "reduce-scatter",
+                             "collective-permute", "all-to-all"]),
+       dims=st.lists(st.integers(1, 64), min_size=1, max_size=3),
+       dtype=st.sampled_from([("f32", 4), ("bf16", 2), ("s8", 1)]))
+@settings(max_examples=30, deadline=None)
+def test_hlo_parser_counts_synthetic_collectives(kind, dims, dtype):
+    dt, dbytes = dtype
+    shape = ",".join(map(str, dims))
+    n = 1
+    for d in dims:
+        n *= d
+    text = (f"  %op0 = {dt}[{shape}]{{0}} parameter(0)\n"
+            f"  %c1 = {dt}[{shape}]{{0}} {kind}(%op0), channel_id=1\n")
+    out = collective_bytes(text)
+    assert out.get(kind, 0) == n * dbytes

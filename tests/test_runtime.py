@@ -1,0 +1,142 @@
+"""Runtime substrate tests: checkpoint/restore, trainer switching,
+data determinism, optimizer, compression."""
+import dataclasses
+import os
+import tempfile
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs.base import (MGRITConfig, ModelConfig, OptimizerConfig,
+                                RunConfig, ShapeConfig)
+from repro.core.adaptive import AdaptiveController, convergence_factor
+from repro.data.pipeline import SyntheticLM
+from repro.optim import optimizers
+from repro.parallel import compression
+from repro.train import checkpoint as ckpt
+from repro.train.trainer import Trainer
+
+
+def tiny_rcfg(lp=True, steps=30):
+    model = ModelConfig(name="t", family="encoder", n_layers=8, d_model=32,
+                        n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=64,
+                        act="gelu", norm="layernorm")
+    return RunConfig(
+        model=model,
+        mgrit=MGRITConfig(enabled=lp, cf=2, levels=2, fwd_iters=1,
+                          bwd_iters=1, pad_to=8, check_every=10),
+        optimizer=OptimizerConfig(name="sgd", lr=0.05, warmup_steps=2,
+                                  total_steps=steps),
+        shape=ShapeConfig("t", "train", 16, 4))
+
+
+def test_data_pipeline_deterministic():
+    rcfg = tiny_rcfg()
+    p1 = SyntheticLM(rcfg, seed=3)
+    p2 = SyntheticLM(rcfg, seed=3)
+    b1, b2 = p1.batch_at(17), p2.batch_at(17)
+    np.testing.assert_array_equal(b1["tokens"], b2["tokens"])
+    assert not np.array_equal(p1.batch_at(17)["tokens"],
+                              p1.batch_at(18)["tokens"])
+
+
+def test_trainer_loss_decreases():
+    tr = Trainer(tiny_rcfg(), seed=0)
+    rep = tr.train(30, log_every=0, probe=False)
+    assert np.mean(rep.losses[-5:]) < np.mean(rep.losses[:5])
+
+
+def test_checkpoint_roundtrip_and_resume():
+    with tempfile.TemporaryDirectory() as d:
+        rcfg = tiny_rcfg()
+        tr = Trainer(rcfg, ckpt_dir=d, seed=0)
+        tr.train(6, ckpt_every=3, log_every=0, probe=False)
+        p_before = jax.tree.leaves(tr.params)[0]
+
+        tr2 = Trainer(rcfg, ckpt_dir=d, seed=0)
+        assert tr2.step == 6
+        p_after = jax.tree.leaves(tr2.params)[0]
+        np.testing.assert_allclose(np.asarray(p_before),
+                                   np.asarray(p_after), rtol=1e-6)
+        # determinism: continued run equals uninterrupted run
+        tr2.train(4, log_every=0, probe=False)
+        tr3 = Trainer(rcfg, seed=0)
+        tr3.train(10, log_every=0, probe=False)
+        np.testing.assert_allclose(
+            np.asarray(jax.tree.leaves(tr2.params)[0]),
+            np.asarray(jax.tree.leaves(tr3.params)[0]), atol=1e-5)
+
+
+def test_checkpoint_rotation_and_latest():
+    with tempfile.TemporaryDirectory() as d:
+        params = {"w": jnp.ones((4,))}
+        opt = {"step": jnp.zeros((), jnp.int32)}
+        for s in (1, 2, 3, 4, 5):
+            ckpt.save(d, s, params, opt, keep=2)
+        dirs = [x for x in os.listdir(d) if x.startswith("step_")]
+        assert len(dirs) == 2
+        assert ckpt.latest_step(d) == 5
+
+
+def test_adaptive_controller_switches():
+    c = AdaptiveController(MGRITConfig(check_every=10, switch_threshold=1.0))
+    assert c.should_probe(10)
+    assert not c.should_probe(5)
+    assert c.observe(10, np.array([1.0, 0.5]), np.array([1.0, 0.4])) == "ok"
+    assert c.state.mode == "lp"
+    assert c.observe(20, np.array([1.0, 1.5]), np.array([1.0, 0.4])) \
+        == "switched"
+    assert c.state.mode == "serial"
+    assert c.state.step_of_switch == 20
+
+
+def test_convergence_factor_floor():
+    assert convergence_factor(np.array([1e-32, 1e-33])) == 0.0
+    assert convergence_factor(np.array([1.0, 0.25])) == pytest.approx(0.25)
+
+
+def test_optimizer_adamw_descends_quadratic():
+    cfg = OptimizerConfig(name="adamw", lr=0.1, warmup_steps=0,
+                          total_steps=100, schedule="constant",
+                          weight_decay=0.0)
+    params = {"w": jnp.array([3.0, -2.0])}
+    state = optimizers.init_opt_state(cfg, params)
+    for _ in range(100):
+        grads = jax.tree.map(lambda w: 2 * w, params)
+        params, state, _ = optimizers.apply_updates(cfg, params, grads,
+                                                    state)
+    assert float(jnp.abs(params["w"]).max()) < 0.3
+
+
+def test_int8_compression_error_feedback():
+    key = jax.random.PRNGKey(0)
+    g = {"w": jax.random.normal(key, (1000,)) * 0.01}
+    err = compression.init_error_state(g)
+    total_q = jnp.zeros_like(g["w"])
+    total_g = jnp.zeros_like(g["w"])
+    for i in range(20):
+        gi = {"w": jax.random.normal(jax.random.fold_in(key, i),
+                                     (1000,)) * 0.01}
+        gq, err = compression.compress_tree(gi, err)
+        total_q += gq["w"]
+        total_g += gi["w"]
+    # error feedback keeps the *accumulated* compressed signal unbiased
+    rel = float(jnp.linalg.norm(total_q - total_g)
+                / jnp.linalg.norm(total_g))
+    assert rel < 0.05
+
+
+def test_trainer_lp_and_serial_equivalent_when_converged():
+    """fwd_iters large enough for exactness -> LP step == serial step."""
+    rcfg = tiny_rcfg(lp=True)
+    rcfg = dataclasses.replace(
+        rcfg, mgrit=dataclasses.replace(rcfg.mgrit, fwd_iters=4,
+                                        bwd_iters=4))
+    t_lp = Trainer(rcfg, seed=0)
+    r_lp = t_lp.train(5, log_every=0, probe=False)
+    t_s = Trainer(dataclasses.replace(
+        rcfg, mgrit=dataclasses.replace(rcfg.mgrit, enabled=False)), seed=0)
+    r_s = t_s.train(5, log_every=0, probe=False)
+    np.testing.assert_allclose(r_lp.losses, r_s.losses, rtol=2e-2, atol=2e-2)
