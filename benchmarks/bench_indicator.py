@@ -4,7 +4,6 @@ Runs LP training with periodic doubled-iteration probes and reports the
 indicator trajectory (rho_fwd, rho_bwd per probe)."""
 from __future__ import annotations
 
-import numpy as np
 
 from benchmarks.common import CSV, tiny_rcfg
 from repro.train.trainer import Trainer

@@ -14,7 +14,7 @@ import json
 import os
 
 from benchmarks.common import CSV
-from repro.analysis.roofline import HBM_BW, ICI_BW, PEAK_FLOPS
+from repro.analysis.roofline import HBM_BW, PEAK_FLOPS
 
 PERF_DIR = os.path.join(os.path.dirname(__file__), "..", "experiments",
                         "perf")

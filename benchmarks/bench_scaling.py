@@ -10,7 +10,6 @@ Fig. 6-8 (speedup grows with N, cf, L).
 """
 from __future__ import annotations
 
-import dataclasses
 
 import jax
 import jax.numpy as jnp

@@ -1,0 +1,101 @@
+"""Serving benchmarks: the continuous-batching engine vs the seed design.
+
+Reports, for a small decoder LM on this host:
+  serve/prefill_chunked   chunked prefill us/call + tokens/sec (128-tok
+                          prompt in ONE jitted call)
+  serve/prefill_loop      seed-style per-token prefill loop over the same
+                          prompt (O(T) jitted calls) — the speedup is the
+                          tentpole claim
+  serve/decode_paged      steady-state paged decode tokens/sec at batch 8
+  serve/decode_dense      dense-cache decode tokens/sec at batch 8
+  serve/ttft              time-to-first-token through the scheduler
+  serve/e2e_sched         mixed-length queue end-to-end through the
+                          scheduler: aggregate generated tokens/sec
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import CSV, time_call
+from repro.configs.base import (MGRITConfig, ModelConfig, OptimizerConfig,
+                                RunConfig, ShapeConfig)
+from repro.models import transformer
+from repro.serve.engine import Request, ServeEngine
+
+PROMPT = 128
+BATCH = 8
+MAX_LEN = 256
+
+
+def serve_rcfg() -> RunConfig:
+    model = ModelConfig(name="bench_serve", family="decoder", n_layers=8,
+                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+                        vocab_size=256, act="silu", norm="rmsnorm",
+                        head_dim=16, dtype="float32")
+    return RunConfig(
+        model=model,
+        mgrit=MGRITConfig(enabled=True, cf=2, levels=2, n_open=1, n_close=1,
+                          pad_to=2),
+        optimizer=OptimizerConfig(),
+        shape=ShapeConfig("serve", "decode", MAX_LEN, BATCH))
+
+
+def run(csv: CSV):
+    rcfg = serve_rcfg()
+    params = transformer.init_model(jax.random.PRNGKey(0), rcfg)
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=BATCH,
+                      page_size=16)
+
+    # -- chunked prefill: one jitted call for the whole prompt -------------
+    tps = eng.prefill_probe(PROMPT, batch=1)
+    csv.add("serve/prefill_chunked", PROMPT / tps * 1e6,
+            f"tok_s={tps:.0f}")
+
+    # -- seed-style per-token prefill loop (the replaced design) ----------
+    step = jax.jit(lambda p, c, t: transformer.decode_step(p, c, t, rcfg))
+    toks = np.ones((1, 1), np.int32)
+
+    def loop_prefill():
+        cache = transformer.init_cache(rcfg, 1, MAX_LEN)
+        lg = None
+        for _ in range(PROMPT):
+            lg, cache = step(params, cache, toks)
+        return lg
+
+    us_loop = time_call(loop_prefill, iters=2)
+    csv.add("serve/prefill_loop", us_loop,
+            f"tok_s={PROMPT / (us_loop * 1e-6):.0f}")
+
+    # -- steady-state decode ----------------------------------------------
+    tps_paged = eng.throughput_probe(BATCH, steps=16)
+    csv.add("serve/decode_paged", BATCH / tps_paged * 1e6,
+            f"tok_s={tps_paged:.0f}")
+    tps_dense = eng.throughput_probe(BATCH, steps=16, paged=False)
+    csv.add("serve/decode_dense", BATCH / tps_dense * 1e6,
+            f"tok_s={tps_dense:.0f}")
+
+    # -- scheduler: TTFT + mixed-queue end-to-end -------------------------
+    rng = np.random.default_rng(0)
+    warm = [Request(prompt=rng.integers(0, 256, size=PROMPT).astype(
+        np.int32), max_new_tokens=4) for _ in range(2)]
+    eng.generate(warm)                       # compile prefill/decode traces
+    sched = eng.scheduler
+    for k in sched.stats:
+        sched.stats[k] = type(sched.stats[k])(0)
+    reqs = [Request(prompt=rng.integers(0, 256, size=int(rng.integers(
+                16, PROMPT))).astype(np.int32),
+                    max_new_tokens=16) for _ in range(2 * BATCH)]
+    t0 = time.perf_counter()
+    out = eng.generate(reqs)
+    wall = time.perf_counter() - t0
+    ttft = float(np.mean([r.ttft_s for r in out]))
+    gen_tokens = int(sum(len(r.output) for r in out))
+    thr = sched.throughput()
+    csv.add("serve/ttft", ttft * 1e6, f"mean_over={len(out)}")
+    csv.add("serve/e2e_sched", wall / gen_tokens * 1e6,
+            f"gen_tok_s={gen_tokens / wall:.0f};"
+            f"prefill_tok_s={thr['prefill_tok_s']:.0f};"
+            f"decode_tok_s={thr['decode_tok_s']:.0f}")

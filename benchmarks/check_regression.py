@@ -1,0 +1,74 @@
+"""CI benchmark regression gate.
+
+Compares a fresh ``benchmarks.run --emit-json`` output against the
+committed baseline (benchmarks/BENCH_baseline.json) with a generous
+multiplicative tolerance — the gate exists to catch order-of-magnitude
+regressions on the measured hot paths, not single-digit-percent noise
+across heterogeneous CI hosts.
+
+  python -m benchmarks.check_regression BENCH_ci.json \
+      benchmarks/BENCH_baseline.json [--tol 2.0] [--prefixes kernels/,serve/]
+
+Also fails if any ``_meta/*`` entry in the current run reports an ERROR
+(a benchmark crashed), regardless of timing.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("current")
+    ap.add_argument("baseline")
+    ap.add_argument("--tol", type=float, default=2.0,
+                    help="fail when us_per_call > tol * baseline")
+    ap.add_argument("--prefixes", default="kernels/,serve/",
+                    help="comma-separated name prefixes gated on timing")
+    args = ap.parse_args(argv)
+
+    with open(args.current) as f:
+        cur = json.load(f)
+    with open(args.baseline) as f:
+        base = json.load(f)
+    prefixes = tuple(p for p in args.prefixes.split(",") if p)
+
+    failures = []
+    gated = 0
+    for name, rec in sorted(cur.items()):
+        if name.startswith("_meta/") and str(rec["derived"]).startswith(
+                "ERROR"):
+            failures.append(f"{name}: crashed ({rec['derived']})")
+    for name, brec in sorted(base.items()):
+        if not name.startswith(prefixes):
+            continue
+        crec = cur.get(name)
+        if crec is None:
+            print(f"WARN  {name}: missing from current run (not gated)")
+            continue
+        gated += 1
+        b, c = float(brec["us_per_call"]), float(crec["us_per_call"])
+        ratio = c / b if b > 0 else float("inf")
+        status = "FAIL" if ratio > args.tol else "ok"
+        print(f"{status:5s} {name}: {c:.1f}us vs baseline {b:.1f}us "
+              f"({ratio:.2f}x, tol {args.tol:.1f}x)")
+        if ratio > args.tol:
+            failures.append(f"{name}: {ratio:.2f}x slower than baseline")
+    if gated == 0:
+        # a row rename or an --only typo must not disable the gate silently
+        failures.append(f"no baseline rows matched prefixes {prefixes} in "
+                        f"the current run — gate measured nothing")
+
+    if failures:
+        print("\nregression gate FAILED:")
+        for msg in failures:
+            print(f"  - {msg}")
+        return 1
+    print("\nregression gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

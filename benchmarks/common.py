@@ -1,10 +1,9 @@
 """Shared helpers for the benchmark harness."""
 from __future__ import annotations
 
-import dataclasses
 import sys
 import time
-from typing import Callable, List, Tuple
+from typing import List, Tuple
 
 sys.path.insert(0, "src")
 

@@ -8,13 +8,17 @@
   bench_buffer         Fig. 12    buffer layers
   bench_kernels        (ours)     Pallas kernels vs oracles
   bench_roofline       (ours)     dry-run roofline aggregation
+  bench_serve          (ours)     continuous-batching serve engine
 
-Prints ``name,us_per_call,derived`` CSV.
+Prints ``name,us_per_call,derived`` CSV; ``--emit-json PATH`` also writes
+the rows as JSON for the CI regression gate (benchmarks.check_regression).
 Usage: PYTHONPATH=src python -m benchmarks.run [--only NAME] [--fast]
+           [--emit-json BENCH_ci.json]
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import time
 import traceback
@@ -23,8 +27,10 @@ sys.path.insert(0, "src")
 
 from benchmarks.common import CSV  # noqa: E402
 
-ALL = ("kernels", "roofline", "perf_report", "scaling", "dp_lp",
+ALL = ("kernels", "roofline", "perf_report", "scaling", "dp_lp", "serve",
        "convergence", "indicator", "buffer", "finetune_delta")
+
+FAST = ("kernels", "roofline", "perf_report", "scaling", "dp_lp", "serve")
 
 
 def main(argv=None) -> None:
@@ -32,13 +38,13 @@ def main(argv=None) -> None:
     ap.add_argument("--only", default="")
     ap.add_argument("--fast", action="store_true",
                     help="skip the training-dynamics benchmarks")
+    ap.add_argument("--emit-json", default="",
+                    help="also write results to this JSON file")
     args = ap.parse_args(argv)
 
     names = [n for n in ALL if not args.only or n in args.only.split(",")]
     if args.fast:
-        names = [n for n in names
-                 if n in ("kernels", "roofline", "perf_report", "scaling",
-                          "dp_lp")]
+        names = [n for n in names if n in FAST]
     csv = CSV()
     for name in names:
         mod = __import__(f"benchmarks.bench_{name}", fromlist=["run"])
@@ -52,6 +58,11 @@ def main(argv=None) -> None:
                     f"ERROR={type(e).__name__}")
     print("name,us_per_call,derived")
     csv.emit()
+    if args.emit_json:
+        payload = {n: {"us_per_call": us, "derived": derived}
+                   for n, us, derived in csv.rows}
+        with open(args.emit_json, "w") as f:
+            json.dump(payload, f, indent=1, sort_keys=True)
 
 
 if __name__ == "__main__":

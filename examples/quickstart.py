@@ -4,7 +4,6 @@ encoder-only neural-ODE transformer (the paper's MC setup, reduced).
 Run:  PYTHONPATH=src python examples/quickstart.py [--steps 100]
 """
 import argparse
-import dataclasses
 import sys
 
 import numpy as np

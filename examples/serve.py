@@ -1,4 +1,8 @@
-"""Serve a small model with batched requests (prefill + KV-cache decode).
+"""Serve a small model with the continuous-batching engine.
+
+A queue of mixed-length requests streams through chunked prefill into the
+paged KV cache; the scheduler keeps the decode slots full and reports
+per-request latency plus aggregate throughput.
 
 Run:  PYTHONPATH=src python examples/serve.py
 """
@@ -18,20 +22,31 @@ from repro.serve.engine import Request, ServeEngine
 def main():
     rcfg = reduce_config(registry.get_config("qwen3_1p7b"))
     params = transformer.init_model(jax.random.PRNGKey(0), rcfg)
-    engine = ServeEngine(rcfg, params, max_len=64)
+    engine = ServeEngine(rcfg, params, max_len=64, max_batch=4, page_size=8)
+    print(f"engine: paged={engine.paged} "
+          f"(pool: {engine.scheduler.alloc.n_pages} pages x "
+          f"{engine.scheduler.page_size} tokens)")
 
+    # 10 mixed-length requests through 4 decode slots
     rng = np.random.default_rng(0)
     reqs = [Request(prompt=rng.integers(0, rcfg.model.vocab_size,
-                                        size=rng.integers(4, 12)).astype(
+                                        size=int(rng.integers(4, 24))).astype(
                         np.int32),
-                    max_new_tokens=8) for _ in range(4)]
+                    max_new_tokens=int(rng.integers(4, 12)))
+            for _ in range(10)]
     out = engine.generate(reqs)
     for i, r in enumerate(out):
-        print(f"request {i}: prompt[{len(r.prompt)}] -> "
-              f"generated {list(map(int, r.output))}")
+        print(f"request {i}: prompt[{len(r.prompt):2d}] -> "
+              f"{list(map(int, r.output))}  "
+              f"ttft={r.ttft_s*1e3:6.1f}ms  lat={r.latency_s*1e3:6.1f}ms")
 
-    tps = engine.throughput_probe(batch=8, steps=8)
-    print(f"steady-state decode throughput (CPU, batch 8): {tps:.1f} tok/s")
+    thr = engine.scheduler.throughput()
+    print(f"aggregate: prefill {thr['prefill_tok_s']:.1f} tok/s, "
+          f"decode {thr['decode_tok_s']:.1f} tok/s")
+    tps = engine.throughput_probe(batch=4, steps=8)
+    print(f"steady-state decode probe (batch 4): {tps:.1f} tok/s")
+    print(f"chunked-prefill probe (64-tok prompt): "
+          f"{engine.prefill_probe(64):.0f} tok/s")
 
 
 if __name__ == "__main__":

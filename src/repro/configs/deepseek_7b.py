@@ -1,6 +1,5 @@
 """deepseek-7b [dense]: 30L d_model=4096 32H (GQA kv=32) d_ff=11008
 vocab=102400 — llama-arch [arXiv:2401.02954; hf]."""
-import dataclasses
 
 from repro.configs.base import MGRITConfig, ModelConfig, RunConfig
 from repro.configs import registry

@@ -8,10 +8,10 @@ from __future__ import annotations
 
 import dataclasses
 import importlib
-from typing import Dict, Optional
+from typing import Optional
 
-from repro.configs.base import (MGRITConfig, ModelConfig, RunConfig,
-                                SHAPE_BY_NAME, ShardingConfig)
+from repro.configs.base import (RunConfig, SHAPE_BY_NAME,
+                                ShardingConfig)
 
 ARCH_IDS = (
     "zamba2_1p2b",

@@ -25,7 +25,6 @@ CONFIG = RunConfig(model=MODEL, mgrit=MGRIT,
 
 
 def sharding_for(shape):
-    import dataclasses
     if shape.kind == "train":
         return registry.tp_sharding()
     return registry.decode_sharding(long_context=shape.name == "long_500k")

@@ -23,8 +23,7 @@ L, one call to :func:`_vcycle` is one MGRIT V-cycle iteration.
 from __future__ import annotations
 
 import dataclasses
-import functools
-from typing import Any, Callable, Optional, Sequence, Tuple
+from typing import Any, Callable, Optional, Tuple
 
 import jax
 import jax.numpy as jnp

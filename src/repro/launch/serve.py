@@ -1,11 +1,14 @@
-"""Serving launcher: batched generation with the ServeEngine.
+"""Serving launcher: continuous-batching generation with the ServeEngine.
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1p7b \
-      [--reduced] [--batch 4] [--new-tokens 8] [--max-len 64]
+      [--reduced] [--requests 12] [--new-tokens 8] \
+      [--max-batch 4] [--page-size 16] [--max-len 256]
 
-On the production meshes, serving shards with Megatron TP + flash-decoding
-KV-seq sharding (configs/registry.decode_sharding); on this CPU container
-use --reduced.
+Decoder attention archs run the paged continuous-batching engine (chunked
+prefill + paged KV + slot scheduler); SSM/hybrid/encdec fall back to the
+dense fixed-batch engine. On the production meshes, serving shards with
+Megatron TP + flash-decoding KV-seq sharding
+(configs/registry.decode_sharding); on this CPU container use --reduced.
 """
 from __future__ import annotations
 
@@ -19,8 +22,13 @@ def main(argv=None):
     ap = argparse.ArgumentParser()
     ap.add_argument("--arch", required=True)
     ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="number of queued requests")
     ap.add_argument("--new-tokens", type=int, default=8)
+    ap.add_argument("--max-batch", type=int, default=4,
+                    help="in-flight decode slots")
+    ap.add_argument("--page-size", type=int, default=16,
+                    help="KV-cache page size (tokens)")
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="", help="restore params from here")
@@ -43,17 +51,28 @@ def main(argv=None):
             params = restored[0]
             print(f"restored params from step {restored[2]}")
 
-    engine = ServeEngine(rcfg, params, max_len=args.max_len)
+    engine = ServeEngine(rcfg, params, max_len=args.max_len,
+                         max_batch=args.max_batch,
+                         page_size=args.page_size)
+    print(f"engine: {'paged continuous-batching' if engine.paged else 'dense fixed-batch'}")
     rng = np.random.default_rng(args.seed)
     reqs = [Request(prompt=rng.integers(
                 0, rcfg.model.vocab_size,
                 size=int(rng.integers(4, 12))).astype(np.int32),
                     max_new_tokens=args.new_tokens)
-            for _ in range(args.batch)]
+            for _ in range(args.requests)]
     for i, r in enumerate(engine.generate(reqs)):
+        lat = f" ttft={r.ttft_s*1e3:.0f}ms lat={r.latency_s*1e3:.0f}ms" \
+            if r.ttft_s is not None else ""
         print(f"request {i}: prompt[{len(r.prompt)}] -> "
-              f"{list(map(int, r.output))}")
-    print(f"throughput: {engine.throughput_probe(args.batch):.1f} tok/s")
+              f"{list(map(int, r.output))}{lat}")
+    if engine.paged:
+        thr = engine.scheduler.throughput()
+        print(f"aggregate: prefill {thr['prefill_tok_s']:.1f} tok/s, "
+              f"decode {thr['decode_tok_s']:.1f} tok/s "
+              f"({thr['decode_steps']:.0f} decode steps)")
+    print(f"steady-state decode probe: "
+          f"{engine.throughput_probe(args.max_batch):.1f} tok/s")
     return 0
 
 

@@ -2,8 +2,7 @@
 GSPMD shardings derived from the config's logical-axis rules."""
 from __future__ import annotations
 
-import functools
-from typing import Any, Optional, Tuple
+from typing import Optional
 
 import jax
 import jax.numpy as jnp
@@ -73,8 +72,18 @@ def make_prefill_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
     return prefill_step
 
 
-def make_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
-    """One-token decode against a seq_len KV/SSM cache (greedy)."""
+def make_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh], paged: bool = False):
+    """Greedy decode step builder.
+
+    Dense (default): (params, cache, tokens (B,T)) -> (next (B,1), cache).
+    T > 1 chunk-prefills the prompt into the cache in one call.
+    ``paged=True``: decode against the shared page pool with explicit
+    cache-page indices and an occupancy mask (n_new == 0 -> empty slot):
+    (params, pages, tokens (B,S), lengths, n_new, page_table) ->
+    (next (B,1), pages).
+    """
+    if paged:
+        return make_paged_serve_fn(rcfg, mesh)
     encdec = rcfg.model.family == "encdec"
 
     def serve_step(params, cache, tokens, xa=None):
@@ -89,6 +98,23 @@ def make_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
     if not encdec:
         return lambda params, cache, tokens: serve_step(params, cache, tokens)
     return serve_step
+
+
+def make_paged_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
+    """Paged-cache step: one jitted function serves both chunked prefill
+    (S = prompt bucket) and steady-state decode (S = 1); slot occupancy is
+    the ``n_new`` mask, so admissions/evictions never retrace."""
+
+    def paged_serve_step(params, pages, tokens, lengths, n_new, page_table):
+        ctx = axis_rules(mesh, rcfg.sharding) if mesh is not None else \
+            _nullctx()
+        with ctx:
+            logits, pages2 = transformer.paged_decode_step(
+                params, pages, tokens, lengths, n_new, page_table, rcfg)
+            nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+        return nxt[:, None], pages2
+
+    return paged_serve_step
 
 
 class _nullctx:

@@ -56,7 +56,9 @@ def dot_attention(q, k, v, *, causal: bool, q_offset=0,
     """Reference dense GQA attention.
 
     q: (B, Sq, H, hd); k, v: (B, Sk, Hkv, hd). ``q_offset`` is the absolute
-    position of q[.., 0] for causal masking against a longer k (KV cache).
+    position of q[.., 0] for causal masking against a longer k (KV cache) —
+    a scalar, or a (B,) array when each batch slot has its own position
+    (paged serving, no left-padding).
     """
     B, Sq, H, hd = q.shape
     Hkv = k.shape[2]
@@ -67,10 +69,12 @@ def dot_attention(q, k, v, *, causal: bool, q_offset=0,
                         k.astype(jnp.float32)) * scale
     if causal:
         Sk = k.shape[1]
-        qpos = jnp.arange(Sq)[:, None] + q_offset
-        kpos = jnp.arange(Sk)[None, :]
-        mask = qpos >= kpos
-        logits = jnp.where(mask[None, None, None], logits, -1e30)
+        qoff = jnp.asarray(q_offset)
+        qpos = qoff[..., None] + jnp.arange(Sq)       # (Sq,) or (B, Sq)
+        kpos = jnp.arange(Sk)
+        mask = qpos[..., :, None] >= kpos             # (.., Sq, Sk)
+        mask = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+        logits = jnp.where(mask, logits, -1e30)
     probs = jax.nn.softmax(logits, axis=-1)
     out = jnp.einsum("bhgqs,bshk->bqhgk", probs.astype(v.dtype), v)
     return out.reshape(B, Sq, H, hd)
@@ -199,3 +203,75 @@ def init_kv_cache(cfg: ModelConfig, batch: int, max_len: int, n_layers: int):
         "v": jnp.zeros((n_layers, batch, max_len, cfg.n_kv_heads, hd), dt),
         "index": jnp.zeros((), jnp.int32),
     }
+
+
+# ---------------------------------------------------------------------------
+# Paged KV cache (serving)
+# ---------------------------------------------------------------------------
+#
+# Instead of one dense (B, max_len) cache per batch slot, K/V live in a pool
+# of fixed-size pages shared by all sequences. A per-slot page table maps
+# logical page p of slot b to a physical page id; finished sequences return
+# their pages to the free list immediately (repro.serve.kv_pages). Page 0 is
+# a scratch page that absorbs writes from padded prompt positions and
+# unoccupied slots, so the jitted step needs no data-dependent shapes.
+
+
+def init_paged_kv_cache(cfg: ModelConfig, n_layers: int, n_pages: int,
+                        page_size: int):
+    """Page pool stacked over layers: (L, n_pages, page_size, Hkv, hd)."""
+    hd = cfg.resolved_head_dim
+    dt = jnp.dtype(cfg.dtype)
+    shape = (n_layers, n_pages, page_size, cfg.n_kv_heads, hd)
+    return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
+
+
+def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
+                          page_table, lengths, n_new):
+    """Self-attention reading/writing one layer's page pool.
+
+    x: (B, S, D) new-token activations. Slot b contributes ``n_new[b] <= S``
+    real tokens at absolute positions ``lengths[b] .. lengths[b]+n_new[b]-1``
+    — every slot has its own coordinate system starting at 0, so there is no
+    left-padding and ``n_new == 0`` marks an unoccupied slot (occupancy
+    mask). rope: (cos, sin) of shape (B, S, hd/2) for those positions.
+    pk/pv: (n_pages, page_size, Hkv, hd). page_table: (B, P) int32.
+    Returns (y, new_pk, new_pv).
+    """
+    dt = jnp.dtype(cfg.dtype)
+    x = x.astype(dt)
+    q, k, v = _project_qkv(params, x, None, cfg)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+
+    B, S = x.shape[:2]
+    n_pages, page_size = pk.shape[0], pk.shape[1]
+    P = page_table.shape[1]
+    pos = lengths[:, None] + jnp.arange(S)[None, :]               # (B, S)
+    valid = jnp.arange(S)[None, :] < n_new[:, None]               # (B, S)
+    slot = jnp.clip(pos // page_size, 0, P - 1)
+    phys = jnp.take_along_axis(page_table, slot, axis=1)          # (B, S)
+    # invalid writes (prompt padding / idle slots) all land in scratch page 0
+    flat = jnp.where(valid, phys * page_size + pos % page_size, 0)
+    flat = flat.reshape(-1)
+    pk_flat = pk.reshape(n_pages * page_size, *pk.shape[2:])
+    pv_flat = pv.reshape(n_pages * page_size, *pv.shape[2:])
+    pk_flat = pk_flat.at[flat].set(k.astype(pk.dtype).reshape(
+        B * S, *k.shape[2:]))
+    pv_flat = pv_flat.at[flat].set(v.astype(pv.dtype).reshape(
+        B * S, *v.shape[2:]))
+
+    # per-slot dense view in logical order: (B, P*page_size, Hkv, hd)
+    gather = (page_table[:, :, None] * page_size
+              + jnp.arange(page_size)[None, None, :]).reshape(B, -1)
+    kd = pk_flat[gather]
+    vd = pv_flat[gather]
+
+    # keys gathered in logical order sit at absolute positions 0..cap-1;
+    # garbage beyond a slot's written length always has kpos > qpos and
+    # masks out under the per-slot causal offset
+    with jax.named_scope("paged_attn_core"):
+        out = dot_attention(q, kd, vd, causal=True, q_offset=lengths)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    return y, pk_flat.reshape(pk.shape), pv_flat.reshape(pv.shape)

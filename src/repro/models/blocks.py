@@ -86,13 +86,18 @@ def block_F(params, z, cfg: ModelConfig, *, kind: str, causal: bool,
         f = ybar + mlp_apply(params["mlp"], mlp_in, cfg)
         return f, new_cache
 
-    # F = phi1 + phi2(z + phi1)
+    return attn_block_F(params, z, a, cfg, kind=kind), new_cache
+
+
+def attn_block_F(params, z, a, cfg: ModelConfig, *, kind: str):
+    """F = phi1 + phi2(z + phi1) given the attention output ``a`` = phi1(z).
+    Single owner of the attn_mlp/attn_moe block formula — also used by the
+    paged serving path (transformer.paged_decode_step), which computes the
+    attention differently but must keep the same block form."""
     h_in = norm_apply(params["ln2"], z + a, cfg)
     if kind == "attn_moe":
-        f = a + moe_apply(params["moe"], h_in, cfg)
-    else:
-        f = a + mlp_apply(params["mlp"], h_in, cfg)
-    return f, new_cache
+        return a + moe_apply(params["moe"], h_in, cfg)
+    return a + mlp_apply(params["mlp"], h_in, cfg)
 
 
 def block_step(params, z, cfg: ModelConfig, *, kind: str, causal: bool,

@@ -17,17 +17,18 @@ Structure of params:
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, Optional, Tuple
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
 
 from repro.configs.base import MGRITConfig, ModelConfig, RunConfig
 from repro.core import lp, mgrit
-from repro.core.lp import LPStatic, lp_forward, make_fwd_step, pad_depth
+from repro.core.lp import LPStatic, lp_forward, pad_depth
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
-from repro.models.blocks import block_F, block_kind, block_step, init_block
+from repro.models.blocks import (attn_block_F, block_kind, block_step,
+                                 init_block)
 from repro.models.layers import (embed_tokens, init_embedding, init_norm,
                                  norm_apply, rope_freqs, unembed)
 from repro.parallel.sharding import logical_constraint
@@ -277,11 +278,20 @@ def init_cache(rcfg: RunConfig, batch: int, max_len: int):
 
 
 def decode_step(params, cache, tokens, rcfg: RunConfig, xa=None):
-    """One-token decode: tokens (B, 1). Returns (logits, new_cache).
+    """Cached decode: tokens (B, T). Returns (logits, new_cache).
+
+    T == 1 is the steady-state decode step. T > 1 is **chunked prefill**:
+    the whole prompt chunk is written into the KV cache by one jitted call
+    (attention kinds only — SSM caches advance one token at a time).
     Serial layer scan with per-layer cache slices (serving uses TP; the
     paper's LP targets training — DESIGN.md §6)."""
     cfg = rcfg.model
     kind = block_kind(cfg)
+    if tokens.shape[1] != 1 and (cfg.family == "hybrid"
+                                 or kind in ("mamba1", "mamba2")):
+        raise NotImplementedError(
+            "chunked prefill requires attention blocks; SSM/hybrid caches "
+            "advance token-by-token")
     z = embed_tokens(params["embed"], tokens, cfg)
     z = logical_constraint(z, ("batch", "seq", "embed"))
 
@@ -298,12 +308,9 @@ def decode_step(params, cache, tokens, rcfg: RunConfig, xa=None):
 
     if dkind in ("mamba1", "mamba2"):
         rope = None
-        idx = None
     else:
-        idx = cache["index"]
-        pos = idx[None] if idx.ndim == 0 else idx
-        rope = rope_freqs(cfg.resolved_head_dim, cfg.rope_theta,
-                          jnp.atleast_1d(pos))
+        pos = cache["index"] + jnp.arange(tokens.shape[1])
+        rope = rope_freqs(cfg.resolved_head_dim, cfg.rope_theta, pos)
 
     def step(z, xs):
         p, gate, layer_cache = xs
@@ -322,7 +329,7 @@ def decode_step(params, cache, tokens, rcfg: RunConfig, xa=None):
     z, new_layer_caches = jax.lax.scan(step, z, (stacked, gates, layer_caches))
     new_cache = dict(new_layer_caches)
     if "index" in cache:
-        new_cache["index"] = cache["index"] + 1
+        new_cache["index"] = cache["index"] + tokens.shape[1]
     z = norm_apply(params["final_norm"], z, cfg)
     logits = unembed(params["embed"], z, cfg)
     return logits, new_cache
@@ -372,3 +379,63 @@ def prefill(params, batch, rcfg: RunConfig):
     the chained decode is handled by the serving engine (repro.serve)."""
     logits, _ = forward(params, batch, rcfg, mode="serial")
     return logits
+
+
+# ---------------------------------------------------------------------------
+# Paged serving: block/paged KV cache + occupancy-masked step
+# ---------------------------------------------------------------------------
+
+
+def paged_decode_supported(cfg: ModelConfig) -> bool:
+    """The paged path covers attention-block families with a causal LM
+    decode (SSM/hybrid/encdec fall back to the dense-cache engine)."""
+    return cfg.family == "decoder" and block_kind(cfg) in ("attn_mlp",
+                                                           "attn_moe")
+
+
+def init_paged_cache(rcfg: RunConfig, n_pages: int, page_size: int):
+    """Page pool sized for the full serial layer stack (open+mid+close)."""
+    cfg = rcfg.model
+    plan = depth_plan(cfg.n_layers, rcfg.mgrit)
+    n = plan.n_open + plan.n_mid_padded + plan.n_close
+    return attn_mod.init_paged_kv_cache(cfg, n, n_pages, page_size)
+
+
+def paged_decode_step(params, pages, tokens, lengths, n_new, page_table,
+                      rcfg: RunConfig):
+    """Batched step against the shared page pool — static shapes, dynamic
+    occupancy.
+
+    tokens: (B, S). S == 1 in steady-state decode; S == the prompt bucket
+    during chunked prefill (one call writes the whole chunk). Slot b holds
+    ``lengths[b]`` cached tokens and contributes ``n_new[b] <= S`` new ones;
+    ``n_new[b] == 0`` marks an empty slot, so the same compiled step serves
+    any occupancy without retracing. Returns (last_logits (B, V) at each
+    slot's final real token, new_pages).
+    """
+    cfg = rcfg.model
+    kind = block_kind(cfg)
+    if kind not in ("attn_mlp", "attn_moe"):
+        raise NotImplementedError("paged decode requires attention blocks")
+    stacked, gates = _all_layers_stacked(params, cfg)
+    S = tokens.shape[1]
+    pos = lengths[:, None] + jnp.arange(S)[None, :]
+    rope = rope_freqs(cfg.resolved_head_dim, cfg.rope_theta, pos)
+    z = embed_tokens(params["embed"], tokens, cfg)
+
+    def step(z, xs):
+        p, gate, (pk, pv) = xs
+        a, npk, npv = attn_mod.paged_attention_apply(
+            p["attn"], norm_apply(p["ln1"], z, cfg), cfg, rope=rope,
+            pk=pk, pv=pv, page_table=page_table, lengths=lengths,
+            n_new=n_new)
+        f = attn_block_F(p, z, a, cfg, kind=kind)
+        return z + gate.astype(z.dtype) * f, (npk, npv)
+
+    z, (nk, nv) = jax.lax.scan(step, z, (stacked, gates,
+                                         (pages["k"], pages["v"])))
+    z = norm_apply(params["final_norm"], z, cfg)
+    last = jnp.maximum(n_new - 1, 0)
+    z_last = jnp.take_along_axis(z, last[:, None, None], axis=1)
+    logits = unembed(params["embed"], z_last, cfg)[:, 0]
+    return logits, {"k": nk, "v": nv}

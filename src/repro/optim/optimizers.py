@@ -7,7 +7,6 @@ fit the single-pod HBM budget (see EXPERIMENTS.md §Dry-run).
 """
 from __future__ import annotations
 
-import dataclasses
 from typing import Any, Tuple
 
 import jax

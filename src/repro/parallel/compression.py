@@ -9,7 +9,7 @@ EF-SGD/PowerSGD-style trick. Enabled per-config via
 """
 from __future__ import annotations
 
-from typing import Any, Tuple
+from typing import Tuple
 
 import jax
 import jax.numpy as jnp

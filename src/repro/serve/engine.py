@@ -1,9 +1,17 @@
-"""Batched serving engine: prefill + KV-cache decode.
+"""Continuous-batching serving engine.
 
-Continuous-batching-lite: requests are grouped into a fixed batch, prefilled
-teacher-forced (one forward), then decoded token-by-token with the jitted
-serve step. Serving shards with Megatron TP (+ kv_seq sharding for long
-contexts) — the paper's layer-parallelism targets training (DESIGN.md §6).
+Decoder-family attention models take the paged path: **chunked prefill**
+(whole prompt -> KV pages in one jitted call), a **block/paged KV cache**
+(fixed-size pages + free-list allocator, sequences of different lengths
+share one pool), and the **scheduler** (admit from queue into in-flight
+decode slots, evict finished sequences mid-decode, refill without
+recompiling — static batch shape, dynamic occupancy mask).
+
+SSM / hybrid / encdec families fall back to the seed-style dense-cache
+batch engine (their recurrent caches advance token-by-token), still sharing
+the jitted greedy decode step. Serving shards with Megatron TP (+ kv_seq
+sharding for long contexts) — the paper's layer-parallelism targets
+training (DESIGN.md §6).
 """
 from __future__ import annotations
 
@@ -18,58 +26,128 @@ import numpy as np
 from repro.configs.base import RunConfig
 from repro.launch import steps as steps_mod
 from repro.models import transformer
+from repro.serve.scheduler import Scheduler, bucket_len
 
 
 @dataclasses.dataclass
 class Request:
+    """One generation request. Generation stops early at ``eos_id`` and is
+    capped so prompt + output never exceeds the engine's max_len — len(
+    output) can be < max_new_tokens in both cases (on every engine path)."""
     prompt: np.ndarray           # (T,) int32
     max_new_tokens: int = 16
+    eos_id: Optional[int] = None
     output: Optional[np.ndarray] = None
+    ttft_s: Optional[float] = None      # time to first token
+    latency_s: Optional[float] = None
 
 
 class ServeEngine:
     def __init__(self, rcfg: RunConfig, params, mesh=None,
-                 max_len: int = 0):
+                 max_len: int = 0, max_batch: int = 8, page_size: int = 16):
         self.rcfg = rcfg
         self.params = params
         self.mesh = mesh
         self.max_len = max_len or min(rcfg.model.max_seq_len, 4096)
+        self.paged = transformer.paged_decode_supported(rcfg.model)
         self._decode = jax.jit(steps_mod.make_serve_fn(rcfg, mesh))
-        self._prefill_logits = jax.jit(
-            lambda p, b: transformer.forward(p, b, rcfg, mode="serial")[0])
+        if self.paged:
+            self.scheduler = Scheduler(
+                rcfg, params, max_batch=max_batch, page_size=page_size,
+                max_len=self.max_len, mesh=mesh)
+        else:
+            self.scheduler = None
 
-    def _prefill_into_cache(self, tokens: jnp.ndarray):
-        """Feed the prompt through the decode step token-by-token to
-        populate the cache (simple and exactly consistent with decode).
-        Returns (cache, last_logits_argmax)."""
-        B, T = tokens.shape
-        cache = transformer.init_cache(self.rcfg, B, self.max_len)
-        nxt = None
-        for t in range(T):
-            nxt, cache = self._decode(self.params, cache, tokens[:, t:t + 1])
-        return cache, nxt
+    # -- generation ---------------------------------------------------------
 
     def generate(self, requests: List[Request]) -> List[Request]:
+        # validate the whole batch before any request is queued, so a bad
+        # request can't leave earlier ones orphaned in the scheduler
+        for r in requests:
+            if r.max_new_tokens < 1:       # same contract on both paths
+                raise ValueError("max_new_tokens must be >= 1")
+            if len(r.prompt) >= self.max_len:
+                raise ValueError(f"prompt ({len(r.prompt)}) >= max_len "
+                                 f"({self.max_len})")
+        if self.paged:
+            return self._generate_paged(requests)
+        return self._generate_dense(requests)
+
+    def _generate_paged(self, requests: List[Request]) -> List[Request]:
+        sched = self.scheduler
+        rids = [sched.submit(r.prompt, r.max_new_tokens, r.eos_id)
+                for r in requests]
+        done = sched.run()
+        for r, rid in zip(requests, rids):
+            fin = done.pop(rid)
+            r.output = np.asarray(fin.out, np.int32)
+            r.ttft_s = fin.ttft
+            r.latency_s = fin.latency
+        return requests
+
+    def _generate_dense(self, requests: List[Request]) -> List[Request]:
+        """Fixed-batch fallback: left-pad to one rectangle, prefill, then
+        lock-step decode (the dense cache has one shared write index)."""
         B = len(requests)
         T = max(len(r.prompt) for r in requests)
+        t0 = time.perf_counter()
         toks = np.zeros((B, T), np.int32)
         for i, r in enumerate(requests):
             toks[i, T - len(r.prompt):] = r.prompt    # left-pad
         tokens = jnp.asarray(toks)
-        cache, nxt = self._prefill_into_cache(tokens)
-        max_new = max(r.max_new_tokens for r in requests)
-        outs = [nxt]
-        cur = nxt
+        cache = transformer.init_cache(self.rcfg, B, self.max_len)
+        cur, cache = self._prefill_into_cache(tokens, cache)
+        jax.block_until_ready(cur)
+        t_first = time.perf_counter()
+        # same cap as Scheduler.submit: the shared write index means the
+        # longest (left-padded) row bounds everyone
+        max_new = min(max(r.max_new_tokens for r in requests),
+                      self.max_len - T)
+        outs = [cur]
         for _ in range(max_new - 1):
             cur, cache = self._decode(self.params, cache, cur)
             outs.append(cur)
+        jax.block_until_ready(cur)
+        t_done = time.perf_counter()
         gen = np.concatenate([np.asarray(o) for o in outs], axis=1)
         for i, r in enumerate(requests):
-            r.output = gen[i, : r.max_new_tokens]
+            out = gen[i, : r.max_new_tokens]
+            if r.eos_id is not None:
+                hits = np.nonzero(out == r.eos_id)[0]
+                if hits.size:          # include the EOS token, then stop
+                    out = out[: hits[0] + 1]
+            r.output = out
+            r.ttft_s = t_first - t0
+            r.latency_s = t_done - t0
         return requests
 
-    def throughput_probe(self, batch: int, steps: int = 8) -> float:
-        """tokens/sec of steady-state decode at the given batch."""
+    def _prefill_into_cache(self, tokens: jnp.ndarray, cache):
+        """Chunked prefill for attention kinds: the whole prompt goes
+        through ONE jitted decode call (O(1) calls, not O(T)). SSM caches
+        advance token-by-token, so those families keep the loop."""
+        from repro.models.blocks import block_kind
+        kind = block_kind(self.rcfg.model)
+        if kind in ("attn_mlp", "attn_moe") \
+                and self.rcfg.model.family != "encdec":
+            return self._decode(self.params, cache, tokens)
+        nxt = None
+        for t in range(tokens.shape[1]):
+            nxt, cache = self._decode(self.params, cache, tokens[:, t:t + 1])
+        return nxt, cache
+
+    # -- probes -------------------------------------------------------------
+
+    def throughput_probe(self, batch: int, steps: int = 8,
+                         paged: Optional[bool] = None) -> float:
+        """tokens/sec of steady-state decode at the given batch. ``paged``
+        overrides the engine's default path (False -> dense cache even on a
+        paged engine, for apples-to-apples comparison)."""
+        use_paged = self.paged if paged is None else paged
+        if use_paged and not self.paged:
+            raise ValueError("engine is not paged (non-decoder/attention "
+                             "family); cannot probe the paged path")
+        if use_paged:
+            return self._paged_probe(batch, steps)
         cache = transformer.init_cache(self.rcfg, batch, self.max_len)
         tok = jnp.ones((batch, 1), jnp.int32)
         tok, cache = self._decode(self.params, cache, tok)  # compile
@@ -79,3 +157,67 @@ class ServeEngine:
             tok, cache = self._decode(self.params, cache, tok)
         jax.block_until_ready(tok)
         return batch * steps / (time.time() - t0)
+
+    def _scratch_table(self, batch: int, n_tokens: int) -> np.ndarray:
+        """Page table giving every slot n_tokens of capacity (host-only;
+        page 0 stays the scratch page)."""
+        per = max(1, -(-n_tokens // self.scheduler.page_size))
+        return np.asarray(
+            1 + np.arange(batch * per).reshape(batch, per), np.int32)
+
+    def _scratch_pages(self, table: np.ndarray):
+        """Fresh probe-local device pool sized for ``table``."""
+        return transformer.init_paged_cache(
+            self.rcfg, 1 + table.size, self.scheduler.page_size)
+
+    def _paged_probe(self, batch: int, steps: int) -> float:
+        """Steady-state paged decode at full occupancy on a scratch pool.
+        Reuses the scheduler's cached jitted step (no retrace per probe)."""
+        table = self._scratch_table(batch, steps + 1)
+        pages = self._scratch_pages(table)
+        fn = self.scheduler._step
+        tok = np.ones((batch, 1), np.int32)
+        n_new = np.ones((batch,), np.int32)
+        lengths = np.zeros((batch,), np.int32)
+        tok, pages = fn(self.params, pages, tok, lengths, n_new, table)
+        jax.block_until_ready(tok)
+        t0 = time.time()
+        for _ in range(steps):
+            lengths = lengths + 1
+            tok, pages = fn(self.params, pages, tok, lengths, n_new, table)
+        jax.block_until_ready(tok)
+        return batch * steps / (time.time() - t0)
+
+    def prefill_probe(self, prompt_len: int, batch: int = 1,
+                      iters: int = 3) -> float:
+        """tokens/sec of prefill at the given prompt length: one chunked
+        call on the paged engine, the sequential per-token loop on the
+        dense fallback (SSM-family caches advance token-by-token)."""
+        rcfg = self.rcfg
+        S = bucket_len(prompt_len)
+        rng = np.random.default_rng(0)
+        toks = rng.integers(0, rcfg.model.vocab_size, (batch, S),
+                            dtype=np.int32)
+        if self.paged:
+            table = self._scratch_table(batch, S)
+            n_new = np.full((batch,), prompt_len, np.int32)
+            lengths = np.zeros((batch,), np.int32)
+            fn = self.scheduler._step
+
+            def call():
+                pages = self._scratch_pages(table)
+                return fn(self.params, pages, toks, lengths, n_new, table)
+        else:
+            def call():
+                cache = transformer.init_cache(rcfg, batch, self.max_len)
+                return self._prefill_into_cache(
+                    jnp.asarray(toks[:, :prompt_len]), cache)
+        out = call()
+        jax.block_until_ready(out)
+        ts = []
+        for _ in range(iters):
+            t0 = time.perf_counter()
+            out = call()
+            jax.block_until_ready(out)
+            ts.append(time.perf_counter() - t0)
+        return batch * prompt_len / float(np.median(ts))

@@ -1,0 +1,51 @@
+"""Host-side bookkeeping for the block/paged KV cache.
+
+The device tensors live in :func:`repro.models.attention.init_paged_kv_cache`
+(a pool of fixed-size pages shared by every sequence, stacked over layers).
+This module owns the free-list allocator and the capacity math: the
+scheduler allocates ``pages_needed(prompt + max_new)`` physical pages when a
+request is admitted and returns them the moment it finishes, so sequences
+of different lengths share one pool with no per-slot max_len reservation.
+
+Page ``SCRATCH_PAGE`` (id 0) is never allocated: the jitted step routes
+writes from padded prompt positions and unoccupied slots there, which keeps
+every shape static regardless of occupancy.
+"""
+from __future__ import annotations
+
+from typing import List, Optional
+
+SCRATCH_PAGE = 0
+
+
+def pages_needed(n_tokens: int, page_size: int) -> int:
+    """Physical pages required to hold n_tokens."""
+    return -(-max(int(n_tokens), 0) // page_size)
+
+
+class PageAllocator:
+    """LIFO free-list over physical page ids 1..n_pages-1 (0 is scratch)."""
+
+    def __init__(self, n_pages: int):
+        if n_pages < 2:
+            raise ValueError("need at least one allocatable page + scratch")
+        self.n_pages = n_pages
+        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+
+    @property
+    def n_free(self) -> int:
+        return len(self._free)
+
+    def alloc(self, n: int) -> Optional[List[int]]:
+        """Pop n pages, or None (caller waits for frees) if not available."""
+        if n > len(self._free):
+            return None
+        return [self._free.pop() for _ in range(n)]
+
+    def free(self, pages: List[int]) -> None:
+        for p in pages:
+            if not 0 < p < self.n_pages:
+                raise ValueError(f"bad page id {p}")
+            if p in self._free:
+                raise ValueError(f"double free of page {p}")
+            self._free.append(p)

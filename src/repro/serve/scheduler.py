@@ -1,0 +1,233 @@
+"""Continuous-batching scheduler over the paged KV cache.
+
+The decode step always runs with a static (max_batch, 1) shape; which slots
+are alive is the ``n_new`` occupancy mask, so admitting or evicting a
+request never recompiles. One scheduler iteration:
+
+  1. admit — pop queued requests into free slots while the page pool has
+     room: allocate pages for prompt+max_new tokens, then **chunked
+     prefill** writes the whole prompt into the pages with one jitted call
+     (prompt length padded to a power-of-two bucket, so compile count is
+     O(log max_len), not O(T)); the prefill logits yield the first token.
+  2. decode — one lock-step call over all occupied slots.
+  3. reap — finished sequences (max_new reached or EOS) release their
+     pages and slot immediately; the next iteration refills them.
+
+Greedy sampling, matching the seed engine.
+"""
+from __future__ import annotations
+
+import collections
+import dataclasses
+import time
+from typing import Deque, Dict, List, Optional
+
+import jax
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.launch import steps as steps_mod
+from repro.models import transformer
+from repro.serve.kv_pages import SCRATCH_PAGE, PageAllocator, pages_needed
+
+
+@dataclasses.dataclass
+class ScheduledRequest:
+    rid: int
+    prompt: np.ndarray               # (T,) int32
+    max_new_tokens: int
+    eos_id: Optional[int] = None
+    out: List[int] = dataclasses.field(default_factory=list)
+    t_submit: float = 0.0
+    t_first: float = 0.0             # first token produced (end of prefill)
+    t_done: float = 0.0
+
+    @property
+    def ttft(self) -> float:
+        return self.t_first - self.t_submit
+
+    @property
+    def latency(self) -> float:
+        return self.t_done - self.t_submit
+
+
+def bucket_len(n: int, lo: int = 8) -> int:
+    """Next power-of-two prompt bucket (bounds distinct prefill traces)."""
+    b = lo
+    while b < n:
+        b *= 2
+    return b
+
+
+class Scheduler:
+    def __init__(self, rcfg: RunConfig, params, *, max_batch: int = 8,
+                 page_size: int = 16, max_len: int = 0, n_pages: int = 0,
+                 mesh=None):
+        if not transformer.paged_decode_supported(rcfg.model):
+            raise NotImplementedError(
+                f"paged serving needs decoder attention blocks, got "
+                f"family={rcfg.model.family!r}")
+        self.rcfg, self.params, self.mesh = rcfg, params, mesh
+        self.max_len = max_len or min(rcfg.model.max_seq_len, 4096)
+        self.page_size = page_size
+        self.max_batch = max_batch
+        self.pages_per_slot = pages_needed(self.max_len, page_size)
+        # default pool: every slot can hold a max_len sequence, + scratch
+        n_pages = n_pages or 1 + max_batch * self.pages_per_slot
+        self.alloc = PageAllocator(n_pages)
+        self.pages = transformer.init_paged_cache(rcfg, n_pages, page_size)
+        self._step = jax.jit(steps_mod.make_serve_fn(rcfg, mesh, paged=True),
+                             donate_argnums=(1,))
+
+        self.page_table = np.full((max_batch, self.pages_per_slot),
+                                  SCRATCH_PAGE, np.int32)
+        self.lengths = np.zeros((max_batch,), np.int32)
+        self.slot_req: List[Optional[ScheduledRequest]] = [None] * max_batch
+        self.slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        self.queue: Deque[ScheduledRequest] = collections.deque()
+        self.finished: Dict[int, ScheduledRequest] = {}
+        self._next_rid = 0
+        self.stats = {"prefill_tokens": 0, "prefill_s": 0.0,
+                      "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0}
+
+    # -- submission ---------------------------------------------------------
+
+    def submit(self, prompt: np.ndarray, max_new_tokens: int,
+               eos_id: Optional[int] = None) -> int:
+        """Queue a request; returns its rid. max_new_tokens is capped so
+        prompt + output fits max_len (the engine-wide Request contract)."""
+        prompt = np.asarray(prompt, np.int32).reshape(-1)
+        if len(prompt) >= self.max_len:
+            raise ValueError(f"prompt ({len(prompt)}) >= max_len "
+                             f"({self.max_len})")
+        if max_new_tokens < 1:
+            raise ValueError("max_new_tokens must be >= 1 (prefill always "
+                             "yields the first token)")
+        max_new = min(int(max_new_tokens), self.max_len - len(prompt))
+        req = ScheduledRequest(self._next_rid, prompt, max_new, eos_id,
+                               t_submit=time.perf_counter())
+        self._next_rid += 1
+        self.queue.append(req)
+        return req.rid
+
+    # -- scheduler iteration ------------------------------------------------
+
+    @property
+    def n_active(self) -> int:
+        return sum(r is not None for r in self.slot_req)
+
+    def _admit(self) -> int:
+        """Fill free slots from the queue; returns how many were admitted
+        (a request may finish during its own prefill, so admitted > 0 with
+        n_active == 0 afterwards is normal — the caller re-admits)."""
+        admitted = 0
+        for slot in range(self.max_batch):
+            if self.slot_req[slot] is not None or not self.queue:
+                continue
+            req = self.queue[0]
+            need = pages_needed(len(req.prompt) + req.max_new_tokens,
+                                self.page_size)
+            pages = self.alloc.alloc(need)
+            if pages is None:          # pool full: wait for running reqs
+                break
+            admitted += 1
+            self.queue.popleft()
+            self.slot_req[slot] = req
+            self.slot_pages[slot] = pages
+            self.page_table[slot, :] = SCRATCH_PAGE
+            self.page_table[slot, :len(pages)] = pages
+            self.lengths[slot] = 0
+            self._prefill(slot, req)
+        return admitted
+
+    def _prefill(self, slot: int, req: ScheduledRequest) -> None:
+        """One (or few) jitted calls write the whole prompt into the pages
+        and return the first generated token — no per-token host loop."""
+        T = len(req.prompt)
+        S = bucket_len(T)
+        toks = np.zeros((1, S), np.int32)
+        toks[0, :T] = req.prompt
+        t0 = time.perf_counter()
+        nxt, self.pages = self._step(
+            self.params, self.pages, toks,
+            np.zeros((1,), np.int32), np.array([T], np.int32),
+            self.page_table[slot:slot + 1])
+        tok = int(jax.block_until_ready(nxt)[0, 0])
+        now = time.perf_counter()
+        self.stats["prefill_tokens"] += T
+        self.stats["prefill_s"] += now - t0
+        self.lengths[slot] = T
+        req.t_first = now
+        req.out.append(tok)
+        if self._is_done(req, tok):
+            self._reap(slot)
+
+    def _decode_once(self) -> None:
+        toks = np.zeros((self.max_batch, 1), np.int32)
+        n_new = np.zeros((self.max_batch,), np.int32)
+        for slot, req in enumerate(self.slot_req):
+            if req is not None:
+                toks[slot, 0] = req.out[-1]
+                n_new[slot] = 1
+        t0 = time.perf_counter()
+        nxt, self.pages = self._step(self.params, self.pages, toks,
+                                     self.lengths.copy(), n_new,
+                                     self.page_table)
+        nxt = np.asarray(jax.block_until_ready(nxt))
+        dt = time.perf_counter() - t0
+        n_act = int(n_new.sum())
+        self.stats["decode_tokens"] += n_act
+        self.stats["decode_s"] += dt
+        self.stats["decode_steps"] += 1
+        for slot, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            self.lengths[slot] += 1       # last token now lives in the cache
+            tok = int(nxt[slot, 0])
+            req.out.append(tok)
+            if self._is_done(req, tok):
+                self._reap(slot)
+
+    def _is_done(self, req: ScheduledRequest, tok: int) -> bool:
+        return (len(req.out) >= req.max_new_tokens
+                or (req.eos_id is not None and tok == req.eos_id))
+
+    def _reap(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.t_done = time.perf_counter()
+        self.finished[req.rid] = req
+        self.alloc.free(self.slot_pages[slot])
+        self.slot_pages[slot] = []
+        self.slot_req[slot] = None
+        self.page_table[slot, :] = SCRATCH_PAGE
+        self.lengths[slot] = 0
+
+    def step(self) -> None:
+        self._admit()
+        if self.n_active:
+            self._decode_once()
+
+    def run(self) -> Dict[int, ScheduledRequest]:
+        """Drain the queue; returns {rid: finished request}."""
+        while self.queue or self.n_active:
+            admitted = self._admit()
+            if self.n_active:
+                self._decode_once()
+            elif self.queue and admitted == 0:
+                # nothing running, nothing admitted: the head request can
+                # never get pages (admitted > 0 with everything already
+                # finished in prefill just loops back to admit more)
+                raise RuntimeError(
+                    f"request {self.queue[0].rid} needs more pages than the "
+                    f"pool holds ({self.alloc.n_pages - 1})")
+        return self.finished
+
+    # -- reporting ----------------------------------------------------------
+
+    def throughput(self) -> Dict[str, float]:
+        s = self.stats
+        return {
+            "prefill_tok_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),
+            "decode_tok_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
+            "decode_steps": float(s["decode_steps"]),
+        }

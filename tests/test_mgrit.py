@@ -1,13 +1,11 @@
 """Core MGRIT solver tests: exactness, convergence, adjoint gradients."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.configs.base import MGRITConfig, ModelConfig
-from repro.core import lp, mgrit
+from repro.core import mgrit
 
 jax.config.update("jax_enable_x64", False)
 

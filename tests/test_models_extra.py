@@ -1,14 +1,12 @@
 """Additional model-substrate tests: MoE properties, enc-dec decode oracle,
 mixed-precision master weights, grouped-dispatch consistency."""
-import dataclasses
 
 import jax
 import jax.numpy as jnp
 import numpy as np
-import pytest
 
-from repro.configs.base import (MGRITConfig, ModelConfig, MoEConfig,
-                                OptimizerConfig, RunConfig, ShapeConfig)
+from repro.configs.base import (ModelConfig, MoEConfig,
+                                OptimizerConfig)
 from repro.configs import registry
 from repro.configs.reduce import reduce_config
 from repro.models import transformer
@@ -74,7 +72,6 @@ def test_encdec_decode_matches_teacher_forced():
     # decode through the decoder trunk with cross-attention to the same
     # encoder output used by the full forward
     from repro.models.transformer import _trunk, _rope_for
-    import repro.models.layers as L
     xe = src.astype(jnp.dtype(cfg.dtype))
     xN, _ = _trunk(params["enc_mid"], xe, rcfg, kind="attn_mlp",
                    causal=False, rope=_rope_for(cfg, 8), mode="serial")

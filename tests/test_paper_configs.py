@@ -1,10 +1,8 @@
 """Smoke tests for the paper's own architectures (reduced configs):
 BERT-128L (encoder MLM), GPT2-nanoGPT (decoder + buffer layers + Dt=1/16),
 ViT (encoder + patch stub), MC (tiny encoder), MT (Marian enc-dec)."""
-import dataclasses
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 

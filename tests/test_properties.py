@@ -1,10 +1,14 @@
 """Hypothesis property-based tests on the system's invariants."""
-import hypothesis
-import hypothesis.strategies as st
-import jax
-import jax.numpy as jnp
-import numpy as np
-from hypothesis import given, settings
+import pytest
+
+hypothesis = pytest.importorskip(
+    "hypothesis", reason="optional dev dependency; installed in CI via "
+                         "requirements-dev.txt")
+import hypothesis.strategies as st  # noqa: E402
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+from hypothesis import given, settings  # noqa: E402
 
 from repro.analysis.hlo import collective_bytes
 from repro.core import mgrit

@@ -1,7 +1,6 @@
 """End-to-end system tests: training with adaptive switching, serving,
 elastic checkpoint restore, and sharding-rule coherence (subprocess with a
 forced multi-device host platform)."""
-import dataclasses
 import json
 import os
 import subprocess
@@ -10,7 +9,6 @@ import tempfile
 import textwrap
 
 import jax
-import jax.numpy as jnp
 import numpy as np
 import pytest
 
@@ -106,6 +104,7 @@ _SHARDING_SCRIPT = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_sharding_rules_subprocess():
     """param_specs shards the stacked trunk over 'model' for LP archs
     (verified on a real 8-device host mesh in a subprocess)."""
