@@ -10,13 +10,48 @@ across heterogeneous CI hosts.
       benchmarks/BENCH_baseline.json [--tol 2.0] [--prefixes kernels/,serve/]
 
 Also fails if any ``_meta/*`` entry in the current run reports an ERROR
-(a benchmark crashed), regardless of timing.
+(a benchmark crashed), regardless of timing, and — when the serve
+shared-prefix rows are present — if prefix sharing stopped reducing work:
+``serve/prefix_shared`` must compute strictly fewer prefill tokens and
+allocate strictly fewer pages than ``serve/prefix_baseline`` (these are
+exact counters, so no tolerance applies).
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+
+def _counters(rec) -> dict:
+    """Parse a ``k=v;k=v`` derived field into int counters."""
+    out = {}
+    for kv in str(rec["derived"]).split(";"):
+        k, _, v = kv.partition("=")
+        try:
+            out[k] = int(v)
+        except ValueError:
+            pass
+    return out
+
+
+def check_prefix_sharing(cur: dict) -> list:
+    """Exact-count gate: sharing must beat the no-sharing baseline."""
+    shared = cur.get("serve/prefix_shared")
+    base = cur.get("serve/prefix_baseline")
+    if shared is None or base is None:
+        return []
+    s, b = _counters(shared), _counters(base)
+    failures = []
+    for key in ("prefill_tok", "pages"):
+        if not s.get(key, 0) < b.get(key, 0):
+            failures.append(
+                f"serve/prefix_shared: {key}={s.get(key)} not strictly "
+                f"below no-sharing baseline {b.get(key)}")
+        else:
+            print(f"ok    serve/prefix_shared: {key} {s[key]} < "
+                  f"{b[key]} (no-sharing baseline)")
+    return failures
 
 
 def main(argv=None) -> int:
@@ -41,6 +76,7 @@ def main(argv=None) -> int:
         if name.startswith("_meta/") and str(rec["derived"]).startswith(
                 "ERROR"):
             failures.append(f"{name}: crashed ({rec['derived']})")
+    failures += check_prefix_sharing(cur)
     for name, brec in sorted(base.items()):
         if not name.startswith(prefixes):
             continue

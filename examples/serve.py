@@ -1,8 +1,11 @@
 """Serve a small model with the continuous-batching engine.
 
-A queue of mixed-length requests streams through chunked prefill into the
-paged KV cache; the scheduler keeps the decode slots full and reports
-per-request latency plus aggregate throughput.
+A queue of requests sharing a common "system prompt" prefix streams
+through batched chunked prefill into the paged KV cache: the first wave
+publishes the prefix pages in the prefix trie, later requests map them
+read-only (copy-on-write) and prefill only their private tail. Half the
+requests decode greedily, half sample with per-request
+temperature/top-k/top-p — all lock-step in the same jitted call.
 
 Run:  PYTHONPATH=src python examples/serve.py
 """
@@ -27,22 +30,38 @@ def main():
           f"(pool: {engine.scheduler.alloc.n_pages} pages x "
           f"{engine.scheduler.page_size} tokens)")
 
-    # 10 mixed-length requests through 4 decode slots
+    # 10 requests with a 24-token shared system prompt + private tails;
+    # even ids greedy, odd ids sampled with their own temperature/seed
     rng = np.random.default_rng(0)
-    reqs = [Request(prompt=rng.integers(0, rcfg.model.vocab_size,
-                                        size=int(rng.integers(4, 24))).astype(
-                        np.int32),
-                    max_new_tokens=int(rng.integers(4, 12)))
-            for _ in range(10)]
+    system = rng.integers(0, rcfg.model.vocab_size, size=24).astype(np.int32)
+    reqs = []
+    for i in range(10):
+        tail = rng.integers(0, rcfg.model.vocab_size,
+                            size=int(rng.integers(2, 10))).astype(np.int32)
+        reqs.append(Request(
+            prompt=np.concatenate([system, tail]),
+            max_new_tokens=int(rng.integers(4, 12)),
+            temperature=0.0 if i % 2 == 0 else 0.8 + 0.1 * i,
+            top_k=0 if i % 2 == 0 else 20,
+            top_p=1.0 if i % 2 == 0 else 0.95,
+            seed=i))
     out = engine.generate(reqs)
     for i, r in enumerate(out):
-        print(f"request {i}: prompt[{len(r.prompt):2d}] -> "
+        mode = "greedy" if r.temperature == 0 else \
+            f"T={r.temperature:.1f}"
+        print(f"request {i}: prompt[{len(r.prompt):2d}] {mode:6s} -> "
               f"{list(map(int, r.output))}  "
               f"ttft={r.ttft_s*1e3:6.1f}ms  lat={r.latency_s*1e3:6.1f}ms")
 
+    st = engine.scheduler.stats
     thr = engine.scheduler.throughput()
-    print(f"aggregate: prefill {thr['prefill_tok_s']:.1f} tok/s, "
+    print(f"aggregate: prefill {thr['prefill_tok_s']:.1f} tok/s over "
+          f"{thr['prefill_calls']:.0f} batched calls, "
           f"decode {thr['decode_tok_s']:.1f} tok/s")
+    print(f"prefix sharing: {st['shared_tokens']} of "
+          f"{st['shared_tokens'] + st['prefill_tokens']} prompt tokens "
+          f"served from shared pages ({st['pages_shared']} page mappings, "
+          f"{st['pages_allocated']} pages allocated)")
     tps = engine.throughput_probe(batch=4, steps=8)
     print(f"steady-state decode probe (batch 4): {tps:.1f} tok/s")
     print(f"chunked-prefill probe (64-tok prompt): "

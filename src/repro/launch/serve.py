@@ -2,12 +2,15 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1p7b \
       [--reduced] [--requests 12] [--new-tokens 8] \
-      [--max-batch 4] [--page-size 16] [--max-len 256]
+      [--max-batch 4] [--page-size 16] [--max-len 256] \
+      [--temperature 0.8] [--top-k 40] [--top-p 0.95] \
+      [--shared-prefix-len 0] [--no-share-prefix]
 
-Decoder attention archs run the paged continuous-batching engine (chunked
-prefill + paged KV + slot scheduler); SSM/hybrid/encdec fall back to the
-dense fixed-batch engine. On the production meshes, serving shards with
-Megatron TP + flash-decoding KV-seq sharding
+Decoder attention archs run the paged continuous-batching engine (batched
+chunked prefill + refcounted paged KV with prefix sharing/copy-on-write +
+slot scheduler + per-request sampling); SSM/hybrid/encdec fall back to the
+dense greedy fixed-batch engine. On the production meshes, serving shards
+with Megatron TP + flash-decoding KV-seq sharding
 (configs/registry.decode_sharding); on this CPU container use --reduced.
 """
 from __future__ import annotations
@@ -32,6 +35,15 @@ def main(argv=None):
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="", help="restore params from here")
+    ap.add_argument("--temperature", type=float, default=0.0,
+                    help="0 = greedy; > 0 samples (paged engine only)")
+    ap.add_argument("--top-k", type=int, default=0, help="0 disables")
+    ap.add_argument("--top-p", type=float, default=1.0, help="1 disables")
+    ap.add_argument("--shared-prefix-len", type=int, default=0,
+                    help="prepend this many common tokens to every prompt "
+                         "(demonstrates prefix sharing)")
+    ap.add_argument("--no-share-prefix", action="store_true",
+                    help="disable the prefix cache / copy-on-write pages")
     args = ap.parse_args(argv)
 
     import jax
@@ -53,13 +65,22 @@ def main(argv=None):
 
     engine = ServeEngine(rcfg, params, max_len=args.max_len,
                          max_batch=args.max_batch,
-                         page_size=args.page_size)
+                         page_size=args.page_size,
+                         share_prefix=not args.no_share_prefix)
     print(f"engine: {'paged continuous-batching' if engine.paged else 'dense fixed-batch'}")
+    if not engine.paged and args.temperature > 0:
+        print("warning: dense fallback is greedy-only; forcing "
+              "--temperature 0")
+        args.temperature = 0.0
     rng = np.random.default_rng(args.seed)
-    reqs = [Request(prompt=rng.integers(
+    common = rng.integers(0, rcfg.model.vocab_size,
+                          size=args.shared_prefix_len).astype(np.int32)
+    reqs = [Request(prompt=np.concatenate([common, rng.integers(
                 0, rcfg.model.vocab_size,
-                size=int(rng.integers(4, 12))).astype(np.int32),
-                    max_new_tokens=args.new_tokens)
+                size=int(rng.integers(4, 12))).astype(np.int32)]),
+                    max_new_tokens=args.new_tokens,
+                    temperature=args.temperature, top_k=args.top_k,
+                    top_p=args.top_p, seed=int(rng.integers(0, 2**31)))
             for _ in range(args.requests)]
     for i, r in enumerate(engine.generate(reqs)):
         lat = f" ttft={r.ttft_s*1e3:.0f}ms lat={r.latency_s*1e3:.0f}ms" \
@@ -68,9 +89,14 @@ def main(argv=None):
               f"{list(map(int, r.output))}{lat}")
     if engine.paged:
         thr = engine.scheduler.throughput()
+        st = engine.scheduler.stats
         print(f"aggregate: prefill {thr['prefill_tok_s']:.1f} tok/s, "
               f"decode {thr['decode_tok_s']:.1f} tok/s "
-              f"({thr['decode_steps']:.0f} decode steps)")
+              f"({thr['decode_steps']:.0f} decode steps, "
+              f"{thr['prefill_calls']:.0f} prefill calls)")
+        print(f"prefix sharing: {st['shared_tokens']} prompt tokens "
+              f"reused, {st['pages_shared']} pages shared, "
+              f"{st['pages_allocated']} pages allocated")
     print(f"steady-state decode probe: "
           f"{engine.throughput_probe(args.max_batch):.1f} tok/s")
     return 0

@@ -78,9 +78,10 @@ def make_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh], paged: bool = False):
     Dense (default): (params, cache, tokens (B,T)) -> (next (B,1), cache).
     T > 1 chunk-prefills the prompt into the cache in one call.
     ``paged=True``: decode against the shared page pool with explicit
-    cache-page indices and an occupancy mask (n_new == 0 -> empty slot):
-    (params, pages, tokens (B,S), lengths, n_new, page_table) ->
-    (next (B,1), pages).
+    cache-page indices, an occupancy mask (n_new == 0 -> empty slot) and
+    vectorized per-slot sampling (see :func:`make_paged_serve_fn`):
+    (params, pages, tokens (B,S), lengths, n_new, page_table,
+    temps, top_ks, top_ps, seeds, counters) -> (next (B,1), pages).
     """
     if paged:
         return make_paged_serve_fn(rcfg, mesh)
@@ -100,18 +101,114 @@ def make_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh], paged: bool = False):
     return serve_step
 
 
+_MASKED = -1e30          # matches the attention-mask convention
+
+
+def apply_top_k(logits, k):
+    """Mask all but each row's k highest logits to ``_MASKED``.
+
+    logits: (B, V) float; k: (B,) int32, vectorized per row. ``k <= 0``
+    (or ``k >= V``) disables the filter for that row. Ties at the k-th
+    value are kept, so the surviving set can only be larger, never
+    smaller, than k (irrelevant for real float logits).
+    """
+    V = logits.shape[-1]
+    srt = jnp.sort(logits, axis=-1)                       # ascending
+    k_eff = jnp.clip(jnp.where(k <= 0, V, k), 1, V)
+    kth = jnp.take_along_axis(srt, (V - k_eff)[:, None], axis=-1)
+    return jnp.where(logits < kth, _MASKED, logits)
+
+
+def apply_top_p(logits, p):
+    """Nucleus mask: keep each row's smallest descending-probability set
+    whose cumulative mass reaches p (the argmax always survives), mask the
+    rest to ``_MASKED``. logits: (B, V); p: (B,) in (0, 1], per row;
+    ``p >= 1`` keeps every token with non-zero probability."""
+    B, V = logits.shape
+    idx = jnp.argsort(logits, axis=-1)[:, ::-1]           # descending
+    srt = jnp.take_along_axis(logits, idx, axis=-1)
+    probs = jax.nn.softmax(srt.astype(jnp.float32), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep = (cum - probs) < p[:, None]     # mass before this token < p
+    keep = keep.at[:, 0].set(True)
+    masked_sorted = jnp.where(keep, srt, _MASKED)
+    return jnp.zeros_like(logits).at[
+        jnp.arange(B)[:, None], idx].set(masked_sorted)
+
+
+def apply_top_k_top_p(logits, k, p):
+    """Fused top-k + nucleus mask: one descending sort drives both
+    filters (top-k masking preserves the survivors' order, so the
+    separate argsort in :func:`apply_top_p` is redundant on the hot
+    path). Semantically identical to ``apply_top_p(apply_top_k(x, k),
+    p)`` for distinct logits."""
+    B, V = logits.shape
+    idx = jnp.argsort(logits, axis=-1)[:, ::-1]           # descending
+    srt = jnp.take_along_axis(logits, idx, axis=-1)
+    k_eff = jnp.clip(jnp.where(k <= 0, V, k), 1, V)
+    keep = jnp.arange(V)[None, :] < k_eff[:, None]
+    probs = jax.nn.softmax(
+        jnp.where(keep, srt, _MASKED).astype(jnp.float32), axis=-1)
+    cum = jnp.cumsum(probs, axis=-1)
+    keep &= (cum - probs) < p[:, None]    # mass before this token < p
+    keep = keep.at[:, 0].set(True)        # argmax always survives
+    masked_sorted = jnp.where(keep, srt, _MASKED)
+    return jnp.zeros_like(logits).at[
+        jnp.arange(B)[:, None], idx].set(masked_sorted)
+
+
+def sample_tokens(logits, temps, top_ks, top_ps, seeds, counters):
+    """Vectorized per-slot sampling: (B, V) logits -> (B,) int32 tokens.
+
+    Slots with ``temps <= 0`` take the exact greedy argmax path (bitwise
+    identical to the pre-sampling step). Others scale by temperature,
+    apply top-k then top-p masks, and draw via the Gumbel-argmax trick
+    with key ``fold_in(PRNGKey(seed), counter)`` — the key depends only on
+    the request's own seed and how many tokens it has generated, so the
+    same request reproduces the same stream in any slot and any batch
+    composition.
+    """
+    lf = logits.astype(jnp.float32)
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+
+    def _sampled(_):
+        scaled = lf / jnp.maximum(temps, 1e-6)[:, None]
+        scaled = apply_top_k_top_p(scaled, top_ks, top_ps)
+
+        def draw(seed, counter):
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), counter)
+            return jax.random.gumbel(key, (lf.shape[-1],), jnp.float32)
+
+        gumbel = jax.vmap(draw)(seeds, counters)
+        sampled = jnp.argmax(scaled + gumbel, axis=-1)
+        return jnp.where(temps <= 0.0, greedy, sampled).astype(jnp.int32)
+
+    # all-greedy batches skip the sort/top-p/gumbel work entirely (runtime
+    # branch, same trace — mixed batches still decode lock-step)
+    return jax.lax.cond(jnp.any(temps > 0.0), _sampled, lambda _: greedy,
+                        None)
+
+
 def make_paged_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
     """Paged-cache step: one jitted function serves both chunked prefill
     (S = prompt bucket) and steady-state decode (S = 1); slot occupancy is
-    the ``n_new`` mask, so admissions/evictions never retrace."""
+    the ``n_new`` mask, so admissions/evictions never retrace.
 
-    def paged_serve_step(params, pages, tokens, lengths, n_new, page_table):
+    Sampling is vectorized per slot inside the same trace: ``temps`` /
+    ``top_ks`` / ``top_ps`` are (B,) request parameters (temperature 0 =
+    greedy), ``seeds``/``counters`` derive each slot's PRNG key, so mixed
+    greedy/sampled batches decode lock-step with no retrace.
+    """
+
+    def paged_serve_step(params, pages, tokens, lengths, n_new, page_table,
+                         temps, top_ks, top_ps, seeds, counters):
         ctx = axis_rules(mesh, rcfg.sharding) if mesh is not None else \
             _nullctx()
         with ctx:
             logits, pages2 = transformer.paged_decode_step(
                 params, pages, tokens, lengths, n_new, page_table, rcfg)
-            nxt = jnp.argmax(logits.astype(jnp.float32), axis=-1)
+            nxt = sample_tokens(logits, temps, top_ks, top_ps, seeds,
+                                counters)
         return nxt[:, None], pages2
 
     return paged_serve_step

@@ -401,6 +401,13 @@ def init_paged_cache(rcfg: RunConfig, n_pages: int, page_size: int):
     return attn_mod.init_paged_kv_cache(cfg, n, n_pages, page_size)
 
 
+def copy_paged_page(pages, src: int, dst: int):
+    """Copy-on-write fork of one physical page across all layers (the
+    scheduler calls this right after ``PageAllocator.fork`` hands it a
+    fresh destination page)."""
+    return attn_mod.copy_paged_kv(pages, src, dst)
+
+
 def paged_decode_step(params, pages, tokens, lengths, n_new, page_table,
                       rcfg: RunConfig):
     """Batched step against the shared page pool — static shapes, dynamic

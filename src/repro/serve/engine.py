@@ -1,9 +1,12 @@
 """Continuous-batching serving engine.
 
-Decoder-family attention models take the paged path: **chunked prefill**
-(whole prompt -> KV pages in one jitted call), a **block/paged KV cache**
-(fixed-size pages + free-list allocator, sequences of different lengths
-share one pool), and the **scheduler** (admit from queue into in-flight
+Decoder-family attention models take the paged path: **batched chunked
+prefill** (all admitted prompts -> KV pages in one jitted call), a
+**block/paged KV cache** (fixed-size refcounted pages, sequences of
+different lengths share one pool, common prompt prefixes share physical
+pages copy-on-write), **per-request sampling** (temperature / top-k /
+top-p / seed vectorized inside the jitted step; temperature 0 is the exact
+greedy path), and the **scheduler** (admit from queue into in-flight
 decode slots, evict finished sequences mid-decode, refill without
 recompiling — static batch shape, dynamic occupancy mask).
 
@@ -33,10 +36,22 @@ from repro.serve.scheduler import Scheduler, bucket_len
 class Request:
     """One generation request. Generation stops early at ``eos_id`` and is
     capped so prompt + output never exceeds the engine's max_len — len(
-    output) can be < max_new_tokens in both cases (on every engine path)."""
+    output) can be < max_new_tokens in both cases (on every engine path).
+
+    Sampling (paged engine only; the dense fallback is greedy):
+    ``temperature`` 0 is the exact greedy argmax path; > 0 samples from
+    the temperature-scaled distribution restricted by ``top_k`` (0
+    disables) then ``top_p`` (1 disables). ``seed`` names the request's
+    private RNG stream — the same (prompt, sampling params, seed) yields
+    the same tokens in any slot and any batch composition.
+    """
     prompt: np.ndarray           # (T,) int32
     max_new_tokens: int = 16
     eos_id: Optional[int] = None
+    temperature: float = 0.0
+    top_k: int = 0
+    top_p: float = 1.0
+    seed: int = 0
     output: Optional[np.ndarray] = None
     ttft_s: Optional[float] = None      # time to first token
     latency_s: Optional[float] = None
@@ -44,7 +59,8 @@ class Request:
 
 class ServeEngine:
     def __init__(self, rcfg: RunConfig, params, mesh=None,
-                 max_len: int = 0, max_batch: int = 8, page_size: int = 16):
+                 max_len: int = 0, max_batch: int = 8, page_size: int = 16,
+                 share_prefix: bool = True):
         self.rcfg = rcfg
         self.params = params
         self.mesh = mesh
@@ -54,7 +70,7 @@ class ServeEngine:
         if self.paged:
             self.scheduler = Scheduler(
                 rcfg, params, max_batch=max_batch, page_size=page_size,
-                max_len=self.max_len, mesh=mesh)
+                max_len=self.max_len, mesh=mesh, share_prefix=share_prefix)
         else:
             self.scheduler = None
 
@@ -69,13 +85,23 @@ class ServeEngine:
             if len(r.prompt) >= self.max_len:
                 raise ValueError(f"prompt ({len(r.prompt)}) >= max_len "
                                  f"({self.max_len})")
+            if r.temperature < 0.0 or r.top_k < 0 \
+                    or not 0.0 < r.top_p <= 1.0:
+                raise ValueError("bad sampling params: need temperature "
+                                 ">= 0, top_k >= 0, top_p in (0, 1]")
+            if r.temperature > 0.0 and not self.paged:
+                raise ValueError(
+                    "sampling (temperature > 0) is only supported on the "
+                    "paged engine; the dense fallback decodes greedily")
         if self.paged:
             return self._generate_paged(requests)
         return self._generate_dense(requests)
 
     def _generate_paged(self, requests: List[Request]) -> List[Request]:
         sched = self.scheduler
-        rids = [sched.submit(r.prompt, r.max_new_tokens, r.eos_id)
+        rids = [sched.submit(r.prompt, r.max_new_tokens, r.eos_id,
+                             temperature=r.temperature, top_k=r.top_k,
+                             top_p=r.top_p, seed=r.seed)
                 for r in requests]
         done = sched.run()
         for r, rid in zip(requests, rids):
@@ -170,21 +196,32 @@ class ServeEngine:
         return transformer.init_paged_cache(
             self.rcfg, 1 + table.size, self.scheduler.page_size)
 
+    def _greedy_sampling_args(self, batch: int):
+        """Per-slot sampling vectors selecting the exact argmax path."""
+        return (np.zeros((batch,), np.float32),       # temperature
+                np.zeros((batch,), np.int32),         # top_k (disabled)
+                np.ones((batch,), np.float32),        # top_p (disabled)
+                np.zeros((batch,), np.int32),         # seeds
+                np.zeros((batch,), np.int32))         # counters
+
     def _paged_probe(self, batch: int, steps: int) -> float:
         """Steady-state paged decode at full occupancy on a scratch pool.
         Reuses the scheduler's cached jitted step (no retrace per probe)."""
         table = self._scratch_table(batch, steps + 1)
         pages = self._scratch_pages(table)
         fn = self.scheduler._step
+        samp = self._greedy_sampling_args(batch)
         tok = np.ones((batch, 1), np.int32)
         n_new = np.ones((batch,), np.int32)
         lengths = np.zeros((batch,), np.int32)
-        tok, pages = fn(self.params, pages, tok, lengths, n_new, table)
+        tok, pages = fn(self.params, pages, tok, lengths, n_new, table,
+                        *samp)
         jax.block_until_ready(tok)
         t0 = time.time()
         for _ in range(steps):
             lengths = lengths + 1
-            tok, pages = fn(self.params, pages, tok, lengths, n_new, table)
+            tok, pages = fn(self.params, pages, tok, lengths, n_new, table,
+                            *samp)
         jax.block_until_ready(tok)
         return batch * steps / (time.time() - t0)
 
@@ -203,10 +240,12 @@ class ServeEngine:
             n_new = np.full((batch,), prompt_len, np.int32)
             lengths = np.zeros((batch,), np.int32)
             fn = self.scheduler._step
+            samp = self._greedy_sampling_args(batch)
 
             def call():
                 pages = self._scratch_pages(table)
-                return fn(self.params, pages, toks, lengths, n_new, table)
+                return fn(self.params, pages, toks, lengths, n_new, table,
+                          *samp)
         else:
             def call():
                 cache = transformer.init_cache(rcfg, batch, self.max_len)

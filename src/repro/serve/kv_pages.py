@@ -2,10 +2,26 @@
 
 The device tensors live in :func:`repro.models.attention.init_paged_kv_cache`
 (a pool of fixed-size pages shared by every sequence, stacked over layers).
-This module owns the free-list allocator and the capacity math: the
-scheduler allocates ``pages_needed(prompt + max_new)`` physical pages when a
-request is admitted and returns them the moment it finishes, so sequences
-of different lengths share one pool with no per-slot max_len reservation.
+This module owns the allocator and the capacity math: the scheduler
+allocates ``pages_needed(prompt + max_new)`` physical pages when a request
+is admitted and returns them the moment it finishes, so sequences of
+different lengths share one pool with no per-slot max_len reservation.
+
+Pages are **refcounted** so several page tables can map the same physical
+page read-only (prefix sharing): ``alloc`` hands out private pages at
+refcount 1, ``share`` adds readers, and ``free`` only returns a page to the
+pool when its last reference dies. ``fork`` is the host half of
+copy-on-write — before a slot writes into a page other readers can still
+see, the scheduler forks it into a private copy (the device copy is
+:func:`repro.models.attention.copy_paged_kv`).
+
+:class:`PrefixCache` is a trie over *full* prompt pages (page_size tokens
+per level, keyed by the page's token tuple) mapping shared prompt prefixes
+to the physical pages that already hold their KV. A request whose prompt
+walks k trie levels maps those k pages read-only and skips re-prefilling
+``k * page_size`` tokens. The trie pins each cached page with one
+allocator reference of its own; under pool pressure the scheduler evicts
+least-recently-matched leaves.
 
 Page ``SCRATCH_PAGE`` (id 0) is never allocated: the jitted step routes
 writes from padded prompt positions and unoccupied slots there, which keeps
@@ -13,7 +29,7 @@ every shape static regardless of occupancy.
 """
 from __future__ import annotations
 
-from typing import List, Optional
+from typing import Dict, List, Optional, Tuple
 
 SCRATCH_PAGE = 0
 
@@ -24,28 +40,192 @@ def pages_needed(n_tokens: int, page_size: int) -> int:
 
 
 class PageAllocator:
-    """LIFO free-list over physical page ids 1..n_pages-1 (0 is scratch)."""
+    """Refcounted pool over physical page ids 1..n_pages-1 (0 is scratch).
+
+    The free pool is a LIFO stack (hot pages get reused first) backed by a
+    set, so membership checks and frees are O(1) instead of the old
+    O(n_free) list scan. Refcounts detect double frees exactly: freeing a
+    page whose refcount is already 0 raises.
+    """
 
     def __init__(self, n_pages: int):
         if n_pages < 2:
             raise ValueError("need at least one allocatable page + scratch")
         self.n_pages = n_pages
-        self._free: List[int] = list(range(n_pages - 1, 0, -1))
+        self._free_stack: List[int] = list(range(n_pages - 1, 0, -1))
+        self._free_set = set(self._free_stack)
+        self._ref = [0] * n_pages
 
     @property
     def n_free(self) -> int:
-        return len(self._free)
+        return len(self._free_stack)
+
+    def refcount(self, page: int) -> int:
+        return self._ref[page]
+
+    def is_free(self, page: int) -> bool:
+        return page in self._free_set
 
     def alloc(self, n: int) -> Optional[List[int]]:
-        """Pop n pages, or None (caller waits for frees) if not available."""
-        if n > len(self._free):
+        """Pop n private pages (refcount 1 each), or None (caller waits
+        for frees / evicts cached prefixes) if not available."""
+        if n > len(self._free_stack):
             return None
-        return [self._free.pop() for _ in range(n)]
+        pages = [self._free_stack.pop() for _ in range(n)]
+        for p in pages:
+            self._free_set.discard(p)
+            self._ref[p] = 1
+        return pages
+
+    def share(self, pages: List[int]) -> None:
+        """Add one reader to each page (it must be live)."""
+        for p in pages:
+            self._check_id(p)
+            if self._ref[p] < 1:
+                raise ValueError(f"share of unallocated page {p}")
+        for p in pages:
+            self._ref[p] += 1
 
     def free(self, pages: List[int]) -> None:
+        """Drop one reference per page; a page returns to the pool when
+        its last reference dies."""
         for p in pages:
-            if not 0 < p < self.n_pages:
-                raise ValueError(f"bad page id {p}")
-            if p in self._free:
+            self._check_id(p)
+            if self._ref[p] == 0:
                 raise ValueError(f"double free of page {p}")
-            self._free.append(p)
+            self._ref[p] -= 1
+            if self._ref[p] == 0:
+                self._free_stack.append(p)
+                self._free_set.add(p)
+
+    def fork(self, page: int) -> Optional[int]:
+        """Copy-on-write split: detach one reference of ``page`` onto a
+        private copy. Returns ``page`` itself when it is already private
+        (no copy needed), a fresh page id (refcount 1 — the caller must
+        copy the device KV) when other readers remain, or None when the
+        pool is empty."""
+        self._check_id(page)
+        if self._ref[page] < 1:
+            raise ValueError(f"fork of unallocated page {page}")
+        if self._ref[page] == 1:
+            return page
+        got = self.alloc(1)
+        if got is None:
+            return None
+        self._ref[page] -= 1
+        return got[0]
+
+    def _check_id(self, p: int) -> None:
+        if not 0 < p < self.n_pages:
+            raise ValueError(f"bad page id {p}")
+
+
+class _PrefixNode:
+    __slots__ = ("children", "page", "tick")
+
+    def __init__(self, page: int, tick: int):
+        self.children: Dict[Tuple[int, ...], "_PrefixNode"] = {}
+        self.page = page
+        self.tick = tick
+
+
+class PrefixCache:
+    """Trie over full prompt pages -> physical pages holding their KV.
+
+    Level d of the trie is keyed by the token tuple of prompt page d, so a
+    path from the root spells out a prompt prefix in whole-page units.
+    Each node pins one physical page with a trie-owned allocator reference
+    (taken at :meth:`insert`); the page therefore outlives the request
+    that prefilled it and later requests map it read-only via
+    :meth:`match` + ``PageAllocator.share``.
+    """
+
+    def __init__(self, alloc: PageAllocator, page_size: int):
+        self.alloc = alloc
+        self.page_size = page_size
+        self.children: Dict[Tuple[int, ...], _PrefixNode] = {}
+        self._tick = 0
+        self.stats = {"hit_pages": 0, "miss_prompts": 0, "evicted": 0}
+
+    def _chunks(self, prompt: np.ndarray):
+        ps = self.page_size
+        for i in range(len(prompt) // ps):
+            yield tuple(int(t) for t in prompt[i * ps:(i + 1) * ps])
+
+    def match(self, prompt) -> List[int]:
+        """Longest already-cached chain of the prompt's full pages.
+        Returns their physical page ids in prompt order; the caller must
+        ``share`` them before any allocator traffic (e.g. eviction) could
+        otherwise free them."""
+        self._tick += 1
+        pages: List[int] = []
+        children = self.children
+        for key in self._chunks(prompt):
+            node = children.get(key)
+            if node is None:
+                break
+            node.tick = self._tick
+            pages.append(node.page)
+            children = node.children
+        self.stats["hit_pages"] += len(pages)
+        if not pages:
+            self.stats["miss_prompts"] += 1
+        return pages
+
+    def insert(self, prompt, pages: List[int]) -> None:
+        """Publish the prompt's first ``len(pages)`` full pages (already
+        written physical ids, in prompt order). New nodes pin their page
+        with one trie-owned reference; existing nodes keep their original
+        page (concurrent prefills of the same prefix are harmless)."""
+        self._tick += 1
+        children = self.children
+        for key, page in zip(self._chunks(prompt), pages):
+            node = children.get(key)
+            if node is None:
+                self.alloc.share([page])
+                node = _PrefixNode(page, self._tick)
+                children[key] = node
+            node.tick = self._tick
+            children = node.children
+
+    def _walk(self):
+        """Yields (parent_children, key, node) over the whole trie."""
+        stack = [(self.children, k) for k in list(self.children)]
+        while stack:
+            children, key = stack.pop()
+            node = children[key]
+            yield children, key, node
+            stack.extend((node.children, k) for k in list(node.children))
+
+    @property
+    def n_cached_pages(self) -> int:
+        return sum(1 for _ in self._walk())
+
+    def evict(self, n_needed: int) -> int:
+        """Drop least-recently-matched leaves whose page only the trie
+        still references, until ``n_needed`` pages have returned to the
+        pool or nothing more can be freed. Returns pages freed."""
+        freed = 0
+        while freed < n_needed:
+            leaves = [(node.tick, key, children)
+                      for children, key, node in self._walk()
+                      if not node.children
+                      and self.alloc.refcount(node.page) == 1]
+            if not leaves:
+                break
+            leaves.sort(key=lambda t: t[0])
+            for _, key, children in leaves:
+                if freed >= n_needed:
+                    break
+                node = children.pop(key)
+                self.alloc.free([node.page])
+                freed += 1
+                self.stats["evicted"] += 1
+        return freed
+
+    def clear(self) -> None:
+        """Release every cached page (trie references only — pages still
+        mapped by live requests stay allocated until those finish)."""
+        for _, _, node in list(self._walk()):
+            self.alloc.free([node.page])
+        self.children = {}

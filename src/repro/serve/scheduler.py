@@ -5,22 +5,36 @@ are alive is the ``n_new`` occupancy mask, so admitting or evicting a
 request never recompiles. One scheduler iteration:
 
   1. admit — pop queued requests into free slots while the page pool has
-     room: allocate pages for prompt+max_new tokens, then **chunked
-     prefill** writes the whole prompt into the pages with one jitted call
-     (prompt length padded to a power-of-two bucket, so compile count is
-     O(log max_len), not O(T)); the prefill logits yield the first token.
+     room, then **batched chunked prefill**: every request admitted this
+     wave shares ONE jitted (max_batch, bucket) call that writes all their
+     prompts into the pages and yields each one's first token (prompt
+     remainder padded to a power-of-two bucket, so compile count is
+     O(log max_len), not O(T) and not O(queue)).
   2. decode — one lock-step call over all occupied slots.
   3. reap — finished sequences (max_new reached or EOS) release their
      pages and slot immediately; the next iteration refills them.
 
-Greedy sampling, matching the seed engine.
+**Prefix sharing / copy-on-write**: full prompt pages are published in a
+trie (``kv_pages.PrefixCache``); a later request whose prompt starts with a
+cached prefix maps those physical pages read-only (refcount +1) and
+prefills only the remainder. When the remainder would write into a shared
+page (a page-aligned full-prompt hit still recomputes the final token for
+its logits), the page is forked first — ``PageAllocator.fork`` picks a
+private copy, ``transformer.copy_paged_page`` duplicates the device KV.
+Under pool pressure, least-recently-matched trie leaves are evicted.
+
+**Sampling** is per-request and lives inside the jitted step
+(``launch.steps.sample_tokens``): temperature 0 slots take the exact
+greedy argmax path, others draw from the temperature-scaled,
+top-k/top-p-masked distribution with key fold_in(PRNGKey(seed), n_emitted)
+— reproducible regardless of slot placement or batch composition.
 """
 from __future__ import annotations
 
 import collections
 import dataclasses
 import time
-from typing import Deque, Dict, List, Optional
+from typing import Deque, Dict, List, Optional, Set, Tuple
 
 import jax
 import numpy as np
@@ -28,7 +42,8 @@ import numpy as np
 from repro.configs.base import RunConfig
 from repro.launch import steps as steps_mod
 from repro.models import transformer
-from repro.serve.kv_pages import SCRATCH_PAGE, PageAllocator, pages_needed
+from repro.serve.kv_pages import (SCRATCH_PAGE, PageAllocator, PrefixCache,
+                                  pages_needed)
 
 
 @dataclasses.dataclass
@@ -37,6 +52,10 @@ class ScheduledRequest:
     prompt: np.ndarray               # (T,) int32
     max_new_tokens: int
     eos_id: Optional[int] = None
+    temperature: float = 0.0         # 0 = greedy (exact argmax path)
+    top_k: int = 0                   # 0 = disabled
+    top_p: float = 1.0               # 1 = disabled
+    seed: int = 0                    # per-request sampling stream
     out: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first: float = 0.0             # first token produced (end of prefill)
@@ -62,7 +81,7 @@ def bucket_len(n: int, lo: int = 8) -> int:
 class Scheduler:
     def __init__(self, rcfg: RunConfig, params, *, max_batch: int = 8,
                  page_size: int = 16, max_len: int = 0, n_pages: int = 0,
-                 mesh=None):
+                 mesh=None, share_prefix: bool = True):
         if not transformer.paged_decode_supported(rcfg.model):
             raise NotImplementedError(
                 f"paged serving needs decoder attention blocks, got "
@@ -75,6 +94,9 @@ class Scheduler:
         # default pool: every slot can hold a max_len sequence, + scratch
         n_pages = n_pages or 1 + max_batch * self.pages_per_slot
         self.alloc = PageAllocator(n_pages)
+        self.prefix: Optional[PrefixCache] = \
+            PrefixCache(self.alloc, page_size) if share_prefix else None
+        self._pending: Set[int] = set()   # pages this admit wave will write
         self.pages = transformer.init_paged_cache(rcfg, n_pages, page_size)
         self._step = jax.jit(steps_mod.make_serve_fn(rcfg, mesh, paged=True),
                              donate_argnums=(1,))
@@ -84,16 +106,25 @@ class Scheduler:
         self.lengths = np.zeros((max_batch,), np.int32)
         self.slot_req: List[Optional[ScheduledRequest]] = [None] * max_batch
         self.slot_pages: List[List[int]] = [[] for _ in range(max_batch)]
+        # per-slot sampling parameters, fed to the jitted step every call
+        self.temps = np.zeros((max_batch,), np.float32)
+        self.top_ks = np.zeros((max_batch,), np.int32)
+        self.top_ps = np.ones((max_batch,), np.float32)
+        self.seeds = np.zeros((max_batch,), np.int32)
         self.queue: Deque[ScheduledRequest] = collections.deque()
         self.finished: Dict[int, ScheduledRequest] = {}
         self._next_rid = 0
         self.stats = {"prefill_tokens": 0, "prefill_s": 0.0,
-                      "decode_tokens": 0, "decode_s": 0.0, "decode_steps": 0}
+                      "prefill_calls": 0, "decode_tokens": 0,
+                      "decode_s": 0.0, "decode_steps": 0,
+                      "shared_tokens": 0, "pages_allocated": 0,
+                      "pages_shared": 0}
 
     # -- submission ---------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
-               eos_id: Optional[int] = None) -> int:
+               eos_id: Optional[int] = None, *, temperature: float = 0.0,
+               top_k: int = 0, top_p: float = 1.0, seed: int = 0) -> int:
         """Queue a request; returns its rid. max_new_tokens is capped so
         prompt + output fits max_len (the engine-wide Request contract)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
@@ -103,8 +134,17 @@ class Scheduler:
         if max_new_tokens < 1:
             raise ValueError("max_new_tokens must be >= 1 (prefill always "
                              "yields the first token)")
+        if temperature < 0.0:
+            raise ValueError("temperature must be >= 0")
+        if top_k < 0:
+            raise ValueError("top_k must be >= 0 (0 disables)")
+        if not 0.0 < top_p <= 1.0:
+            raise ValueError("top_p must be in (0, 1]")
         max_new = min(int(max_new_tokens), self.max_len - len(prompt))
         req = ScheduledRequest(self._next_rid, prompt, max_new, eos_id,
+                               temperature=float(temperature),
+                               top_k=int(top_k), top_p=float(top_p),
+                               seed=int(seed) & 0x7FFFFFFF,
                                t_submit=time.perf_counter())
         self._next_rid += 1
         self.queue.append(req)
@@ -116,63 +156,143 @@ class Scheduler:
     def n_active(self) -> int:
         return sum(r is not None for r in self.slot_req)
 
+    def _plan_admit(self, req: ScheduledRequest) \
+            -> Optional[Tuple[List[int], int]]:
+        """Map pages for one request: the longest trie-cached prompt
+        prefix is shared read-only, fresh pages cover the rest, and a COW
+        fork detaches the last shared page when the recomputed tail must
+        write into it. Returns (pages, shared_len) or None when the pool
+        cannot serve the request right now."""
+        ps = self.page_size
+        T = len(req.prompt)
+        total = pages_needed(T + req.max_new_tokens, ps)
+        shared: List[int] = []
+        if self.prefix is not None:
+            shared = self.prefix.match(req.prompt)
+            # The final prompt token is always recomputed (its logits seed
+            # generation), so a page-aligned full-prompt hit writes into
+            # its last shared page -> COW fork. Pages still being written
+            # by this same admission wave can't be forked (their KV lands
+            # on device mid-call): drop them and recompute that page.
+            if shared and len(shared) * ps >= T \
+                    and shared[-1] in self._pending:
+                shared.pop()
+            self.alloc.share(shared)
+        shared_len = len(shared) * ps
+        fork_src = None
+        if shared and shared_len >= T:
+            shared_len = T - 1
+            fork_src = shared[-1]
+        n_fresh = total - len(shared)
+        fresh = self.alloc.alloc(n_fresh)
+        if fresh is None and self.prefix is not None:
+            self.prefix.evict(n_fresh - self.alloc.n_free)
+            fresh = self.alloc.alloc(n_fresh)
+        if fresh is None:
+            self.alloc.free(shared)
+            return None
+        if fork_src is not None:
+            dst = self.alloc.fork(fork_src)
+            if dst is None and self.prefix is not None:
+                self.prefix.evict(1)             # same fallback as alloc
+                dst = self.alloc.fork(fork_src)
+            if dst is None:                      # needs one more page
+                self.alloc.free(fresh + shared)
+                return None
+            if dst != fork_src:
+                self.pages = transformer.copy_paged_page(
+                    self.pages, fork_src, dst)
+                self.stats["pages_allocated"] += 1
+            shared[-1] = dst
+        self.stats["pages_allocated"] += n_fresh
+        self.stats["pages_shared"] += len(shared) - (fork_src is not None)
+        self.stats["shared_tokens"] += shared_len
+        return shared + fresh, shared_len
+
     def _admit(self) -> int:
-        """Fill free slots from the queue; returns how many were admitted
+        """Fill free slots from the queue, then prefill every admitted
+        request in ONE batched jitted call. Returns how many were admitted
         (a request may finish during its own prefill, so admitted > 0 with
         n_active == 0 afterwards is normal — the caller re-admits)."""
-        admitted = 0
+        plans = []
         for slot in range(self.max_batch):
             if self.slot_req[slot] is not None or not self.queue:
                 continue
-            req = self.queue[0]
-            need = pages_needed(len(req.prompt) + req.max_new_tokens,
-                                self.page_size)
-            pages = self.alloc.alloc(need)
-            if pages is None:          # pool full: wait for running reqs
+            plan = self._plan_admit(self.queue[0])
+            if plan is None:           # pool full: wait for running reqs
                 break
-            admitted += 1
-            self.queue.popleft()
+            pages, shared_len = plan
+            req = self.queue.popleft()
             self.slot_req[slot] = req
             self.slot_pages[slot] = pages
             self.page_table[slot, :] = SCRATCH_PAGE
             self.page_table[slot, :len(pages)] = pages
-            self.lengths[slot] = 0
-            self._prefill(slot, req)
-        return admitted
+            self.lengths[slot] = shared_len
+            self.temps[slot] = req.temperature
+            self.top_ks[slot] = req.top_k
+            self.top_ps[slot] = req.top_p
+            self.seeds[slot] = req.seed
+            if self.prefix is not None:
+                n_full = len(req.prompt) // self.page_size
+                self.prefix.insert(req.prompt, pages[:n_full])
+                self._pending.update(pages[shared_len // self.page_size:
+                                           n_full])
+            plans.append((slot, req, shared_len))
+        if plans:
+            self._batched_prefill(plans)
+            self._pending.clear()
+        return len(plans)
 
-    def _prefill(self, slot: int, req: ScheduledRequest) -> None:
-        """One (or few) jitted calls write the whole prompt into the pages
-        and return the first generated token — no per-token host loop."""
-        T = len(req.prompt)
-        S = bucket_len(T)
-        toks = np.zeros((1, S), np.int32)
-        toks[0, :T] = req.prompt
+    def _batched_prefill(self, plans) -> None:
+        """One jitted (max_batch, bucket) call writes every admitted
+        prompt's non-shared remainder into its pages and samples each
+        first token. Slots mid-decode ride along masked out (n_new == 0),
+        so the call count per wave is 1 regardless of queue depth."""
+        S = bucket_len(max(len(r.prompt) - sl for _, r, sl in plans))
+        toks = np.zeros((self.max_batch, S), np.int32)
+        n_new = np.zeros((self.max_batch,), np.int32)
+        counters = np.zeros((self.max_batch,), np.int32)
+        for slot, req, sl in plans:
+            n = len(req.prompt) - sl
+            toks[slot, :n] = req.prompt[sl:]
+            n_new[slot] = n
         t0 = time.perf_counter()
         nxt, self.pages = self._step(
-            self.params, self.pages, toks,
-            np.zeros((1,), np.int32), np.array([T], np.int32),
-            self.page_table[slot:slot + 1])
-        tok = int(jax.block_until_ready(nxt)[0, 0])
+            self.params, self.pages, toks, self.lengths.copy(), n_new,
+            self.page_table, self.temps, self.top_ks, self.top_ps,
+            self.seeds, counters)
+        nxt = np.asarray(jax.block_until_ready(nxt))
         now = time.perf_counter()
-        self.stats["prefill_tokens"] += T
+        self.stats["prefill_tokens"] += int(n_new.sum())
         self.stats["prefill_s"] += now - t0
-        self.lengths[slot] = T
-        req.t_first = now
-        req.out.append(tok)
-        if self._is_done(req, tok):
-            self._reap(slot)
+        self.stats["prefill_calls"] += 1
+        for slot, req, _ in plans:
+            self.lengths[slot] = len(req.prompt)
+            req.t_first = now
+            tok = int(nxt[slot, 0])
+            req.out.append(tok)
+            if self._is_done(req, tok):
+                self._reap(slot)
 
     def _decode_once(self) -> None:
         toks = np.zeros((self.max_batch, 1), np.int32)
         n_new = np.zeros((self.max_batch,), np.int32)
+        counters = np.zeros((self.max_batch,), np.int32)
         for slot, req in enumerate(self.slot_req):
             if req is not None:
                 toks[slot, 0] = req.out[-1]
                 n_new[slot] = 1
+                counters[slot] = len(req.out)
+                # COW invariant: the page this slot writes is private
+                assert self.alloc.refcount(
+                    int(self.page_table[slot,
+                                        self.lengths[slot]
+                                        // self.page_size])) == 1
         t0 = time.perf_counter()
-        nxt, self.pages = self._step(self.params, self.pages, toks,
-                                     self.lengths.copy(), n_new,
-                                     self.page_table)
+        nxt, self.pages = self._step(
+            self.params, self.pages, toks, self.lengths.copy(), n_new,
+            self.page_table, self.temps, self.top_ks, self.top_ps,
+            self.seeds, counters)
         nxt = np.asarray(jax.block_until_ready(nxt))
         dt = time.perf_counter() - t0
         n_act = int(n_new.sum())
@@ -201,6 +321,17 @@ class Scheduler:
         self.slot_req[slot] = None
         self.page_table[slot, :] = SCRATCH_PAGE
         self.lengths[slot] = 0
+        self.temps[slot] = 0.0
+        self.top_ks[slot] = 0
+        self.top_ps[slot] = 1.0
+        self.seeds[slot] = 0
+
+    def drop_prefix_cache(self) -> None:
+        """Release every trie-pinned page (pages still mapped by live
+        requests stay allocated until those finish). Used between
+        benchmark phases and by tests verifying the pool drains."""
+        if self.prefix is not None:
+            self.prefix.clear()
 
     def step(self) -> None:
         self._admit()
@@ -230,4 +361,6 @@ class Scheduler:
             "prefill_tok_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),
             "decode_tok_s": s["decode_tokens"] / max(s["decode_s"], 1e-9),
             "decode_steps": float(s["decode_steps"]),
+            "prefill_calls": float(s["prefill_calls"]),
+            "shared_tokens": float(s["shared_tokens"]),
         }

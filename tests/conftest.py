@@ -1,0 +1,18 @@
+"""Shared test configuration.
+
+Registers hypothesis profiles when the optional dependency is present:
+CI runs the property suites with the fixed, derandomized ``ci`` profile
+(set ``HYPOTHESIS_PROFILE=ci``) so tier-1 results are reproducible; the
+default local profile keeps hypothesis's random exploration.
+"""
+import os
+
+try:
+    from hypothesis import HealthCheck, settings
+
+    settings.register_profile(
+        "ci", derandomize=True, max_examples=30, deadline=None,
+        suppress_health_check=[HealthCheck.too_slow])
+    settings.load_profile(os.environ.get("HYPOTHESIS_PROFILE", "default"))
+except ImportError:           # optional dev dependency (see requirements-dev)
+    pass

@@ -114,3 +114,59 @@ def test_hlo_parser_counts_synthetic_collectives(kind, dims, dtype):
             f"  %c1 = {dt}[{shape}]{{0}} {kind}(%op0), channel_id=1\n")
     out = collective_bytes(text)
     assert out.get(kind, 0) == n * dbytes
+
+
+# -- refcounted page allocator (serve path) ---------------------------------
+
+_ALLOC_OPS = st.lists(
+    st.tuples(st.integers(0, 3), st.integers(0, 10**6)),
+    min_size=0, max_size=120)
+
+
+@settings(max_examples=60, deadline=None)
+@given(n_pages=st.integers(2, 24), ops=_ALLOC_OPS)
+def test_page_allocator_refcount_property(n_pages, ops):
+    """Random alloc/share/fork/free traffic never double-frees, never
+    leaks (after all frees n_free == pool size), and refcounts stay
+    non-negative — checked against a pure-dict model allocator."""
+    from repro.serve.kv_pages import PageAllocator
+
+    a = PageAllocator(n_pages)
+    live = {}                                     # page -> refcount model
+    for op, arg in ops:
+        if op == 0:                               # alloc
+            n = arg % n_pages
+            free_before = a.n_free
+            got = a.alloc(n)
+            assert (got is None) == (n > free_before)
+            for p in got or []:
+                assert p not in live and not a.is_free(p)
+                live[p] = 1
+        elif op == 1 and live:                    # share
+            p = sorted(live)[arg % len(live)]
+            a.share([p])
+            live[p] += 1
+        elif op == 2 and live:                    # fork (copy-on-write)
+            p = sorted(live)[arg % len(live)]
+            q = a.fork(p)
+            if live[p] == 1:
+                assert q == p
+            elif q is not None:
+                assert q != p and q not in live
+                live[p] -= 1
+                live[q] = 1
+        elif op == 3 and live:                    # free one reference
+            p = sorted(live)[arg % len(live)]
+            a.free([p])
+            live[p] -= 1
+            if live[p] == 0:
+                del live[p]
+                assert a.is_free(p)
+        assert all(a.refcount(p) == r and r > 0 for p, r in live.items())
+        assert a.n_free == n_pages - 1 - len(live)
+    for p, r in list(live.items()):
+        a.free([p] * r)
+    assert a.n_free == n_pages - 1                # no leak
+    if n_pages > 1:
+        with pytest.raises(ValueError):
+            a.free([1])                           # and no double free

@@ -132,9 +132,13 @@ def test_scheduler_mixed_queue_no_drops(setup):
         assert len(r.output) == r.max_new_tokens
         assert ((r.output >= 0) & (r.output < VOCAB)).all()
         assert r.ttft_s is not None and r.ttft_s >= 0
-    # all pages returned to the pool, all slots free
+    # all slots free; every page is either back in the pool or pinned by
+    # the prefix cache — and the pool drains fully once that is dropped
     sched = eng.scheduler
     assert sched.n_active == 0
+    assert sched.alloc.n_free + sched.prefix.n_cached_pages \
+        == sched.alloc.n_pages - 1
+    sched.drop_prefix_cache()
     assert sched.alloc.n_free == sched.alloc.n_pages - 1
     # isolation: re-running one request on a fresh engine is identical
     solo = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=3,
@@ -156,6 +160,7 @@ def test_scheduler_single_token_requests_drain(setup):
                     max_new_tokens=1) for i in range(5)]
     out = eng.generate(reqs)
     assert all(len(r.output) == 1 for r in out)
+    eng.scheduler.drop_prefix_cache()
     assert eng.scheduler.alloc.n_free == eng.scheduler.alloc.n_pages - 1
 
 
@@ -195,6 +200,145 @@ def test_page_allocator_freelist():
     assert pages_needed(1, 4) == 1
     assert pages_needed(9, 4) == 3
     assert bucket_len(3) == 8 and bucket_len(9) == 16 and bucket_len(16) == 16
+
+
+def test_page_allocator_refcounts():
+    """Shared pages only return to the pool when the last reader frees
+    them; fork detaches a private copy (or is a no-op on private pages)."""
+    a = PageAllocator(6)                       # pages 1..5
+    (p,) = a.alloc(1)
+    a.share([p])
+    assert a.refcount(p) == 2
+    a.free([p])
+    assert a.refcount(p) == 1 and not a.is_free(p)
+    # fork of a private page: no new allocation
+    assert a.fork(p) == p and a.n_free == 4
+    # fork of a shared page: fresh private copy, source keeps one reader
+    a.share([p])
+    q = a.fork(p)
+    assert q != p and a.refcount(q) == 1 and a.refcount(p) == 1
+    with pytest.raises(ValueError):
+        a.share([5])                           # page 5 was never allocated
+    a.free([p, q])
+    assert a.n_free == 5
+    with pytest.raises(ValueError):
+        a.fork(p)                              # fork of a freed page
+
+
+def test_prefix_sharing_skips_prefill_and_matches_no_sharing(setup):
+    """Requests with a common prompt prefix map the same physical pages:
+    fewer prefill tokens computed, fewer pages allocated, and outputs
+    token-for-token identical to a no-sharing engine."""
+    rcfg, params = setup
+    common = np.arange(1, 9, dtype=np.int32) % VOCAB       # 2 pages of 4
+
+    def reqs():
+        return [Request(prompt=np.concatenate(
+                    [common, np.array([20 + i], np.int32)]),
+                        max_new_tokens=4) for i in range(4)]
+
+    base = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                       page_size=4, share_prefix=False)
+    out_base = base.generate(reqs())
+    shared = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                         page_size=4, share_prefix=True)
+    out_shared = shared.generate(reqs())
+    for a, b in zip(out_base, out_shared):
+        np.testing.assert_array_equal(a.output, b.output)
+    sb, ss = base.scheduler.stats, shared.scheduler.stats
+    assert ss["prefill_tokens"] < sb["prefill_tokens"]
+    assert ss["pages_allocated"] < sb["pages_allocated"]
+    assert ss["shared_tokens"] > 0
+
+
+def test_prefix_sharing_cow_fork_on_full_prompt_hit(setup):
+    """A page-aligned full-prompt cache hit recomputes only the final
+    token, writing it into a COW fork of the last shared page — the
+    original stays intact for other readers."""
+    rcfg, params = setup
+    prompt = np.arange(1, 9, dtype=np.int32) % VOCAB       # exactly 2 pages
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=1,
+                      page_size=4)
+    a = eng.generate([Request(prompt=prompt, max_new_tokens=5)])[0]
+    pt0 = eng.scheduler.stats["prefill_tokens"]
+    b = eng.generate([Request(prompt=prompt, max_new_tokens=5)])[0]
+    np.testing.assert_array_equal(a.output, b.output)
+    # second pass recomputed exactly one token (the logits seed)
+    assert eng.scheduler.stats["prefill_tokens"] == pt0 + 1
+    solo = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=1,
+                       page_size=4, share_prefix=False)
+    c = solo.generate([Request(prompt=prompt, max_new_tokens=5)])[0]
+    np.testing.assert_array_equal(a.output, c.output)
+    eng.scheduler.drop_prefix_cache()
+    assert eng.scheduler.alloc.n_free == eng.scheduler.alloc.n_pages - 1
+
+
+def test_cow_fork_evicts_prefix_cache_under_pressure(setup):
+    """When the pool is empty at fork time, the scheduler must evict an
+    unrelated trie leaf instead of refusing a servable request."""
+    rcfg, params = setup
+    sched = Scheduler(rcfg, params, max_batch=1, page_size=4,
+                      max_len=16, n_pages=1 + 5)
+    p_prompt = np.arange(1, 9, dtype=np.int32)       # 2 full pages
+    q_prompt = np.array([30, 31, 32, 33], np.int32)  # 1 unrelated page
+    sched.submit(p_prompt, 2)
+    sched.submit(q_prompt, 2)
+    sched.run()
+    assert sched.prefix.n_cached_pages == 3
+    # full-prompt hit on p needs 2 fresh pages (draining the pool) + a
+    # fork page -> only q's cached page can supply it
+    rid = sched.submit(p_prompt, 8)
+    out = sched.run()[rid]
+    assert len(out.out) == 8
+    assert sched.prefix.stats["evicted"] >= 1
+    sched.drop_prefix_cache()
+    assert sched.alloc.n_free == sched.alloc.n_pages - 1
+
+
+def test_batched_prefill_single_call_per_wave(setup):
+    """One admission wave = one jitted prefill call, whatever the queue
+    depth; outputs still match the sequential-admission reference."""
+    rcfg, params = setup
+    prompts = [np.array([5, 9, 3, 7, 2, 11], np.int32),
+               np.array([1, 2, 3, 4, 5, 6], np.int32)]
+    ref = _dense_greedy(rcfg, params, prompts, max_new=6)
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=4)
+    out = eng.generate([Request(prompt=p, max_new_tokens=6)
+                        for p in prompts])
+    np.testing.assert_array_equal(np.stack([r.output for r in out]), ref)
+    assert eng.scheduler.stats["prefill_calls"] == 1
+
+
+def test_dense_fallback_engine_and_probes(setup):
+    """SSM families serve through the dense fixed-batch fallback: greedy
+    only (sampling raises), per-token prefill, eos truncation; the probe
+    APIs work on both engines."""
+    from repro.configs.base import SSMConfig
+    rcfg = tiny_rcfg(family="ssm", n_layers=4, act="silu", norm="rmsnorm",
+                     ssm=SSMConfig(version=1, d_state=8, d_conv=2))
+    params = transformer.init_model(jax.random.PRNGKey(1), rcfg)
+    eng = ServeEngine(rcfg, params, max_len=24)
+    assert not eng.paged
+    out = eng.generate([
+        Request(prompt=np.array([1, 2, 3], np.int32), max_new_tokens=4),
+        Request(prompt=np.array([4, 5], np.int32), max_new_tokens=4)])
+    for r in out:
+        assert r.output.shape == (4,)
+        assert ((r.output >= 0) & (r.output < VOCAB)).all()
+    with pytest.raises(ValueError, match="paged engine"):
+        eng.generate([Request(prompt=np.array([1], np.int32),
+                              max_new_tokens=2, temperature=0.5)])
+    with pytest.raises(ValueError):
+        eng.throughput_probe(2, steps=2, paged=True)
+    assert eng.throughput_probe(2, steps=2) > 0
+    # paged engine probes (greedy sampling args path)
+    prcfg, pparams = setup
+    peng = ServeEngine(prcfg, pparams, max_len=MAX_LEN, max_batch=2,
+                       page_size=4)
+    assert peng.throughput_probe(2, steps=2) > 0
+    assert peng.throughput_probe(2, steps=2, paged=False) > 0
+    assert peng.prefill_probe(8, batch=1, iters=1) > 0
 
 
 def test_paged_moe_decoder_smoke():
