@@ -8,6 +8,10 @@ Reports, for a small decoder LM on this host:
                           tentpole claim
   serve/decode_paged      steady-state paged decode tokens/sec at batch 8
   serve/decode_dense      dense-cache decode tokens/sec at batch 8
+  serve/decode_ssm_paged  steady-state paged decode, SSM (mamba1) backend —
+                          recurrent state served from snapshot pages
+                          through the same CacheBackend protocol
+  serve/decode_hybrid_paged  same for the hybrid (zamba2-style) backend
   serve/ttft              time-to-first-token through the scheduler
   serve/e2e_sched         mixed-length queue end-to-end through the
                           scheduler: aggregate generated tokens/sec
@@ -35,17 +39,32 @@ BATCH = 8
 MAX_LEN = 256
 
 
-def serve_rcfg() -> RunConfig:
-    model = ModelConfig(name="bench_serve", family="decoder", n_layers=8,
-                        d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
-                        vocab_size=256, act="silu", norm="rmsnorm",
-                        head_dim=16, dtype="float32")
+def serve_rcfg(**model_kw) -> RunConfig:
+    kw = dict(name="bench_serve", family="decoder", n_layers=8,
+              d_model=64, n_heads=4, n_kv_heads=2, d_ff=128,
+              vocab_size=256, act="silu", norm="rmsnorm",
+              head_dim=16, dtype="float32")
+    kw.update(model_kw)
     return RunConfig(
-        model=model,
+        model=ModelConfig(**kw),
         mgrit=MGRITConfig(enabled=True, cf=2, levels=2, n_open=1, n_close=1,
                           pad_to=2),
         optimizer=OptimizerConfig(),
         shape=ShapeConfig("serve", "decode", MAX_LEN, BATCH))
+
+
+def ssm_rcfg() -> RunConfig:
+    from repro.configs.base import SSMConfig
+    return serve_rcfg(name="bench_serve_ssm", family="ssm", n_layers=6,
+                      ssm=SSMConfig(version=1, d_state=16, d_conv=4))
+
+
+def hybrid_rcfg() -> RunConfig:
+    from repro.configs.base import SSMConfig
+    return serve_rcfg(name="bench_serve_hybrid", family="hybrid",
+                      n_layers=6, hybrid_attn_every=3,
+                      ssm=SSMConfig(version=2, d_state=16, d_conv=4,
+                                    headdim=16))
 
 
 def run(csv: CSV):
@@ -81,6 +100,17 @@ def run(csv: CSV):
     tps_dense = eng.throughput_probe(BATCH, steps=16, paged=False)
     csv.add("serve/decode_dense", BATCH / tps_dense * 1e6,
             f"tok_s={tps_dense:.0f}")
+
+    # -- SSM + hybrid through the same CacheBackend protocol ---------------
+    # (recurrent-state snapshot pages; previously these families decoded
+    # through a greedy-only dense fallback with no paging at all)
+    for row, fam_rcfg in (("serve/decode_ssm_paged", ssm_rcfg()),
+                          ("serve/decode_hybrid_paged", hybrid_rcfg())):
+        fparams = transformer.init_model(jax.random.PRNGKey(1), fam_rcfg)
+        feng = ServeEngine(fam_rcfg, fparams, max_len=MAX_LEN,
+                           max_batch=BATCH, page_size=16)
+        tps_fam = feng.throughput_probe(BATCH, steps=16)
+        csv.add(row, BATCH / tps_fam * 1e6, f"tok_s={tps_fam:.0f}")
 
     # -- scheduler: TTFT + mixed-queue end-to-end -------------------------
     rng = np.random.default_rng(0)

@@ -15,12 +15,34 @@ shared-prefix rows are present — if prefix sharing stopped reducing work:
 ``serve/prefix_shared`` must compute strictly fewer prefill tokens and
 allocate strictly fewer pages than ``serve/prefix_baseline`` (these are
 exact counters, so no tolerance applies).
+
+Rows in ``REQUIRED_ROWS`` (the CacheBackend coverage rows: paged SSM +
+hybrid decode, the shared-prefix counters) may not silently vanish from
+the current run: a rename or a deleted benchmark fails the gate instead
+of downgrading to a WARN.
 """
 from __future__ import annotations
 
 import argparse
 import json
 import sys
+
+
+# benchmark rows that must exist in every run (not just match baseline):
+# the serve stack's per-backend coverage — losing one of these means a
+# whole family stopped being measured
+REQUIRED_ROWS = (
+    "serve/decode_paged",
+    "serve/decode_ssm_paged",
+    "serve/decode_hybrid_paged",
+    "serve/prefix_shared",
+    "serve/prefix_baseline",
+)
+
+
+def check_required_rows(cur: dict) -> list:
+    return [f"required row {name} missing from current run"
+            for name in REQUIRED_ROWS if name not in cur]
 
 
 def _counters(rec) -> dict:
@@ -77,6 +99,7 @@ def main(argv=None) -> int:
                 "ERROR"):
             failures.append(f"{name}: crashed ({rec['derived']})")
     failures += check_prefix_sharing(cur)
+    failures += check_required_rows(cur)
     for name, brec in sorted(base.items()):
         if not name.startswith(prefixes):
             continue

@@ -7,6 +7,10 @@ read-only (copy-on-write) and prefill only their private tail. Half the
 requests decode greedily, half sample with per-request
 temperature/top-k/top-p — all lock-step in the same jitted call.
 
+The last request is streamed: ``engine.submit(req, stream=True)`` returns
+an iterator yielding ``(token_id, text_piece)`` with incremental
+detokenization, while the queued batch decodes lock-step alongside it.
+
 Run:  PYTHONPATH=src python examples/serve.py
 """
 import sys
@@ -26,7 +30,7 @@ def main():
     rcfg = reduce_config(registry.get_config("qwen3_1p7b"))
     params = transformer.init_model(jax.random.PRNGKey(0), rcfg)
     engine = ServeEngine(rcfg, params, max_len=64, max_batch=4, page_size=8)
-    print(f"engine: paged={engine.paged} "
+    print(f"engine: {type(engine.backend).__name__} "
           f"(pool: {engine.scheduler.alloc.n_pages} pages x "
           f"{engine.scheduler.page_size} tokens)")
 
@@ -52,6 +56,17 @@ def main():
         print(f"request {i}: prompt[{len(r.prompt):2d}] {mode:6s} -> "
               f"{list(map(int, r.output))}  "
               f"ttft={r.ttft_s*1e3:6.1f}ms  lat={r.latency_s*1e3:6.1f}ms")
+
+    # streaming: tokens surface as they are emitted, detokenized
+    # incrementally (the demo detokenizer renders ids as ⟨id⟩ pieces)
+    streamed = Request(
+        prompt=np.concatenate([system, np.array([42, 7], np.int32)]),
+        max_new_tokens=8, temperature=0.9, top_k=20, seed=99)
+    print("streamed request: ", end="", flush=True)
+    for _tok, piece in engine.submit(streamed, stream=True):
+        print(piece, end="", flush=True)
+    print(f"  ({len(streamed.output)} tokens, "
+          f"lat={streamed.latency_s*1e3:.1f}ms)")
 
     st = engine.scheduler.stats
     thr = engine.scheduler.throughput()

@@ -4,13 +4,15 @@
       [--reduced] [--requests 12] [--new-tokens 8] \
       [--max-batch 4] [--page-size 16] [--max-len 256] \
       [--temperature 0.8] [--top-k 40] [--top-p 0.95] \
-      [--shared-prefix-len 0] [--no-share-prefix]
+      [--shared-prefix-len 0] [--no-share-prefix] [--stream]
 
-Decoder attention archs run the paged continuous-batching engine (batched
-chunked prefill + refcounted paged KV with prefix sharing/copy-on-write +
-slot scheduler + per-request sampling); SSM/hybrid/encdec fall back to the
-dense greedy fixed-batch engine. On the production meshes, serving shards
-with Megatron TP + flash-decoding KV-seq sharding
+Every decode-capable family runs the same paged continuous-batching
+engine (batched chunked prefill + refcounted paged state with prefix
+sharing/copy-on-write + slot scheduler + per-request sampling): attention
+decoders page their KV cache, SSM archs (falcon_mamba_7b) page
+recurrent-state snapshots, hybrid (zamba2_1p2b) composes both — all
+behind the CacheBackend protocol (repro.serve.cache). On the production
+meshes, serving shards with Megatron TP + flash-decoding KV-seq sharding
 (configs/registry.decode_sharding); on this CPU container use --reduced.
 """
 from __future__ import annotations
@@ -31,12 +33,12 @@ def main(argv=None):
     ap.add_argument("--max-batch", type=int, default=4,
                     help="in-flight decode slots")
     ap.add_argument("--page-size", type=int, default=16,
-                    help="KV-cache page size (tokens)")
+                    help="state-page size (tokens)")
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="", help="restore params from here")
     ap.add_argument("--temperature", type=float, default=0.0,
-                    help="0 = greedy; > 0 samples (paged engine only)")
+                    help="0 = greedy; > 0 samples (any backend)")
     ap.add_argument("--top-k", type=int, default=0, help="0 disables")
     ap.add_argument("--top-p", type=float, default=1.0, help="1 disables")
     ap.add_argument("--shared-prefix-len", type=int, default=0,
@@ -44,6 +46,8 @@ def main(argv=None):
                          "(demonstrates prefix sharing)")
     ap.add_argument("--no-share-prefix", action="store_true",
                     help="disable the prefix cache / copy-on-write pages")
+    ap.add_argument("--stream", action="store_true",
+                    help="stream the first request token-by-token")
     args = ap.parse_args(argv)
 
     import jax
@@ -67,11 +71,8 @@ def main(argv=None):
                          max_batch=args.max_batch,
                          page_size=args.page_size,
                          share_prefix=not args.no_share_prefix)
-    print(f"engine: {'paged continuous-batching' if engine.paged else 'dense fixed-batch'}")
-    if not engine.paged and args.temperature > 0:
-        print("warning: dense fallback is greedy-only; forcing "
-              "--temperature 0")
-        args.temperature = 0.0
+    print(f"engine: paged continuous-batching via "
+          f"{type(engine.backend).__name__}")
     rng = np.random.default_rng(args.seed)
     common = rng.integers(0, rcfg.model.vocab_size,
                           size=args.shared_prefix_len).astype(np.int32)
@@ -82,21 +83,34 @@ def main(argv=None):
                     temperature=args.temperature, top_k=args.top_k,
                     top_p=args.top_p, seed=int(rng.integers(0, 2**31)))
             for _ in range(args.requests)]
-    for i, r in enumerate(engine.generate(reqs)):
+    if args.stream:
+        first, rest = reqs[0], reqs[1:]
+        stream = engine.submit(first, stream=True)
+        rest_rids = [engine.submit(r) for r in rest]
+        print("request 0 (streamed): ", end="", flush=True)
+        for _tok, piece in stream:
+            print(piece, end="", flush=True)
+        print()
+        done = engine.scheduler.run()
+        for r, rid in zip(rest, rest_rids):
+            ServeEngine._finalize(r, done.pop(rid))
+        out = [first] + rest
+    else:
+        out = engine.generate(reqs)
+    for i, r in enumerate(out):
         lat = f" ttft={r.ttft_s*1e3:.0f}ms lat={r.latency_s*1e3:.0f}ms" \
             if r.ttft_s is not None else ""
         print(f"request {i}: prompt[{len(r.prompt)}] -> "
               f"{list(map(int, r.output))}{lat}")
-    if engine.paged:
-        thr = engine.scheduler.throughput()
-        st = engine.scheduler.stats
-        print(f"aggregate: prefill {thr['prefill_tok_s']:.1f} tok/s, "
-              f"decode {thr['decode_tok_s']:.1f} tok/s "
-              f"({thr['decode_steps']:.0f} decode steps, "
-              f"{thr['prefill_calls']:.0f} prefill calls)")
-        print(f"prefix sharing: {st['shared_tokens']} prompt tokens "
-              f"reused, {st['pages_shared']} pages shared, "
-              f"{st['pages_allocated']} pages allocated")
+    thr = engine.scheduler.throughput()
+    st = engine.scheduler.stats
+    print(f"aggregate: prefill {thr['prefill_tok_s']:.1f} tok/s, "
+          f"decode {thr['decode_tok_s']:.1f} tok/s "
+          f"({thr['decode_steps']:.0f} decode steps, "
+          f"{thr['prefill_calls']:.0f} prefill calls)")
+    print(f"prefix sharing: {st['shared_tokens']} prompt tokens "
+          f"reused, {st['pages_shared']} pages shared, "
+          f"{st['pages_allocated']} pages allocated")
     print(f"steady-state decode probe: "
           f"{engine.throughput_probe(args.max_batch):.1f} tok/s")
     return 0

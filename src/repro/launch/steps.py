@@ -72,19 +72,14 @@ def make_prefill_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
     return prefill_step
 
 
-def make_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh], paged: bool = False):
-    """Greedy decode step builder.
-
-    Dense (default): (params, cache, tokens (B,T)) -> (next (B,1), cache).
-    T > 1 chunk-prefills the prompt into the cache in one call.
-    ``paged=True``: decode against the shared page pool with explicit
-    cache-page indices, an occupancy mask (n_new == 0 -> empty slot) and
-    vectorized per-slot sampling (see :func:`make_paged_serve_fn`):
-    (params, pages, tokens (B,S), lengths, n_new, page_table,
-    temps, top_ks, top_ps, seeds, counters) -> (next (B,1), pages).
+def make_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
+    """Dense greedy decode step builder: (params, cache, tokens (B,T)) ->
+    (next (B,1), cache). T > 1 chunk-prefills the prompt into the cache in
+    one call (attention kinds). This is the serial-forward oracle the
+    paged backends are conformance-tested against, and the engine's dense
+    comparison probe; production decode goes through
+    :func:`make_paged_serve_fn` + a ``repro.serve.cache`` backend.
     """
-    if paged:
-        return make_paged_serve_fn(rcfg, mesh)
     encdec = rcfg.model.family == "encdec"
 
     def serve_step(params, cache, tokens, xa=None):
@@ -189,27 +184,36 @@ def sample_tokens(logits, temps, top_ks, top_ps, seeds, counters):
                         None)
 
 
-def make_paged_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh]):
-    """Paged-cache step: one jitted function serves both chunked prefill
+def make_paged_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh],
+                        decode_fn=None):
+    """Paged-state step: one jitted function serves both chunked prefill
     (S = prompt bucket) and steady-state decode (S = 1); slot occupancy is
     the ``n_new`` mask, so admissions/evictions never retrace.
+
+    ``decode_fn`` is the family's paged forward — any of
+    ``transformer.{paged,ssm_paged,hybrid_paged}_decode_step`` (possibly
+    with ``page_size`` pre-bound), called as ``decode_fn(params, state,
+    tokens, lengths, n_new, page_table, rcfg)``. Defaults to the attention
+    KV step. The ``repro.serve.cache`` backends pick the right one, so
+    every family decodes through this single wrapper.
 
     Sampling is vectorized per slot inside the same trace: ``temps`` /
     ``top_ks`` / ``top_ps`` are (B,) request parameters (temperature 0 =
     greedy), ``seeds``/``counters`` derive each slot's PRNG key, so mixed
     greedy/sampled batches decode lock-step with no retrace.
     """
+    decode_fn = decode_fn or transformer.paged_decode_step
 
-    def paged_serve_step(params, pages, tokens, lengths, n_new, page_table,
+    def paged_serve_step(params, state, tokens, lengths, n_new, page_table,
                          temps, top_ks, top_ps, seeds, counters):
         ctx = axis_rules(mesh, rcfg.sharding) if mesh is not None else \
             _nullctx()
         with ctx:
-            logits, pages2 = transformer.paged_decode_step(
-                params, pages, tokens, lengths, n_new, page_table, rcfg)
+            logits, state2 = decode_fn(params, state, tokens, lengths,
+                                       n_new, page_table, rcfg)
             nxt = sample_tokens(logits, temps, top_ks, top_ps, seeds,
                                 counters)
-        return nxt[:, None], pages2
+        return nxt[:, None], state2
 
     return paged_serve_step
 

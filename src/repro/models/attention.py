@@ -11,7 +11,6 @@ The dense attention math lives in ``dot_attention``; when
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Optional
 
 import jax
@@ -227,23 +226,6 @@ def init_paged_kv_cache(cfg: ModelConfig, n_layers: int, n_pages: int,
     return {"k": jnp.zeros(shape, dt), "v": jnp.zeros(shape, dt)}
 
 
-@partial(jax.jit, donate_argnums=(0,))
-def _copy_page(buf, src, dst):
-    return buf.at[:, dst].set(buf[:, src])
-
-
-def copy_paged_kv(pages, src, dst):
-    """Copy-on-write fork, device half: duplicate physical page ``src``
-    into ``dst`` across every layer of the pool. src/dst are scalar page
-    ids (traced, so one compile covers all id pairs). The host half —
-    refcount bookkeeping and picking ``dst`` — is
-    ``repro.serve.kv_pages.PageAllocator.fork``."""
-    src = jnp.asarray(src, jnp.int32)
-    dst = jnp.asarray(dst, jnp.int32)
-    return {"k": _copy_page(pages["k"], src, dst),
-            "v": _copy_page(pages["v"], src, dst)}
-
-
 def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
                           page_table, lengths, n_new):
     """Self-attention reading/writing one layer's page pool.
@@ -259,8 +241,9 @@ def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
     Prefix-sharing contract: several slots may map the same physical page
     (read-only). The caller must guarantee every page overlapping a slot's
     write range [lengths[b], lengths[b]+n_new[b]) is private to that slot
-    (allocator refcount 1) — copy-on-write forks (``copy_paged_kv``)
-    happen host-side before the step is launched.
+    (allocator refcount 1) — copy-on-write forks
+    (``repro.serve.cache.copy_state_page``) happen host-side before the
+    step is launched.
     """
     dt = jnp.dtype(cfg.dtype)
     x = x.astype(dt)

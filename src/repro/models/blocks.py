@@ -22,7 +22,8 @@ import jax.numpy as jnp
 
 from repro.configs.base import ModelConfig
 from repro.models import ssm as ssm_mod
-from repro.models.attention import attention_apply, init_attention
+from repro.models.attention import (attention_apply, init_attention,
+                                    paged_attention_apply)
 from repro.models.layers import init_norm, norm_apply
 from repro.models.mlp import init_mlp, mlp_apply
 from repro.models.moe import init_moe, moe_apply
@@ -98,6 +99,22 @@ def attn_block_F(params, z, a, cfg: ModelConfig, *, kind: str):
     if kind == "attn_moe":
         return a + moe_apply(params["moe"], h_in, cfg)
     return a + mlp_apply(params["mlp"], h_in, cfg)
+
+
+def paged_attn_block(params, z, cfg: ModelConfig, *, kind: str, rope,
+                     pk, pv, page_table, lengths, n_new, gate=None):
+    """One attention block step against a layer's KV page pool: the paged
+    twin of ``block_step`` for attn_mlp/attn_moe kinds. Single owner of
+    the "paged attention + block formula + residual" composition, shared
+    by the decoder paged step (transformer.paged_decode_step) and the
+    hybrid backbone's interleaved shared-attention block. Returns
+    (z_next, new_pk, new_pv)."""
+    a, npk, npv = paged_attention_apply(
+        params["attn"], norm_apply(params["ln1"], z, cfg), cfg, rope=rope,
+        pk=pk, pv=pv, page_table=page_table, lengths=lengths, n_new=n_new)
+    f = attn_block_F(params, z, a, cfg, kind=kind)
+    scale = jnp.asarray(1.0, z.dtype) if gate is None else gate.astype(z.dtype)
+    return z + scale * f, npk, npv
 
 
 def block_step(params, z, cfg: ModelConfig, *, kind: str, causal: bool,

@@ -127,6 +127,218 @@ def init_mamba1_cache(cfg: ModelConfig, batch: int, n_layers: int):
 
 
 # ---------------------------------------------------------------------------
+# Paged recurrent state (serving)
+# ---------------------------------------------------------------------------
+#
+# The serve engine treats SSM decode state the same way it treats paged KV:
+# a pool of fixed-size pages managed by the refcounted PageAllocator
+# (repro.serve.kv_pages). A "page" here is not page_size tokens of KV but a
+# full per-slot state *snapshot* — page p of a slot holds the (conv window,
+# h) state after exactly (p+1)*page_size tokens. Decode reads the state of
+# position ``lengths`` from page (lengths-1)//page_size (the page whose
+# last write was position lengths-1) and writes the advanced state into
+# page lengths//page_size, so crossing a page boundary leaves the completed
+# page holding its boundary snapshot — exactly what the prefix trie
+# publishes, and what a later request with the same prompt prefix resumes
+# from (after a copy-on-write fork if it must write into it). Page 0 is
+# the scratch page: writes from idle slots and padded prompt positions
+# land there, and reads at position 0 are masked to the zero state.
+
+
+def paged_state_read(pool, page_table, lengths, page_size: int):
+    """Per-slot incoming state: pool page holding the snapshot after
+    ``lengths`` tokens (zeros for slots at position 0). pool: (n_pages,
+    ...); page_table: (B, P); lengths: (B,). Returns (B, ...)."""
+    P = page_table.shape[1]
+    slot = jnp.clip((lengths - 1) // page_size, 0, P - 1)
+    prev = jnp.take_along_axis(page_table, slot[:, None], axis=1)[:, 0]
+    init = pool[prev]
+    live = (lengths > 0).reshape((-1,) + (1,) * (init.ndim - 1))
+    return jnp.where(live, init, jnp.zeros_like(init))
+
+
+def snapshot_steps(page_table, lengths, n_new, page_size: int):
+    """Which pages this call finalizes, and at which local step.
+
+    For slot b processing positions lengths[b] .. lengths[b]+n_new[b]-1,
+    page-slot p receives its final write at local step
+    ``min((p+1)*page_size-1, last_pos) - lengths`` iff p overlaps the
+    written range. Returns (t (B, P) local step indices, phys (B, P)
+    physical page ids with unwritten entries routed to scratch page 0).
+    """
+    B, P = page_table.shape
+    last = lengths + n_new - 1
+    p = jnp.arange(P)[None, :]
+    t = jnp.minimum((p + 1) * page_size - 1, last[:, None]) - lengths[:, None]
+    written = (n_new[:, None] > 0) & (p >= (lengths // page_size)[:, None]) \
+        & (p <= (last // page_size)[:, None])
+    phys = jnp.where(written, page_table, 0)
+    return jnp.clip(t, 0, None), phys
+
+
+def paged_state_write(pool, snaps, phys):
+    """Scatter per-(slot, page) snapshots into the pool. snaps: (B, P, ...)
+    aligned with phys from :func:`snapshot_steps`; duplicate scratch-page
+    writes are harmless (scratch is never read as real state)."""
+    B, P = phys.shape
+    flat = snaps.reshape((B * P,) + snaps.shape[2:]).astype(pool.dtype)
+    return pool.at[phys.reshape(-1)].set(flat)
+
+
+def _gather_windows(xp, t, K: int):
+    """Conv-window snapshots: window after local step t = inputs at
+    xp[:, t+1 : t+K] (xp = [init window | new inputs], length K-1+S).
+    xp: (B, S+K-1, C); t: (B, P). Returns (B, P, K-1, C)."""
+    B = xp.shape[0]
+    idx = t[:, :, None] + jnp.arange(1, K)[None, None, :]
+    return xp[jnp.arange(B)[:, None, None], idx]
+
+
+def init_paged_ssm_pool(cfg: ModelConfig, n_layers: int, n_pages: int,
+                        version: int):
+    """State-snapshot page pool stacked over layers (page axis 1, matching
+    the paged KV layout so one COW copy covers every backend)."""
+    s = cfg.ssm
+    di = s.expand * cfg.d_model
+    dt = jnp.dtype(cfg.dtype)
+    if version == 1:
+        return {
+            "conv": jnp.zeros((n_layers, n_pages, s.d_conv - 1, di), dt),
+            "h": jnp.zeros((n_layers, n_pages, di, s.d_state), jnp.float32),
+        }
+    nh = di // s.headdim
+    ci = di + 2 * s.d_state
+    return {
+        "conv": jnp.zeros((n_layers, n_pages, s.d_conv - 1, ci), dt),
+        "h": jnp.zeros((n_layers, n_pages, nh, s.headdim, s.d_state),
+                       jnp.float32),
+    }
+
+
+def mamba1_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
+                       page_table, lengths, n_new, page_size: int):
+    """One layer's mamba1 mixer against the paged state pool.
+
+    x: (B, S, D) normed block input; slot b contributes ``n_new[b] <= S``
+    real tokens starting at absolute position ``lengths[b]`` (``n_new == 0``
+    marks an idle slot — its state is untouched). conv_pool: (n_pages,
+    K-1, di); h_pool: (n_pages, di, d_state). Returns (mixer output
+    (B, S, D), new_conv_pool, new_h_pool). Outputs at padded positions are
+    garbage; the caller reads position n_new-1 only.
+    """
+    s = cfg.ssm
+    dt_ = jnp.dtype(cfg.dtype)
+    x = x.astype(dt_)
+    B, S, D = x.shape
+    dtr = _dt_rank(cfg)
+
+    xz = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    xin, z = jnp.split(xz, 2, axis=-1)
+    xin = logical_constraint(xin, ("batch", "seq", "mlp"))
+    K = params["conv_w"].shape[0]
+    win0 = paged_state_read(conv_pool, page_table, lengths, page_size)
+    xp = jnp.concatenate([win0.astype(dt_), xin], axis=1)
+    w, b = params["conv_w"].astype(dt_), params["conv_b"].astype(dt_)
+    xc = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    xc = jax.nn.silu(xc + b[None, None, :])
+
+    dbc = jnp.einsum("bse,ef->bsf", xc, params["x_proj"].astype(dt_))
+    dtr_v, Bm, Cm = jnp.split(dbc, [dtr, dtr + s.d_state], axis=-1)
+    dt = jax.nn.softplus(
+        jnp.einsum("bsr,re->bse", dtr_v, params["dt_proj"].astype(dt_))
+        + params["dt_bias"].astype(dt_))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    dt32, xc32 = dt.astype(jnp.float32), xc.astype(jnp.float32)
+    B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    valid = jnp.arange(S)[None, :] < n_new[:, None]            # (B, S)
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t, v_t = inp
+        dA = jnp.exp(dt_t[:, :, None] * A[None])
+        h2 = dA * h + dt_t[:, :, None] * b_t[:, None, :] * x_t[:, :, None]
+        h = jnp.where(v_t[:, None, None], h2, h)    # padding: state frozen
+        y = jnp.einsum("bes,bs->be", h, c_t)
+        return h, (h, y)
+
+    h0 = paged_state_read(h_pool, page_table, lengths, page_size)
+    xs = (dt32.transpose(1, 0, 2), xc32.transpose(1, 0, 2),
+          B32.transpose(1, 0, 2), C32.transpose(1, 0, 2), valid.T)
+    _, (hs, ys) = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2).astype(dt_)
+    y = y + params["D"].astype(dt_)[None, None, :] * xc
+    y = y * jax.nn.silu(z)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+
+    t, phys = snapshot_steps(page_table, lengths, n_new, page_size)
+    hs_b = jnp.swapaxes(hs, 0, 1)                              # (B, S, ...)
+    h_snap = hs_b[jnp.arange(B)[:, None], t]                   # (B, P, ...)
+    new_h = paged_state_write(h_pool, h_snap, phys)
+    new_conv = paged_state_write(conv_pool, _gather_windows(xp, t, K), phys)
+    return out, new_conv, new_h
+
+
+def mamba2_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
+                       page_table, lengths, n_new, page_size: int):
+    """Mamba2 twin of :func:`mamba1_paged_apply` (same pool contract;
+    conv runs over the concatenated x/B/C channels, h is per-head)."""
+    s = cfg.ssm
+    dt_ = jnp.dtype(cfg.dtype)
+    x = x.astype(dt_)
+    B, S, D = x.shape
+    di = s.expand * D
+    nh = di // s.headdim
+
+    proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
+    z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * s.d_state], axis=-1)
+    K = params["conv_w"].shape[0]
+    win0 = paged_state_read(conv_pool, page_table, lengths, page_size)
+    xp = jnp.concatenate([win0.astype(dt_), xbc], axis=1)
+    w, b = params["conv_w"].astype(dt_), params["conv_b"].astype(dt_)
+    xbc = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
+    xbc = jax.nn.silu(xbc + b[None, None, :])
+    xin, Bm, Cm = jnp.split(xbc, [di, di + s.d_state], axis=-1)
+    dt = jax.nn.softplus(dt.astype(jnp.float32)
+                         + params["dt_bias"].astype(jnp.float32))
+    A = -jnp.exp(params["A_log"].astype(jnp.float32))
+
+    xh = xin.reshape(B, S, nh, s.headdim).astype(jnp.float32)
+    B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
+    valid = jnp.arange(S)[None, :] < n_new[:, None]
+
+    def step(h, inp):
+        dt_t, x_t, b_t, c_t, v_t = inp
+        dA = jnp.exp(dt_t * A[None])
+        h2 = dA[:, :, None, None] * h \
+            + (dt_t[:, :, None] * x_t)[..., None] * b_t[:, None, None, :]
+        h = jnp.where(v_t[:, None, None, None], h2, h)
+        y = jnp.einsum("bhes,bs->bhe", h, c_t)
+        return h, (h, y)
+
+    h0 = paged_state_read(h_pool, page_table, lengths, page_size)
+    xs = (dt.transpose(1, 0, 2), xh.transpose(1, 0, 2, 3),
+          B32.transpose(1, 0, 2), C32.transpose(1, 0, 2), valid.T)
+    _, (hs, ys) = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 0, 2, 3)
+    y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
+    y = y.reshape(B, S, di).astype(dt_)
+    y = y * jax.nn.silu(z)
+    ms = jnp.mean(jnp.square(y.astype(jnp.float32)), -1, keepdims=True)
+    y = (y.astype(jnp.float32) * jax.lax.rsqrt(ms + 1e-6)
+         * params["norm_scale"].astype(jnp.float32)).astype(dt_)
+    out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
+    out = logical_constraint(out, ("batch", "seq", "embed"))
+
+    t, phys = snapshot_steps(page_table, lengths, n_new, page_size)
+    hs_b = jnp.swapaxes(hs, 0, 1)
+    h_snap = hs_b[jnp.arange(B)[:, None], t]
+    new_h = paged_state_write(h_pool, h_snap, phys)
+    new_conv = paged_state_write(conv_pool, _gather_windows(xp, t, K), phys)
+    return out, new_conv, new_h
+
+
+# ---------------------------------------------------------------------------
 # Mamba 2 (SSD, scalar per-head decay, single B/C group)
 # ---------------------------------------------------------------------------
 

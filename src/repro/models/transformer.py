@@ -27,8 +27,8 @@ from repro.core import lp, mgrit
 from repro.core.lp import LPStatic, lp_forward, pad_depth
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
-from repro.models.blocks import (attn_block_F, block_kind, block_step,
-                                 init_block)
+from repro.models.blocks import (block_kind, block_step, init_block,
+                                 paged_attn_block)
 from repro.models.layers import (embed_tokens, init_embedding, init_norm,
                                  norm_apply, rope_freqs, unembed)
 from repro.parallel.sharding import logical_constraint
@@ -382,36 +382,60 @@ def prefill(params, batch, rcfg: RunConfig):
 
 
 # ---------------------------------------------------------------------------
-# Paged serving: block/paged KV cache + occupancy-masked step
+# Paged serving: one occupancy-masked step per block family
 # ---------------------------------------------------------------------------
+#
+# Every family exposes the same step signature
+#   (params, state, tokens, lengths, n_new, page_table, rcfg, *, page_size)
+#     -> (last_logits (B, V), new_state)
+# so the serve engine's CacheBackend protocol (repro.serve.cache) can wrap
+# any of them behind one jitted call. ``state`` is a pytree of page pools
+# with page axis 1: KV pages for attention, state-snapshot pages for
+# SSM (see repro.models.ssm "Paged recurrent state"), both for hybrid.
 
 
-def paged_decode_supported(cfg: ModelConfig) -> bool:
-    """The paged path covers attention-block families with a causal LM
-    decode (SSM/hybrid/encdec fall back to the dense-cache engine)."""
-    return cfg.family == "decoder" and block_kind(cfg) in ("attn_mlp",
-                                                           "attn_moe")
+def _stacked_layer_depth(rcfg: RunConfig) -> int:
+    plan = depth_plan(rcfg.model.n_layers, rcfg.mgrit)
+    return plan.n_open + plan.n_mid_padded + plan.n_close
 
 
 def init_paged_cache(rcfg: RunConfig, n_pages: int, page_size: int):
-    """Page pool sized for the full serial layer stack (open+mid+close)."""
+    """Attention KV page pool sized for the full serial layer stack
+    (open+mid+close)."""
+    return attn_mod.init_paged_kv_cache(rcfg.model, _stacked_layer_depth(rcfg),
+                                        n_pages, page_size)
+
+
+def init_paged_ssm_cache(rcfg: RunConfig, n_pages: int):
+    """State-snapshot page pool for the ssm family's full layer stack."""
     cfg = rcfg.model
-    plan = depth_plan(cfg.n_layers, rcfg.mgrit)
-    n = plan.n_open + plan.n_mid_padded + plan.n_close
-    return attn_mod.init_paged_kv_cache(cfg, n, n_pages, page_size)
+    return ssm_mod.init_paged_ssm_pool(cfg, _stacked_layer_depth(rcfg),
+                                       n_pages, cfg.ssm.version)
 
 
-def copy_paged_page(pages, src: int, dst: int):
-    """Copy-on-write fork of one physical page across all layers (the
-    scheduler calls this right after ``PageAllocator.fork`` hands it a
-    fresh destination page)."""
-    return attn_mod.copy_paged_kv(pages, src, dst)
+def init_paged_hybrid_cache(rcfg: RunConfig, n_pages: int, page_size: int):
+    """Hybrid (zamba2) pools: mamba2 state snapshots for every backbone
+    layer + KV pages for each interleaved shared-attention position, all
+    addressed by the same physical page ids."""
+    cfg = rcfg.model
+    n_attn = cfg.n_layers // cfg.hybrid_attn_every
+    return {
+        "mamba": ssm_mod.init_paged_ssm_pool(cfg, cfg.n_layers, n_pages, 2),
+        "attn": attn_mod.init_paged_kv_cache(cfg, n_attn, n_pages, page_size),
+    }
+
+
+def _paged_last_logits(params, z, n_new, cfg: ModelConfig):
+    z = norm_apply(params["final_norm"], z, cfg)
+    last = jnp.maximum(n_new - 1, 0)
+    z_last = jnp.take_along_axis(z, last[:, None, None], axis=1)
+    return unembed(params["embed"], z_last, cfg)[:, 0]
 
 
 def paged_decode_step(params, pages, tokens, lengths, n_new, page_table,
-                      rcfg: RunConfig):
-    """Batched step against the shared page pool — static shapes, dynamic
-    occupancy.
+                      rcfg: RunConfig, *, page_size: int = 0):
+    """Batched step against the shared KV page pool — static shapes,
+    dynamic occupancy.
 
     tokens: (B, S). S == 1 in steady-state decode; S == the prompt bucket
     during chunked prefill (one call writes the whole chunk). Slot b holds
@@ -423,7 +447,7 @@ def paged_decode_step(params, pages, tokens, lengths, n_new, page_table,
     cfg = rcfg.model
     kind = block_kind(cfg)
     if kind not in ("attn_mlp", "attn_moe"):
-        raise NotImplementedError("paged decode requires attention blocks")
+        raise NotImplementedError("paged KV decode requires attention blocks")
     stacked, gates = _all_layers_stacked(params, cfg)
     S = tokens.shape[1]
     pos = lengths[:, None] + jnp.arange(S)[None, :]
@@ -432,17 +456,84 @@ def paged_decode_step(params, pages, tokens, lengths, n_new, page_table,
 
     def step(z, xs):
         p, gate, (pk, pv) = xs
-        a, npk, npv = attn_mod.paged_attention_apply(
-            p["attn"], norm_apply(p["ln1"], z, cfg), cfg, rope=rope,
-            pk=pk, pv=pv, page_table=page_table, lengths=lengths,
-            n_new=n_new)
-        f = attn_block_F(p, z, a, cfg, kind=kind)
-        return z + gate.astype(z.dtype) * f, (npk, npv)
+        z2, npk, npv = paged_attn_block(
+            p, z, cfg, kind=kind, rope=rope, pk=pk, pv=pv,
+            page_table=page_table, lengths=lengths, n_new=n_new, gate=gate)
+        return z2, (npk, npv)
 
     z, (nk, nv) = jax.lax.scan(step, z, (stacked, gates,
                                          (pages["k"], pages["v"])))
-    z = norm_apply(params["final_norm"], z, cfg)
-    last = jnp.maximum(n_new - 1, 0)
-    z_last = jnp.take_along_axis(z, last[:, None, None], axis=1)
-    logits = unembed(params["embed"], z_last, cfg)[:, 0]
+    logits = _paged_last_logits(params, z, n_new, cfg)
     return logits, {"k": nk, "v": nv}
+
+
+def ssm_paged_decode_step(params, pools, tokens, lengths, n_new, page_table,
+                          rcfg: RunConfig, *, page_size: int):
+    """Paged twin of the dense SSM decode: same step contract as
+    :func:`paged_decode_step`, with KV pages replaced by state-snapshot
+    pages. Unlike the dense cache, chunked prefill works here: padded
+    positions (>= n_new) freeze the recurrent state, so one call advances
+    a whole prompt chunk."""
+    cfg = rcfg.model
+    kind = block_kind(cfg)
+    if kind not in ("mamba1", "mamba2"):
+        raise NotImplementedError("ssm paged decode requires mamba blocks")
+    mixer = ssm_mod.mamba1_paged_apply if kind == "mamba1" \
+        else ssm_mod.mamba2_paged_apply
+    stacked, gates = _all_layers_stacked(params, cfg)
+    z = embed_tokens(params["embed"], tokens, cfg)
+
+    def step(z, xs):
+        p, gate, (cpool, hpool) = xs
+        f, nc, nh = mixer(p["mixer"], norm_apply(p["norm"], z, cfg), cfg,
+                          conv_pool=cpool, h_pool=hpool,
+                          page_table=page_table, lengths=lengths,
+                          n_new=n_new, page_size=page_size)
+        return z + gate.astype(z.dtype) * f, (nc, nh)
+
+    z, (nc, nh) = jax.lax.scan(step, z, (stacked, gates,
+                                         (pools["conv"], pools["h"])))
+    logits = _paged_last_logits(params, z, n_new, cfg)
+    return logits, {"conv": nc, "h": nh}
+
+
+def hybrid_paged_decode_step(params, state, tokens, lengths, n_new,
+                             page_table, rcfg: RunConfig, *, page_size: int):
+    """Paged decode for the hybrid family: per-block composition keyed by
+    block kind — mamba2 backbone layers advance state-snapshot pages,
+    the interleaved shared-attention block reads/writes its KV pages —
+    all against one page table / one physical page id space."""
+    cfg = rcfg.model
+    k = cfg.hybrid_attn_every
+    n_seg, rem = divmod(cfg.n_layers, k)
+    S = tokens.shape[1]
+    pos = lengths[:, None] + jnp.arange(S)[None, :]
+    rope = rope_freqs(cfg.resolved_head_dim, cfg.rope_theta, pos)
+    z = embed_tokens(params["embed"], tokens, cfg)
+    new_conv, new_h, new_k, new_v = [], [], [], []
+    li = 0
+    for s_i in range(n_seg + (1 if rem else 0)):
+        span = k if s_i < n_seg else rem
+        for _ in range(span):
+            p = jax.tree.map(lambda a: a[li], params["backbone"])
+            f, nc, nh = ssm_mod.mamba2_paged_apply(
+                p["mixer"], norm_apply(p["norm"], z, cfg), cfg,
+                conv_pool=state["mamba"]["conv"][li],
+                h_pool=state["mamba"]["h"][li], page_table=page_table,
+                lengths=lengths, n_new=n_new, page_size=page_size)
+            z = z + f
+            new_conv.append(nc)
+            new_h.append(nh)
+            li += 1
+        if s_i < n_seg:
+            z, npk, npv = paged_attn_block(
+                params["shared_attn"], z, cfg, kind="attn_mlp", rope=rope,
+                pk=state["attn"]["k"][s_i], pv=state["attn"]["v"][s_i],
+                page_table=page_table, lengths=lengths, n_new=n_new)
+            new_k.append(npk)
+            new_v.append(npv)
+    logits = _paged_last_logits(params, z, n_new, cfg)
+    return logits, {
+        "mamba": {"conv": jnp.stack(new_conv), "h": jnp.stack(new_h)},
+        "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)},
+    }

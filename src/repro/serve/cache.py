@@ -1,0 +1,236 @@
+"""Unified ``CacheBackend`` API — one decode-state protocol per family.
+
+The paper's neural-ODE view treats every block family as one abstract
+propagator Phi; this module does the same for *decode state*. The serve
+engine and scheduler never mention model families: they talk to a
+:class:`CacheBackend`, which owns
+
+  device half  ``init(max_batch, n_pages) -> state`` plus the jitted
+               occupancy-masked step — ``prefill(state, slots, tokens)``
+               (S = prompt bucket) and ``step(state, slots, tokens)``
+               (S = 1) both return ``(state, next_tokens)`` with
+               per-request sampling applied inside the jitted call;
+  host half    the page ops ``alloc_view / share / fork / release`` over a
+               refcounted :class:`~repro.serve.kv_pages.PageAllocator`.
+               Backends with non-paged state may implement them as no-ops;
+               all three backends here are fully paged.
+
+Backends:
+
+- :class:`PagedKVBackend` — attention decoders. Pages hold ``page_size``
+  tokens of K/V per layer (``attention.init_paged_kv_cache``).
+- :class:`SSMStateBackend` — mamba1/mamba2 models. Pages hold fixed-size
+  recurrent-state *snapshots*: page p of a slot is the (conv window, h)
+  state after exactly ``(p+1)*page_size`` tokens (see
+  ``repro.models.ssm`` "Paged recurrent state"), so the same allocator
+  refcounting, prefix trie, and copy-on-write forking apply.
+- :class:`HybridBackend` — per-block composition keyed by block kind
+  (zamba2): mamba2 snapshot pools for the backbone + KV pools for the
+  interleaved shared-attention block, one shared page id space.
+
+The ``snapshot_state`` capability is the only semantic difference the
+scheduler ever sees: snapshot pages cannot be read in the same jitted call
+that writes them (state reads happen at scan start), and a full-prompt
+prefix hit cannot rewind a snapshot to recompute just the final token —
+the scheduler drops such pages from the match instead of forking them.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import RunConfig
+from repro.launch import steps as steps_mod
+from repro.models import transformer
+from repro.models.blocks import block_kind
+from repro.serve.kv_pages import PageAllocator
+
+
+@dataclasses.dataclass
+class SlotBatch:
+    """Host-side view of the decode slots for one jitted call: decode
+    coordinates (per-slot position, occupancy, page mapping) plus the
+    vectorized per-request sampling parameters."""
+    lengths: np.ndarray        # (B,)   cached tokens per slot
+    n_new: np.ndarray          # (B,)   new tokens this call (0 = idle slot)
+    page_table: np.ndarray     # (B, P) physical page ids (0 = scratch)
+    temps: np.ndarray          # (B,)   0 = exact greedy argmax path
+    top_ks: np.ndarray         # (B,)   0 disables
+    top_ps: np.ndarray         # (B,)   1 disables
+    seeds: np.ndarray          # (B,)   per-request PRNG stream
+    counters: np.ndarray       # (B,)   tokens already emitted
+
+    @classmethod
+    def greedy(cls, batch: int, page_table, lengths=None, n_new=None):
+        """All-greedy slots (probes, tests)."""
+        return cls(
+            lengths=np.zeros((batch,), np.int32) if lengths is None
+            else np.asarray(lengths, np.int32),
+            n_new=np.ones((batch,), np.int32) if n_new is None
+            else np.asarray(n_new, np.int32),
+            page_table=np.asarray(page_table, np.int32),
+            temps=np.zeros((batch,), np.float32),
+            top_ks=np.zeros((batch,), np.int32),
+            top_ps=np.ones((batch,), np.float32),
+            seeds=np.zeros((batch,), np.int32),
+            counters=np.zeros((batch,), np.int32))
+
+
+@functools.partial(jax.jit, donate_argnums=(0,))
+def _copy_tree_page(state, src, dst):
+    return jax.tree.map(lambda a: a.at[:, dst].set(a[:, src]), state)
+
+
+def copy_state_page(state, src: int, dst: int):
+    """Copy-on-write fork, device half: duplicate physical page ``src``
+    into ``dst`` across every pool leaf of any backend's state (page axis
+    1 by convention). src/dst are traced scalars, so one compile per
+    state structure covers all id pairs. The host half — refcounts and
+    picking ``dst`` — is ``PageAllocator.fork`` via
+    :meth:`CacheBackend.fork`."""
+    return _copy_tree_page(state, jnp.asarray(src, jnp.int32),
+                           jnp.asarray(dst, jnp.int32))
+
+
+class CacheBackend:
+    """Base backend: subclasses set ``snapshot_state`` and implement
+    ``init_state`` (device pools) + ``_decode_fn`` (the family's paged
+    forward, signature of ``transformer.paged_decode_step``)."""
+
+    #: pages are state snapshots (SSM/hybrid): no intra-wave sharing, no
+    #: tail forks on full-prompt prefix hits (see module docstring)
+    snapshot_state = False
+
+    def __init__(self, rcfg: RunConfig, params, mesh=None,
+                 page_size: int = 16):
+        self.rcfg = rcfg
+        self.params = params
+        self.mesh = mesh
+        self.page_size = page_size
+        self.alloc: Optional[PageAllocator] = None
+        self._step_fn = jax.jit(
+            steps_mod.make_paged_serve_fn(rcfg, mesh, self._decode_fn()),
+            donate_argnums=(1,))
+
+    # -- device half --------------------------------------------------------
+
+    def _decode_fn(self):
+        raise NotImplementedError
+
+    def init_state(self, n_pages: int):
+        """Fresh device page pools only (no allocator) — probes and tests
+        use this for scratch state."""
+        raise NotImplementedError
+
+    def init(self, max_batch: int, n_pages: int):
+        """Set up the host allocator and return the device state."""
+        del max_batch                      # geometry is pool-global
+        self.alloc = PageAllocator(n_pages)
+        return self.init_state(n_pages)
+
+    def _apply(self, state, slots: SlotBatch, tokens):
+        nxt, state = self._step_fn(
+            self.params, state, np.asarray(tokens, np.int32), slots.lengths,
+            slots.n_new, slots.page_table, slots.temps, slots.top_ks,
+            slots.top_ps, slots.seeds, slots.counters)
+        return state, nxt
+
+    def prefill(self, state, slots: SlotBatch, tokens):
+        """Chunked prefill: tokens (B, S) with per-slot occupancy in
+        ``slots.n_new``; returns (state, first sampled token (B, 1))."""
+        return self._apply(state, slots, tokens)
+
+    def step(self, state, slots: SlotBatch, tokens):
+        """Steady-state decode: tokens (B, 1); returns (state, next
+        (B, 1)). Same compiled fn as prefill at S == 1."""
+        return self._apply(state, slots, tokens)
+
+    # -- host half: page ops ------------------------------------------------
+    # No-ops (empty views, identity) would be valid for a non-paged
+    # backend; these delegate to the refcounted allocator.
+
+    def alloc_view(self, n: int):
+        """n private pages (refcount 1 each) or None when the pool can't
+        serve them right now."""
+        return self.alloc.alloc(n)
+
+    def share(self, pages):
+        """Map already-written pages read-only into another view."""
+        self.alloc.share(pages)
+
+    def release(self, pages):
+        """Drop one reference per page; last reference frees the page."""
+        self.alloc.free(pages)
+
+    def fork(self, state, page: int):
+        """Copy-on-write detach: returns (state, private page id) — the
+        same id if ``page`` had one reader, a device-copied fresh page
+        otherwise, or (state, None) when the pool is empty."""
+        dst = self.alloc.fork(page)
+        if dst is None or dst == page:
+            return state, dst
+        return copy_state_page(state, page, dst), dst
+
+
+class PagedKVBackend(CacheBackend):
+    """Attention decoders (attn_mlp / attn_moe): block/paged KV cache."""
+
+    snapshot_state = False
+
+    def _decode_fn(self):
+        return transformer.paged_decode_step
+
+    def init_state(self, n_pages: int):
+        return transformer.init_paged_cache(self.rcfg, n_pages,
+                                            self.page_size)
+
+
+class SSMStateBackend(CacheBackend):
+    """Mamba1/mamba2 models: recurrent state as snapshot pages."""
+
+    snapshot_state = True
+
+    def _decode_fn(self):
+        return functools.partial(transformer.ssm_paged_decode_step,
+                                 page_size=self.page_size)
+
+    def init_state(self, n_pages: int):
+        return transformer.init_paged_ssm_cache(self.rcfg, n_pages)
+
+
+class HybridBackend(CacheBackend):
+    """Hybrid (zamba2): mamba2 snapshot pools + shared-attention KV pools
+    composed per block kind, one page table for both."""
+
+    snapshot_state = True
+
+    def _decode_fn(self):
+        return functools.partial(transformer.hybrid_paged_decode_step,
+                                 page_size=self.page_size)
+
+    def init_state(self, n_pages: int):
+        return transformer.init_paged_hybrid_cache(self.rcfg, n_pages,
+                                                   self.page_size)
+
+
+def make_backend(rcfg: RunConfig, params, mesh=None,
+                 page_size: int = 16) -> CacheBackend:
+    """The only family dispatch in the serve stack: everything downstream
+    (scheduler, engine) speaks the CacheBackend protocol."""
+    cfg = rcfg.model
+    kind = block_kind(cfg)
+    if cfg.family == "decoder" and kind in ("attn_mlp", "attn_moe"):
+        return PagedKVBackend(rcfg, params, mesh, page_size)
+    if cfg.family == "ssm" and kind in ("mamba1", "mamba2"):
+        return SSMStateBackend(rcfg, params, mesh, page_size)
+    if cfg.family == "hybrid":
+        return HybridBackend(rcfg, params, mesh, page_size)
+    raise NotImplementedError(
+        f"no CacheBackend for family={cfg.family!r} (kind={kind!r}): "
+        "encoder models have no autoregressive decode, and encdec needs "
+        "per-request encoder state — use transformer.decode_step directly")

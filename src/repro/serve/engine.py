@@ -1,26 +1,29 @@
 """Continuous-batching serving engine.
 
-Decoder-family attention models take the paged path: **batched chunked
-prefill** (all admitted prompts -> KV pages in one jitted call), a
-**block/paged KV cache** (fixed-size refcounted pages, sequences of
-different lengths share one pool, common prompt prefixes share physical
-pages copy-on-write), **per-request sampling** (temperature / top-k /
-top-p / seed vectorized inside the jitted step; temperature 0 is the exact
-greedy path), and the **scheduler** (admit from queue into in-flight
-decode slots, evict finished sequences mid-decode, refill without
-recompiling — static batch shape, dynamic occupancy mask).
+Every decode-capable family — attention decoders, SSM (mamba1/mamba2),
+and hybrid — serves through the same paged path: **batched chunked
+prefill** (all admitted prompts -> state pages in one jitted call), a
+**refcounted page pool** (KV pages or recurrent-state snapshot pages,
+sequences of different lengths share one pool, common prompt prefixes
+share physical pages copy-on-write), **per-request sampling**
+(temperature / top-k / top-p / seed vectorized inside the jitted step;
+temperature 0 is the exact greedy path), and the **scheduler** (admit
+from queue into in-flight decode slots, evict finished sequences
+mid-decode, refill without recompiling — static batch shape, dynamic
+occupancy mask). The engine and scheduler are family-blind: everything
+state-shaped lives behind the :class:`repro.serve.cache.CacheBackend`
+protocol. Serving shards with Megatron TP (+ kv_seq sharding for long
+contexts) — the paper's layer-parallelism targets training (DESIGN.md §6).
 
-SSM / hybrid / encdec families fall back to the seed-style dense-cache
-batch engine (their recurrent caches advance token-by-token), still sharing
-the jitted greedy decode step. Serving shards with Megatron TP (+ kv_seq
-sharding for long contexts) — the paper's layer-parallelism targets
-training (DESIGN.md §6).
+:meth:`ServeEngine.submit` with ``stream=True`` returns an iterator
+yielding ``(token_id, text_piece)`` as tokens are emitted, with
+incremental detokenization.
 """
 from __future__ import annotations
 
 import dataclasses
 import time
-from typing import List, Optional
+from typing import Callable, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -29,6 +32,7 @@ import numpy as np
 from repro.configs.base import RunConfig
 from repro.launch import steps as steps_mod
 from repro.models import transformer
+from repro.serve.cache import SlotBatch
 from repro.serve.scheduler import Scheduler, bucket_len
 
 
@@ -36,14 +40,13 @@ from repro.serve.scheduler import Scheduler, bucket_len
 class Request:
     """One generation request. Generation stops early at ``eos_id`` and is
     capped so prompt + output never exceeds the engine's max_len — len(
-    output) can be < max_new_tokens in both cases (on every engine path).
+    output) can be < max_new_tokens in both cases.
 
-    Sampling (paged engine only; the dense fallback is greedy):
-    ``temperature`` 0 is the exact greedy argmax path; > 0 samples from
-    the temperature-scaled distribution restricted by ``top_k`` (0
-    disables) then ``top_p`` (1 disables). ``seed`` names the request's
-    private RNG stream — the same (prompt, sampling params, seed) yields
-    the same tokens in any slot and any batch composition.
+    Sampling (every backend): ``temperature`` 0 is the exact greedy argmax
+    path; > 0 samples from the temperature-scaled distribution restricted
+    by ``top_k`` (0 disables) then ``top_p`` (1 disables). ``seed`` names
+    the request's private RNG stream — the same (prompt, sampling params,
+    seed) yields the same tokens in any slot and any batch composition.
     """
     prompt: np.ndarray           # (T,) int32
     max_new_tokens: int = 16
@@ -57,30 +60,39 @@ class Request:
     latency_s: Optional[float] = None
 
 
+def default_detokenize(ids) -> str:
+    """Placeholder id->text mapping (this repro carries no tokenizer):
+    renders every id as one printable piece. Swap in a real detokenizer
+    via ``ServeEngine(..., detokenize=...)`` — any callable mapping the
+    full id list to text works; streaming emits the text diff."""
+    return "".join(f"⟨{int(i)}⟩" for i in ids)
+
+
 class ServeEngine:
     def __init__(self, rcfg: RunConfig, params, mesh=None,
                  max_len: int = 0, max_batch: int = 8, page_size: int = 16,
-                 share_prefix: bool = True):
+                 share_prefix: bool = True,
+                 detokenize: Optional[Callable] = None):
         self.rcfg = rcfg
         self.params = params
         self.mesh = mesh
         self.max_len = max_len or min(rcfg.model.max_seq_len, 4096)
-        self.paged = transformer.paged_decode_supported(rcfg.model)
+        self.detokenize = detokenize or default_detokenize
+        self.scheduler = Scheduler(
+            rcfg, params, max_batch=max_batch, page_size=page_size,
+            max_len=self.max_len, mesh=mesh, share_prefix=share_prefix)
+        self.backend = self.scheduler.backend
+        # dense-cache decode fn: the serial-forward oracle and the
+        # apples-to-apples comparison probe (throughput_probe(paged=False))
         self._decode = jax.jit(steps_mod.make_serve_fn(rcfg, mesh))
-        if self.paged:
-            self.scheduler = Scheduler(
-                rcfg, params, max_batch=max_batch, page_size=page_size,
-                max_len=self.max_len, mesh=mesh, share_prefix=share_prefix)
-        else:
-            self.scheduler = None
 
     # -- generation ---------------------------------------------------------
 
-    def generate(self, requests: List[Request]) -> List[Request]:
+    def _validate(self, requests: List[Request]) -> None:
         # validate the whole batch before any request is queued, so a bad
         # request can't leave earlier ones orphaned in the scheduler
         for r in requests:
-            if r.max_new_tokens < 1:       # same contract on both paths
+            if r.max_new_tokens < 1:
                 raise ValueError("max_new_tokens must be >= 1")
             if len(r.prompt) >= self.max_len:
                 raise ValueError(f"prompt ({len(r.prompt)}) >= max_len "
@@ -89,90 +101,68 @@ class ServeEngine:
                     or not 0.0 < r.top_p <= 1.0:
                 raise ValueError("bad sampling params: need temperature "
                                  ">= 0, top_k >= 0, top_p in (0, 1]")
-            if r.temperature > 0.0 and not self.paged:
-                raise ValueError(
-                    "sampling (temperature > 0) is only supported on the "
-                    "paged engine; the dense fallback decodes greedily")
-        if self.paged:
-            return self._generate_paged(requests)
-        return self._generate_dense(requests)
 
-    def _generate_paged(self, requests: List[Request]) -> List[Request]:
+    def _submit_one(self, r: Request):
+        return self.scheduler.submit_request(
+            r.prompt, r.max_new_tokens, r.eos_id, temperature=r.temperature,
+            top_k=r.top_k, top_p=r.top_p, seed=r.seed)
+
+    @staticmethod
+    def _finalize(r: Request, fin) -> Request:
+        r.output = np.asarray(fin.out, np.int32)
+        r.ttft_s = fin.ttft
+        r.latency_s = fin.latency
+        return r
+
+    def generate(self, requests: List[Request]) -> List[Request]:
+        self._validate(requests)
         sched = self.scheduler
-        rids = [sched.submit(r.prompt, r.max_new_tokens, r.eos_id,
-                             temperature=r.temperature, top_k=r.top_k,
-                             top_p=r.top_p, seed=r.seed)
-                for r in requests]
+        rids = [self._submit_one(r).rid for r in requests]
         done = sched.run()
-        for r, rid in zip(requests, rids):
-            fin = done.pop(rid)
-            r.output = np.asarray(fin.out, np.int32)
-            r.ttft_s = fin.ttft
-            r.latency_s = fin.latency
-        return requests
+        return [self._finalize(r, done.pop(rid))
+                for r, rid in zip(requests, rids)]
 
-    def _generate_dense(self, requests: List[Request]) -> List[Request]:
-        """Fixed-batch fallback: left-pad to one rectangle, prefill, then
-        lock-step decode (the dense cache has one shared write index)."""
-        B = len(requests)
-        T = max(len(r.prompt) for r in requests)
-        t0 = time.perf_counter()
-        toks = np.zeros((B, T), np.int32)
-        for i, r in enumerate(requests):
-            toks[i, T - len(r.prompt):] = r.prompt    # left-pad
-        tokens = jnp.asarray(toks)
-        cache = transformer.init_cache(self.rcfg, B, self.max_len)
-        cur, cache = self._prefill_into_cache(tokens, cache)
-        jax.block_until_ready(cur)
-        t_first = time.perf_counter()
-        # same cap as Scheduler.submit: the shared write index means the
-        # longest (left-padded) row bounds everyone
-        max_new = min(max(r.max_new_tokens for r in requests),
-                      self.max_len - T)
-        outs = [cur]
-        for _ in range(max_new - 1):
-            cur, cache = self._decode(self.params, cache, cur)
-            outs.append(cur)
-        jax.block_until_ready(cur)
-        t_done = time.perf_counter()
-        gen = np.concatenate([np.asarray(o) for o in outs], axis=1)
-        for i, r in enumerate(requests):
-            out = gen[i, : r.max_new_tokens]
-            if r.eos_id is not None:
-                hits = np.nonzero(out == r.eos_id)[0]
-                if hits.size:          # include the EOS token, then stop
-                    out = out[: hits[0] + 1]
-            r.output = out
-            r.ttft_s = t_first - t0
-            r.latency_s = t_done - t0
-        return requests
+    def submit(self, request: Request, *, stream: bool = False,
+               detokenize: Optional[Callable] = None):
+        """Queue one request. ``stream=False`` returns its rid (drain with
+        ``engine.scheduler.run()``). ``stream=True`` returns a generator
+        yielding ``(token_id, text_piece)`` as tokens are emitted — pulling
+        it drives the scheduler, so queued requests decode lock-step with
+        the streamed one; on exhaustion the Request's output/ttft/latency
+        fields are filled in."""
+        self._validate([request])
+        sreq = self._submit_one(request)
+        if not stream:
+            return sreq.rid
+        return self._stream(sreq, request, detokenize or self.detokenize)
 
-    def _prefill_into_cache(self, tokens: jnp.ndarray, cache):
-        """Chunked prefill for attention kinds: the whole prompt goes
-        through ONE jitted decode call (O(1) calls, not O(T)). SSM caches
-        advance token-by-token, so those families keep the loop."""
-        from repro.models.blocks import block_kind
-        kind = block_kind(self.rcfg.model)
-        if kind in ("attn_mlp", "attn_moe") \
-                and self.rcfg.model.family != "encdec":
-            return self._decode(self.params, cache, tokens)
-        nxt = None
-        for t in range(tokens.shape[1]):
-            nxt, cache = self._decode(self.params, cache, tokens[:, t:t + 1])
-        return nxt, cache
+    def _stream(self, req, request: Request, detokenize: Callable):
+        """Incremental detokenization: each new token re-detokenizes the
+        full emitted prefix and yields the text *diff*, so multi-byte /
+        multi-token pieces surface as soon as they are complete."""
+        sched = self.scheduler
+        emitted, text = 0, ""
+        while True:
+            while emitted < len(req.out):
+                tok = req.out[emitted]
+                emitted += 1
+                full = detokenize(req.out[:emitted])
+                piece = full[len(text):] if full.startswith(text) else full
+                text = full
+                yield int(tok), piece
+            if req.done:
+                break
+            sched.step()         # raises if the pool can never serve rid
+        self._finalize(request, req)
 
     # -- probes -------------------------------------------------------------
 
     def throughput_probe(self, batch: int, steps: int = 8,
-                         paged: Optional[bool] = None) -> float:
-        """tokens/sec of steady-state decode at the given batch. ``paged``
-        overrides the engine's default path (False -> dense cache even on a
-        paged engine, for apples-to-apples comparison)."""
-        use_paged = self.paged if paged is None else paged
-        if use_paged and not self.paged:
-            raise ValueError("engine is not paged (non-decoder/attention "
-                             "family); cannot probe the paged path")
-        if use_paged:
+                         paged: bool = True) -> float:
+        """tokens/sec of steady-state decode at the given batch.
+        ``paged=False`` measures the dense-cache decode step instead (the
+        seed design) for apples-to-apples comparison."""
+        if paged:
             return self._paged_probe(batch, steps)
         cache = transformer.init_cache(self.rcfg, batch, self.max_len)
         tok = jnp.ones((batch, 1), jnp.int32)
@@ -191,66 +181,39 @@ class ServeEngine:
         return np.asarray(
             1 + np.arange(batch * per).reshape(batch, per), np.int32)
 
-    def _scratch_pages(self, table: np.ndarray):
-        """Fresh probe-local device pool sized for ``table``."""
-        return transformer.init_paged_cache(
-            self.rcfg, 1 + table.size, self.scheduler.page_size)
-
-    def _greedy_sampling_args(self, batch: int):
-        """Per-slot sampling vectors selecting the exact argmax path."""
-        return (np.zeros((batch,), np.float32),       # temperature
-                np.zeros((batch,), np.int32),         # top_k (disabled)
-                np.ones((batch,), np.float32),        # top_p (disabled)
-                np.zeros((batch,), np.int32),         # seeds
-                np.zeros((batch,), np.int32))         # counters
-
     def _paged_probe(self, batch: int, steps: int) -> float:
-        """Steady-state paged decode at full occupancy on a scratch pool.
-        Reuses the scheduler's cached jitted step (no retrace per probe)."""
+        """Steady-state paged decode at full occupancy on a probe-local
+        scratch state (reuses the backend's compiled step)."""
         table = self._scratch_table(batch, steps + 1)
-        pages = self._scratch_pages(table)
-        fn = self.scheduler._step
-        samp = self._greedy_sampling_args(batch)
+        state = self.backend.init_state(1 + table.size)
+        slots = SlotBatch.greedy(batch, table)
         tok = np.ones((batch, 1), np.int32)
-        n_new = np.ones((batch,), np.int32)
-        lengths = np.zeros((batch,), np.int32)
-        tok, pages = fn(self.params, pages, tok, lengths, n_new, table,
-                        *samp)
+        state, tok = self.backend.step(state, slots, tok)   # compile
         jax.block_until_ready(tok)
         t0 = time.time()
         for _ in range(steps):
-            lengths = lengths + 1
-            tok, pages = fn(self.params, pages, tok, lengths, n_new, table,
-                            *samp)
+            slots.lengths = slots.lengths + 1
+            state, tok = self.backend.step(state, slots, tok)
         jax.block_until_ready(tok)
         return batch * steps / (time.time() - t0)
 
     def prefill_probe(self, prompt_len: int, batch: int = 1,
                       iters: int = 3) -> float:
-        """tokens/sec of prefill at the given prompt length: one chunked
-        call on the paged engine, the sequential per-token loop on the
-        dense fallback (SSM-family caches advance token-by-token)."""
+        """tokens/sec of chunked prefill at the given prompt length: one
+        jitted call writes the whole prompt on every backend."""
         rcfg = self.rcfg
         S = bucket_len(prompt_len)
         rng = np.random.default_rng(0)
         toks = rng.integers(0, rcfg.model.vocab_size, (batch, S),
                             dtype=np.int32)
-        if self.paged:
-            table = self._scratch_table(batch, S)
-            n_new = np.full((batch,), prompt_len, np.int32)
-            lengths = np.zeros((batch,), np.int32)
-            fn = self.scheduler._step
-            samp = self._greedy_sampling_args(batch)
+        table = self._scratch_table(batch, S)
+        slots = SlotBatch.greedy(
+            batch, table, n_new=np.full((batch,), prompt_len, np.int32))
 
-            def call():
-                pages = self._scratch_pages(table)
-                return fn(self.params, pages, toks, lengths, n_new, table,
-                          *samp)
-        else:
-            def call():
-                cache = transformer.init_cache(rcfg, batch, self.max_len)
-                return self._prefill_into_cache(
-                    jnp.asarray(toks[:, :prompt_len]), cache)
+        def call():
+            state = self.backend.init_state(1 + table.size)
+            return self.backend.prefill(state, slots, toks)
+
         out = call()
         jax.block_until_ready(out)
         ts = []

@@ -1,10 +1,11 @@
-"""Host-side bookkeeping for the block/paged KV cache.
+"""Host-side bookkeeping for paged decode state — any backend.
 
-The device tensors live in :func:`repro.models.attention.init_paged_kv_cache`
-(a pool of fixed-size pages shared by every sequence, stacked over layers).
-This module owns the allocator and the capacity math: the scheduler
-allocates ``pages_needed(prompt + max_new)`` physical pages when a request
-is admitted and returns them the moment it finishes, so sequences of
+The device tensors live behind the ``repro.serve.cache.CacheBackend``
+protocol (a pool of fixed-size pages shared by every sequence, stacked
+over layers: KV pages for attention, recurrent-state snapshot pages for
+SSM, both for hybrid). This module owns the allocator and the capacity
+math: ``pages_needed(prompt + max_new)`` physical pages are allocated when
+a request is admitted and returned the moment it finishes, so sequences of
 different lengths share one pool with no per-slot max_len reservation.
 
 Pages are **refcounted** so several page tables can map the same physical
@@ -13,15 +14,16 @@ refcount 1, ``share`` adds readers, and ``free`` only returns a page to the
 pool when its last reference dies. ``fork`` is the host half of
 copy-on-write — before a slot writes into a page other readers can still
 see, the scheduler forks it into a private copy (the device copy is
-:func:`repro.models.attention.copy_paged_kv`).
+:func:`repro.serve.cache.copy_state_page`).
 
 :class:`PrefixCache` is a trie over *full* prompt pages (page_size tokens
 per level, keyed by the page's token tuple) mapping shared prompt prefixes
-to the physical pages that already hold their KV. A request whose prompt
-walks k trie levels maps those k pages read-only and skips re-prefilling
-``k * page_size`` tokens. The trie pins each cached page with one
-allocator reference of its own; under pool pressure the scheduler evicts
-least-recently-matched leaves.
+to the physical pages that already hold their state. A request whose
+prompt walks k trie levels maps those k pages read-only and skips
+re-prefilling ``k * page_size`` tokens (on snapshot backends it resumes
+from the last matched page's state snapshot). The trie pins each cached
+page with one allocator reference of its own; under pool pressure the
+scheduler evicts least-recently-matched leaves.
 
 Page ``SCRATCH_PAGE`` (id 0) is never allocated: the jitted step routes
 writes from padded prompt positions and unoccupied slots there, which keeps

@@ -1,4 +1,9 @@
-"""Continuous-batching scheduler over the paged KV cache.
+"""Continuous-batching scheduler over a :class:`~repro.serve.cache.CacheBackend`.
+
+The scheduler is backend-agnostic: it never mentions model families. All
+decode state (attention KV pages, SSM state-snapshot pages, hybrid
+composition) lives behind the CacheBackend protocol — the scheduler only
+plans page views, occupancy, and sampling parameters.
 
 The decode step always runs with a static (max_batch, 1) shape; which slots
 are alive is the ``n_new`` occupancy mask, so admitting or evicting a
@@ -19,9 +24,13 @@ trie (``kv_pages.PrefixCache``); a later request whose prompt starts with a
 cached prefix maps those physical pages read-only (refcount +1) and
 prefills only the remainder. When the remainder would write into a shared
 page (a page-aligned full-prompt hit still recomputes the final token for
-its logits), the page is forked first — ``PageAllocator.fork`` picks a
-private copy, ``transformer.copy_paged_page`` duplicates the device KV.
-Under pool pressure, least-recently-matched trie leaves are evicted.
+its logits), the page is forked first — ``CacheBackend.fork`` picks a
+private copy and duplicates the device page. On backends whose pages are
+state *snapshots* (``backend.snapshot_state``: SSM, hybrid) a snapshot
+cannot be rewound to recompute just the final token, and cannot be read in
+the same call that writes it — those matches drop the offending pages and
+recompute their tokens instead. Under pool pressure, least-recently-matched
+trie leaves are evicted.
 
 **Sampling** is per-request and lives inside the jitted step
 (``launch.steps.sample_tokens``): temperature 0 slots take the exact
@@ -36,14 +45,11 @@ import dataclasses
 import time
 from typing import Deque, Dict, List, Optional, Set, Tuple
 
-import jax
 import numpy as np
 
 from repro.configs.base import RunConfig
-from repro.launch import steps as steps_mod
-from repro.models import transformer
-from repro.serve.kv_pages import (SCRATCH_PAGE, PageAllocator, PrefixCache,
-                                  pages_needed)
+from repro.serve.cache import CacheBackend, SlotBatch, make_backend
+from repro.serve.kv_pages import (SCRATCH_PAGE, PrefixCache, pages_needed)
 
 
 @dataclasses.dataclass
@@ -60,6 +66,10 @@ class ScheduledRequest:
     t_submit: float = 0.0
     t_first: float = 0.0             # first token produced (end of prefill)
     t_done: float = 0.0
+
+    @property
+    def done(self) -> bool:
+        return self.t_done > 0.0
 
     @property
     def ttft(self) -> float:
@@ -81,25 +91,23 @@ def bucket_len(n: int, lo: int = 8) -> int:
 class Scheduler:
     def __init__(self, rcfg: RunConfig, params, *, max_batch: int = 8,
                  page_size: int = 16, max_len: int = 0, n_pages: int = 0,
-                 mesh=None, share_prefix: bool = True):
-        if not transformer.paged_decode_supported(rcfg.model):
-            raise NotImplementedError(
-                f"paged serving needs decoder attention blocks, got "
-                f"family={rcfg.model.family!r}")
-        self.rcfg, self.params, self.mesh = rcfg, params, mesh
+                 mesh=None, share_prefix: bool = True,
+                 backend: Optional[CacheBackend] = None):
+        self.rcfg, self.params = rcfg, params
         self.max_len = max_len or min(rcfg.model.max_seq_len, 4096)
         self.page_size = page_size
         self.max_batch = max_batch
+        self.backend = backend if backend is not None else \
+            make_backend(rcfg, params, mesh=mesh, page_size=page_size)
+        assert self.backend.page_size == page_size
         self.pages_per_slot = pages_needed(self.max_len, page_size)
         # default pool: every slot can hold a max_len sequence, + scratch
         n_pages = n_pages or 1 + max_batch * self.pages_per_slot
-        self.alloc = PageAllocator(n_pages)
+        self.state = self.backend.init(max_batch, n_pages)
+        self.alloc = self.backend.alloc
         self.prefix: Optional[PrefixCache] = \
             PrefixCache(self.alloc, page_size) if share_prefix else None
         self._pending: Set[int] = set()   # pages this admit wave will write
-        self.pages = transformer.init_paged_cache(rcfg, n_pages, page_size)
-        self._step = jax.jit(steps_mod.make_serve_fn(rcfg, mesh, paged=True),
-                             donate_argnums=(1,))
 
         self.page_table = np.full((max_batch, self.pages_per_slot),
                                   SCRATCH_PAGE, np.int32)
@@ -127,6 +135,17 @@ class Scheduler:
                top_k: int = 0, top_p: float = 1.0, seed: int = 0) -> int:
         """Queue a request; returns its rid. max_new_tokens is capped so
         prompt + output fits max_len (the engine-wide Request contract)."""
+        return self.submit_request(
+            prompt, max_new_tokens, eos_id, temperature=temperature,
+            top_k=top_k, top_p=top_p, seed=seed).rid
+
+    def submit_request(self, prompt: np.ndarray, max_new_tokens: int,
+                       eos_id: Optional[int] = None, *,
+                       temperature: float = 0.0, top_k: int = 0,
+                       top_p: float = 1.0, seed: int = 0) \
+            -> ScheduledRequest:
+        """Like :meth:`submit` but returns the live ScheduledRequest (the
+        streaming path watches its ``out`` list grow)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) >= self.max_len:
             raise ValueError(f"prompt ({len(prompt)}) >= max_len "
@@ -148,13 +167,40 @@ class Scheduler:
                                t_submit=time.perf_counter())
         self._next_rid += 1
         self.queue.append(req)
-        return req.rid
+        return req
 
     # -- scheduler iteration ------------------------------------------------
 
     @property
     def n_active(self) -> int:
         return sum(r is not None for r in self.slot_req)
+
+    def _match_prefix(self, req: ScheduledRequest) -> List[int]:
+        """Longest usable trie match for this prompt, with backend-capability
+        adjustments applied, shared (refcount +1) before any allocator
+        traffic could free the pages."""
+        ps = self.page_size
+        T = len(req.prompt)
+        shared = self.prefix.match(req.prompt)
+        if self.backend.snapshot_state:
+            # snapshot pages are read at scan start, before this wave's
+            # writes land: anything written by this same admission wave
+            # is unusable — truncate the chain at the first pending page
+            for i, p in enumerate(shared):
+                if p in self._pending:
+                    shared = shared[:i]
+                    break
+            # a full-prompt hit must recompute the final token, but a
+            # snapshot can't rewind mid-page: drop the last page and
+            # recompute its page_size tokens (no fork needed)
+            if shared and len(shared) * ps >= T:
+                shared.pop()
+        elif shared and len(shared) * ps >= T and shared[-1] in self._pending:
+            # KV pages: only a tail fork reads pages mid-flight; pending
+            # pages can't be forked (their KV lands on device mid-call)
+            shared.pop()
+        self.backend.share(shared)
+        return shared
 
     def _plan_admit(self, req: ScheduledRequest) \
             -> Optional[Tuple[List[int], int]]:
@@ -168,40 +214,32 @@ class Scheduler:
         total = pages_needed(T + req.max_new_tokens, ps)
         shared: List[int] = []
         if self.prefix is not None:
-            shared = self.prefix.match(req.prompt)
-            # The final prompt token is always recomputed (its logits seed
-            # generation), so a page-aligned full-prompt hit writes into
-            # its last shared page -> COW fork. Pages still being written
-            # by this same admission wave can't be forked (their KV lands
-            # on device mid-call): drop them and recompute that page.
-            if shared and len(shared) * ps >= T \
-                    and shared[-1] in self._pending:
-                shared.pop()
-            self.alloc.share(shared)
+            shared = self._match_prefix(req)
         shared_len = len(shared) * ps
         fork_src = None
         if shared and shared_len >= T:
+            # page-aligned full-prompt hit (positional pages only): the
+            # final prompt token is recomputed for its logits, writing
+            # into the last shared page -> COW fork
             shared_len = T - 1
             fork_src = shared[-1]
         n_fresh = total - len(shared)
-        fresh = self.alloc.alloc(n_fresh)
+        fresh = self.backend.alloc_view(n_fresh)
         if fresh is None and self.prefix is not None:
             self.prefix.evict(n_fresh - self.alloc.n_free)
-            fresh = self.alloc.alloc(n_fresh)
+            fresh = self.backend.alloc_view(n_fresh)
         if fresh is None:
-            self.alloc.free(shared)
+            self.backend.release(shared)
             return None
         if fork_src is not None:
-            dst = self.alloc.fork(fork_src)
+            self.state, dst = self.backend.fork(self.state, fork_src)
             if dst is None and self.prefix is not None:
                 self.prefix.evict(1)             # same fallback as alloc
-                dst = self.alloc.fork(fork_src)
+                self.state, dst = self.backend.fork(self.state, fork_src)
             if dst is None:                      # needs one more page
-                self.alloc.free(fresh + shared)
+                self.backend.release(fresh + shared)
                 return None
             if dst != fork_src:
-                self.pages = transformer.copy_paged_page(
-                    self.pages, fork_src, dst)
                 self.stats["pages_allocated"] += 1
             shared[-1] = dst
         self.stats["pages_allocated"] += n_fresh
@@ -243,6 +281,11 @@ class Scheduler:
             self._pending.clear()
         return len(plans)
 
+    def _slot_batch(self, n_new, counters) -> SlotBatch:
+        return SlotBatch(self.lengths.copy(), n_new, self.page_table,
+                         self.temps, self.top_ks, self.top_ps, self.seeds,
+                         counters)
+
     def _batched_prefill(self, plans) -> None:
         """One jitted (max_batch, bucket) call writes every admitted
         prompt's non-shared remainder into its pages and samples each
@@ -257,11 +300,9 @@ class Scheduler:
             toks[slot, :n] = req.prompt[sl:]
             n_new[slot] = n
         t0 = time.perf_counter()
-        nxt, self.pages = self._step(
-            self.params, self.pages, toks, self.lengths.copy(), n_new,
-            self.page_table, self.temps, self.top_ks, self.top_ps,
-            self.seeds, counters)
-        nxt = np.asarray(jax.block_until_ready(nxt))
+        self.state, nxt = self.backend.prefill(
+            self.state, self._slot_batch(n_new, counters), toks)
+        nxt = np.asarray(nxt)
         now = time.perf_counter()
         self.stats["prefill_tokens"] += int(n_new.sum())
         self.stats["prefill_s"] += now - t0
@@ -289,11 +330,9 @@ class Scheduler:
                                         self.lengths[slot]
                                         // self.page_size])) == 1
         t0 = time.perf_counter()
-        nxt, self.pages = self._step(
-            self.params, self.pages, toks, self.lengths.copy(), n_new,
-            self.page_table, self.temps, self.top_ks, self.top_ps,
-            self.seeds, counters)
-        nxt = np.asarray(jax.block_until_ready(nxt))
+        self.state, nxt = self.backend.step(
+            self.state, self._slot_batch(n_new, counters), toks)
+        nxt = np.asarray(nxt)
         dt = time.perf_counter() - t0
         n_act = int(n_new.sum())
         self.stats["decode_tokens"] += n_act
@@ -316,7 +355,7 @@ class Scheduler:
         req = self.slot_req[slot]
         req.t_done = time.perf_counter()
         self.finished[req.rid] = req
-        self.alloc.free(self.slot_pages[slot])
+        self.backend.release(self.slot_pages[slot])
         self.slot_pages[slot] = []
         self.slot_req[slot] = None
         self.page_table[slot, :] = SCRATCH_PAGE
@@ -333,24 +372,28 @@ class Scheduler:
         if self.prefix is not None:
             self.prefix.clear()
 
-    def step(self) -> None:
-        self._admit()
+    def step(self) -> bool:
+        """One scheduler iteration (admit wave + one decode). Returns
+        False when idle (nothing queued or running); raises when the head
+        request can never be served by this pool."""
+        if not self.queue and not self.n_active:
+            return False
+        admitted = self._admit()
         if self.n_active:
             self._decode_once()
+        elif self.queue and admitted == 0:
+            # nothing running, nothing admitted: the head request can
+            # never get pages (admitted > 0 with everything already
+            # finished in prefill just loops back to admit more)
+            raise RuntimeError(
+                f"request {self.queue[0].rid} needs more pages than the "
+                f"pool holds ({self.alloc.n_pages - 1})")
+        return True
 
     def run(self) -> Dict[int, ScheduledRequest]:
         """Drain the queue; returns {rid: finished request}."""
-        while self.queue or self.n_active:
-            admitted = self._admit()
-            if self.n_active:
-                self._decode_once()
-            elif self.queue and admitted == 0:
-                # nothing running, nothing admitted: the head request can
-                # never get pages (admitted > 0 with everything already
-                # finished in prefill just loops back to admit more)
-                raise RuntimeError(
-                    f"request {self.queue[0].rid} needs more pages than the "
-                    f"pool holds ({self.alloc.n_pages - 1})")
+        while self.step():
+            pass
         return self.finished
 
     # -- reporting ----------------------------------------------------------

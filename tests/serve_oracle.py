@@ -1,0 +1,46 @@
+"""Shared conformance oracle for the serve-backend test suites.
+
+One implementation of "what the paged engine must reproduce": serial
+dense-cache decode (token by token, the seed design) combined with the
+same vectorized sampler the jitted paged step uses, run on the host with
+the request's own (seed, tokens_emitted) counter keying. Used by
+tests/test_serve_backends.py, tests/test_serve_fuzz.py (seeded tier-1
+twin), and tests/test_properties.py (hypothesis suite) so the three
+suites cannot silently drift apart.
+"""
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch.steps import sample_tokens
+from repro.models import transformer
+
+
+def dense_decode_oracle(rcfg, params, step, req, max_len: int) -> np.ndarray:
+    """Greedy-or-sampled reference stream for one request.
+
+    ``step`` is a jitted ``transformer.decode_step`` closure (pass the
+    same one across calls to reuse its compile cache); ``req`` is any
+    object with prompt / max_new_tokens / temperature / top_k / top_p /
+    seed / eos_id attributes (serve.engine.Request or
+    serve.scheduler.ScheduledRequest).
+    """
+    cache = transformer.init_cache(rcfg, 1, max_len)
+    toks = jnp.asarray(np.asarray(req.prompt, np.int32))[None]
+    lg = None
+    for t in range(toks.shape[1]):
+        lg, cache = step(params, cache, toks[:, t:t + 1])
+    out = []
+    for n in range(req.max_new_tokens):
+        nxt = sample_tokens(np.asarray(lg[:, -1], np.float32),
+                            np.array([req.temperature], np.float32),
+                            np.array([req.top_k], np.int32),
+                            np.array([req.top_p], np.float32),
+                            np.array([req.seed], np.int32),
+                            np.array([n], np.int32))
+        tok = int(np.asarray(nxt)[0])
+        out.append(tok)
+        if req.eos_id is not None and tok == req.eos_id:
+            break
+        if n < req.max_new_tokens - 1:
+            lg, cache = step(params, cache, jnp.asarray([[tok]], jnp.int32))
+    return np.asarray(out, np.int32)

@@ -116,6 +116,165 @@ def test_hlo_parser_counts_synthetic_collectives(kind, dims, dtype):
     assert out.get(kind, 0) == n * dbytes
 
 
+# -- CacheBackend conformance (serve path) ----------------------------------
+#
+# Every backend (attention KV pages, SSM state-snapshot pages, hybrid
+# composition) must reproduce the dense serial-forward oracle
+# token-for-token — greedy and seeded-sampled — through the full engine
+# (batched prefill, prefix sharing/COW, continuous batching).
+
+_CONF_VOCAB = 32
+_CONF_MAX_LEN = 24
+_CONF_FAMILIES = ("decoder", "ssm_mamba1", "ssm_mamba2", "hybrid")
+_CONF_CACHE = {}
+
+
+def _conf_setup(fam):
+    if fam in _CONF_CACHE:
+        return _CONF_CACHE[fam]
+    from repro.configs.base import (MGRITConfig, ModelConfig,
+                                    OptimizerConfig, RunConfig, SSMConfig,
+                                    ShapeConfig)
+    from repro.models import transformer
+    from repro.serve.engine import ServeEngine
+    kw = dict(name=fam, family="decoder", n_layers=4, d_model=16,
+              n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=_CONF_VOCAB,
+              act="gelu", norm="layernorm", dtype="float32")
+    if fam == "ssm_mamba1":
+        kw.update(family="ssm", ssm=SSMConfig(version=1, d_state=8,
+                                              d_conv=3))
+    elif fam == "ssm_mamba2":
+        kw.update(family="ssm", ssm=SSMConfig(version=2, d_state=8,
+                                              d_conv=3, headdim=16))
+    elif fam == "hybrid":
+        kw.update(family="hybrid", n_layers=5, hybrid_attn_every=2,
+                  ssm=SSMConfig(version=2, d_state=8, d_conv=3,
+                                headdim=16))
+    rcfg = RunConfig(
+        model=ModelConfig(**kw),
+        mgrit=MGRITConfig(enabled=True, cf=2, levels=2, fwd_iters=1,
+                          bwd_iters=1, n_open=1, n_close=1, pad_to=2),
+        optimizer=OptimizerConfig(),
+        shape=ShapeConfig(fam, "train", 16, 4))
+    params = transformer.init_model(
+        jax.random.PRNGKey(sum(map(ord, fam)) % 997), rcfg)
+    # one long-lived engine per family: examples share jit caches AND
+    # exercise the prefix trie / eviction paths across examples
+    eng = ServeEngine(rcfg, params, max_len=_CONF_MAX_LEN, max_batch=2,
+                      page_size=4)
+    step = jax.jit(lambda p, c, t: transformer.decode_step(p, c, t, rcfg))
+    _CONF_CACHE[fam] = (rcfg, params, eng, step)
+    return _CONF_CACHE[fam]
+
+
+def _conf_oracle(rcfg, params, step, req):
+    from serve_oracle import dense_decode_oracle
+    return dense_decode_oracle(rcfg, params, step, req, _CONF_MAX_LEN)
+
+
+@settings(max_examples=8, deadline=None,
+          suppress_health_check=[hypothesis.HealthCheck.too_slow,
+                                 hypothesis.HealthCheck.data_too_large])
+@given(fam=st.sampled_from(_CONF_FAMILIES), data=st.data())
+def test_cache_backend_conformance_vs_dense_oracle(fam, data):
+    """Continuous-batched paged decode == dense serial decode, token for
+    token, for every CacheBackend, under greedy AND seeded sampling, for
+    arbitrary prompt mixes (including shared prefixes page-aligned and
+    not)."""
+    from repro.serve.engine import Request
+    rcfg, params, eng, step = _conf_setup(fam)
+    common = np.arange(1, 1 + data.draw(
+        st.integers(0, 8), label="common_len"), dtype=np.int32)
+    reqs = []
+    for i in range(data.draw(st.integers(1, 3), label="n_req")):
+        tail_len = data.draw(st.integers(1, 6), label=f"tail{i}")
+        tail = np.asarray(data.draw(st.lists(
+            st.integers(0, _CONF_VOCAB - 1), min_size=tail_len,
+            max_size=tail_len), label=f"toks{i}"), np.int32)
+        temp = data.draw(st.sampled_from([0.0, 0.0, 0.9]),
+                         label=f"temp{i}")
+        reqs.append(Request(
+            prompt=np.concatenate([common, tail]),
+            max_new_tokens=data.draw(st.integers(1, 4), label=f"new{i}"),
+            temperature=temp,
+            top_k=data.draw(st.sampled_from([0, 8]), label=f"topk{i}"),
+            top_p=data.draw(st.sampled_from([1.0, 0.9]),
+                            label=f"topp{i}"),
+            seed=data.draw(st.integers(0, 99), label=f"seed{i}")))
+    out = eng.generate(reqs)
+    for r in out:
+        np.testing.assert_array_equal(
+            r.output, _conf_oracle(rcfg, params, step, r))
+    assert eng.scheduler.n_active == 0
+
+
+# -- SSMStateBackend page-op model check ------------------------------------
+
+_PAGEOP_SEQ = st.lists(
+    st.tuples(st.integers(0, 3), st.integers(0, 10**6)),
+    min_size=0, max_size=40)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_pages=st.integers(2, 10), ops=_PAGEOP_SEQ)
+def test_ssm_backend_page_ops_model_checked(n_pages, ops):
+    """Random alloc_view/share/fork/release traffic on an SSMStateBackend,
+    checked against a pure-dict refcount model — and fork must deep-copy
+    the device state snapshot (COW semantics on recurrent state)."""
+    rcfg, params, _, _ = _conf_setup("ssm_mamba1")
+    from repro.serve.cache import make_backend
+    backend = make_backend(rcfg, params, page_size=4)
+    state = backend.init(2, n_pages)
+    live = {}                                     # page -> refcount model
+    fill = {}                                     # page -> h fill value
+    for op, arg in ops:
+        if op == 0:                               # alloc_view
+            n = arg % n_pages
+            free_before = backend.alloc.n_free
+            got = backend.alloc_view(n)
+            assert (got is None) == (n > free_before)
+            for p in got or []:
+                live[p] = 1
+                fill[p] = float(p + 100 * len(fill))
+                state["h"] = state["h"].at[:, p].set(fill[p])
+        elif op == 1 and live:                    # share
+            p = sorted(live)[arg % len(live)]
+            backend.share([p])
+            live[p] += 1
+        elif op == 2 and live:                    # fork (copy-on-write)
+            p = sorted(live)[arg % len(live)]
+            state, q = backend.fork(state, p)
+            if live[p] == 1:
+                assert q == p
+            elif q is not None:
+                assert q != p and q not in live
+                live[p] -= 1
+                live[q] = 1
+                fill[q] = fill[p]
+                np.testing.assert_array_equal(
+                    np.asarray(state["h"][:, q]),
+                    np.asarray(state["h"][:, p]))
+                np.testing.assert_array_equal(
+                    np.asarray(state["conv"][:, q]),
+                    np.asarray(state["conv"][:, p]))
+        elif op == 3 and live:                    # release one reference
+            p = sorted(live)[arg % len(live)]
+            backend.release([p])
+            live[p] -= 1
+            if live[p] == 0:
+                del live[p]
+                del fill[p]
+        for p, r in live.items():
+            assert backend.alloc.refcount(p) == r and r > 0
+            np.testing.assert_array_equal(
+                np.asarray(state["h"][:, p]),
+                np.full_like(np.asarray(state["h"][:, p]), fill[p]))
+        assert backend.alloc.n_free == n_pages - 1 - len(live)
+    for p, r in list(live.items()):
+        backend.release([p] * r)
+    assert backend.alloc.n_free == n_pages - 1    # no leak
+
+
 # -- refcounted page allocator (serve path) ---------------------------------
 
 _ALLOC_OPS = st.lists(

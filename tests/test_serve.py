@@ -107,7 +107,6 @@ def test_paged_decode_matches_dense(setup):
     ref = _dense_greedy(rcfg, params, prompts, max_new=6)
     eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
                       page_size=4)
-    assert eng.paged
     out = eng.generate([Request(prompt=p, max_new_tokens=6)
                         for p in prompts])
     got = np.stack([r.output for r in out])
@@ -310,35 +309,44 @@ def test_batched_prefill_single_call_per_wave(setup):
     assert eng.scheduler.stats["prefill_calls"] == 1
 
 
-def test_dense_fallback_engine_and_probes(setup):
-    """SSM families serve through the dense fixed-batch fallback: greedy
-    only (sampling raises), per-token prefill, eos truncation; the probe
-    APIs work on both engines."""
+def test_ssm_engine_paged_and_probes(setup):
+    """SSM families serve through the same paged engine (state-snapshot
+    pages): mixed-length queues, sampling accepted, eos truncation; the
+    probe APIs work on every backend."""
     from repro.configs.base import SSMConfig
+    from repro.serve.cache import SSMStateBackend
     rcfg = tiny_rcfg(family="ssm", n_layers=4, act="silu", norm="rmsnorm",
                      ssm=SSMConfig(version=1, d_state=8, d_conv=2))
     params = transformer.init_model(jax.random.PRNGKey(1), rcfg)
-    eng = ServeEngine(rcfg, params, max_len=24)
-    assert not eng.paged
+    eng = ServeEngine(rcfg, params, max_len=24, max_batch=2, page_size=4)
+    assert isinstance(eng.backend, SSMStateBackend)
     out = eng.generate([
         Request(prompt=np.array([1, 2, 3], np.int32), max_new_tokens=4),
-        Request(prompt=np.array([4, 5], np.int32), max_new_tokens=4)])
+        Request(prompt=np.array([4, 5], np.int32), max_new_tokens=4),
+        Request(prompt=np.array([1], np.int32), max_new_tokens=2,
+                temperature=0.5, seed=3)])
     for r in out:
-        assert r.output.shape == (4,)
+        assert len(r.output) == r.max_new_tokens
         assert ((r.output >= 0) & (r.output < VOCAB)).all()
-    with pytest.raises(ValueError, match="paged engine"):
-        eng.generate([Request(prompt=np.array([1], np.int32),
-                              max_new_tokens=2, temperature=0.5)])
-    with pytest.raises(ValueError):
-        eng.throughput_probe(2, steps=2, paged=True)
     assert eng.throughput_probe(2, steps=2) > 0
-    # paged engine probes (greedy sampling args path)
+    assert eng.throughput_probe(2, steps=2, paged=False) > 0
+    assert eng.prefill_probe(8, batch=1, iters=1) > 0
+    # attention-backend probes (greedy sampling args path)
     prcfg, pparams = setup
     peng = ServeEngine(prcfg, pparams, max_len=MAX_LEN, max_batch=2,
                        page_size=4)
     assert peng.throughput_probe(2, steps=2) > 0
     assert peng.throughput_probe(2, steps=2, paged=False) > 0
     assert peng.prefill_probe(8, batch=1, iters=1) > 0
+
+
+def test_unservable_families_raise():
+    """Families with no CacheBackend (encoder: no decode; encdec: needs
+    per-request encoder state) are rejected at engine construction."""
+    rcfg = tiny_rcfg(family="encoder")
+    params = transformer.init_model(jax.random.PRNGKey(4), rcfg)
+    with pytest.raises(NotImplementedError, match="CacheBackend"):
+        ServeEngine(rcfg, params, max_len=MAX_LEN)
 
 
 def test_paged_moe_decoder_smoke():
@@ -348,7 +356,6 @@ def test_paged_moe_decoder_smoke():
     params = transformer.init_model(jax.random.PRNGKey(2), rcfg)
     eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
                       page_size=4)
-    assert eng.paged
     out = eng.generate([Request(prompt=np.array([1, 2, 3], np.int32),
                                 max_new_tokens=4)])
     assert out[0].output.shape == (4,)

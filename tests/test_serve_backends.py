@@ -1,0 +1,233 @@
+"""CacheBackend family regression suite + streaming API.
+
+Every decode-capable config family serves through the unified paged
+engine and accepts sampled requests (the old dense fallback rejected
+``temperature > 0`` — this is the regression net for that bugfix):
+
+  (a) temperature 0 is token-for-token the dense serial-forward oracle
+      (bitwise-greedy per backend),
+  (b) sampled requests (temperature/top_k/top_p/seed) reproduce the
+      dense-oracle logits + host-side ``sample_tokens`` stream exactly,
+  (c) streaming (`ServeEngine.submit(..., stream=True)`) yields the same
+      tokens as batch generation with incremental detokenization.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import (MGRITConfig, ModelConfig, MoEConfig,
+                                OptimizerConfig, RunConfig, SSMConfig,
+                                ShapeConfig)
+from repro.models import transformer
+from repro.serve.cache import (HybridBackend, PagedKVBackend,
+                               SSMStateBackend, make_backend)
+from repro.serve.engine import Request, ServeEngine, default_detokenize
+from serve_oracle import dense_decode_oracle
+
+pytestmark = pytest.mark.serve
+
+VOCAB = 64
+MAX_LEN = 32
+
+FAMILY_MODELS = {
+    "decoder": dict(family="decoder"),
+    "decoder_moe": dict(family="decoder",
+                        moe=MoEConfig(num_experts=4, top_k=2, d_ff=64)),
+    "ssm_mamba1": dict(family="ssm", n_layers=4, act="silu", norm="rmsnorm",
+                       ssm=SSMConfig(version=1, d_state=8, d_conv=3)),
+    "ssm_mamba2": dict(family="ssm", n_layers=4, act="silu", norm="rmsnorm",
+                       ssm=SSMConfig(version=2, d_state=8, d_conv=3,
+                                     headdim=16)),
+    "hybrid": dict(family="hybrid", n_layers=5, hybrid_attn_every=2,
+                   act="silu", norm="rmsnorm",
+                   ssm=SSMConfig(version=2, d_state=8, d_conv=3,
+                                 headdim=16)),
+}
+
+EXPECTED_BACKEND = {
+    "decoder": PagedKVBackend,
+    "decoder_moe": PagedKVBackend,
+    "ssm_mamba1": SSMStateBackend,
+    "ssm_mamba2": SSMStateBackend,
+    "hybrid": HybridBackend,
+}
+
+
+def family_rcfg(name: str) -> RunConfig:
+    kw = dict(name=name, family="decoder", n_layers=8, d_model=32,
+              n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=VOCAB,
+              act="gelu", norm="layernorm", dtype="float32")
+    kw.update(FAMILY_MODELS[name])
+    return RunConfig(
+        model=ModelConfig(**kw),
+        mgrit=MGRITConfig(enabled=True, cf=2, levels=2, fwd_iters=1,
+                          bwd_iters=1, n_open=1, n_close=1, pad_to=2),
+        optimizer=OptimizerConfig(),
+        shape=ShapeConfig(name, "train", 16, 4))
+
+
+_PARAMS = {}
+
+
+def family_setup(name: str):
+    if name not in _PARAMS:
+        rcfg = family_rcfg(name)
+        params = transformer.init_model(
+            jax.random.PRNGKey(sum(map(ord, name)) % 1000), rcfg)
+        step = jax.jit(
+            lambda p, c, t, _rcfg=rcfg: transformer.decode_step(
+                p, c, t, _rcfg))
+        _PARAMS[name] = (rcfg, params, step)
+    return _PARAMS[name]
+
+
+def dense_oracle(rcfg, params, step, req: Request) -> np.ndarray:
+    return dense_decode_oracle(rcfg, params, step, req, MAX_LEN)
+
+
+@pytest.mark.parametrize("name", sorted(FAMILY_MODELS))
+def test_every_family_samples_and_temp0_is_greedy(name):
+    """Regression for the deleted dense fallback: every family accepts
+    sampled requests, and temperature 0 stays bitwise-greedy vs the
+    dense serial oracle."""
+    rcfg, params, step = family_setup(name)
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=4)
+    assert isinstance(eng.backend, EXPECTED_BACKEND[name])
+    greedy = Request(prompt=np.array([5, 9, 3, 7, 2], np.int32),
+                     max_new_tokens=5)
+    sampled = Request(prompt=np.array([4, 2, 9], np.int32),
+                      max_new_tokens=5, temperature=1.1, top_k=16,
+                      top_p=0.9, seed=7)
+    out = eng.generate([greedy, sampled])
+    for r, ref in zip(out, (dense_oracle(rcfg, params, step, greedy),
+                            dense_oracle(rcfg, params, step, sampled))):
+        np.testing.assert_array_equal(r.output, ref)
+
+
+@pytest.mark.parametrize("name", ["ssm_mamba1", "hybrid"])
+def test_prefix_sharing_matches_no_sharing(name):
+    """Snapshot-page prefix sharing (SSM/hybrid) computes fewer prefill
+    tokens and never changes outputs."""
+    rcfg, params, _ = family_setup(name)
+    common = np.arange(1, 9, dtype=np.int32) % VOCAB     # 2 pages of 4
+
+    def reqs():
+        return [Request(prompt=np.concatenate(
+                    [common, np.array([20 + i], np.int32)]),
+                        max_new_tokens=4) for i in range(4)]
+
+    base = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                       page_size=4, share_prefix=False)
+    out_base = base.generate(reqs())
+    shared = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                         page_size=4, share_prefix=True)
+    out_shared = shared.generate(reqs())
+    for a, b in zip(out_base, out_shared):
+        np.testing.assert_array_equal(a.output, b.output)
+    sb, ss = base.scheduler.stats, shared.scheduler.stats
+    assert ss["prefill_tokens"] < sb["prefill_tokens"]
+    assert ss["shared_tokens"] > 0
+    # pool fully drains once the trie lets go
+    shared.scheduler.drop_prefix_cache()
+    assert shared.scheduler.alloc.n_free \
+        == shared.scheduler.alloc.n_pages - 1
+
+
+def test_ssm_full_prompt_hit_recomputes_last_page_only():
+    """A page-aligned full-prompt hit on a snapshot backend cannot fork
+    mid-page; it drops the last shared page and recomputes exactly
+    page_size tokens (the KV backend recomputes exactly 1)."""
+    rcfg, params, _ = family_setup("ssm_mamba1")
+    prompt = np.arange(1, 9, dtype=np.int32) % VOCAB     # exactly 2 pages
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=1,
+                      page_size=4)
+    a = eng.generate([Request(prompt=prompt, max_new_tokens=5)])[0]
+    pt0 = eng.scheduler.stats["prefill_tokens"]
+    b = eng.generate([Request(prompt=prompt, max_new_tokens=5)])[0]
+    np.testing.assert_array_equal(a.output, b.output)
+    assert eng.scheduler.stats["prefill_tokens"] == pt0 + 4
+    eng.scheduler.drop_prefix_cache()
+    assert eng.scheduler.alloc.n_free == eng.scheduler.alloc.n_pages - 1
+
+
+def test_streaming_matches_generate_and_detokenizes():
+    """submit(stream=True) yields (token_id, text_piece) pairs equal to
+    batch generation, pieces concatenate to the full detokenization, and
+    the Request is finalized on exhaustion."""
+    rcfg, params, _ = family_setup("decoder")
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=4)
+    prompt = np.array([3, 1, 4, 1, 5], np.int32)
+    ref = eng.generate([Request(prompt=prompt, max_new_tokens=6)])[0]
+    sreq = Request(prompt=prompt, max_new_tokens=6)
+    toks, pieces = [], []
+    for tok, piece in eng.submit(sreq, stream=True):
+        toks.append(tok)
+        pieces.append(piece)
+    np.testing.assert_array_equal(np.asarray(toks, np.int32), ref.output)
+    assert "".join(pieces) == default_detokenize(ref.output)
+    np.testing.assert_array_equal(sreq.output, ref.output)
+    assert sreq.ttft_s is not None and sreq.latency_s is not None
+
+
+def test_streaming_interleaves_with_queued_requests():
+    """Pulling a stream drives the whole scheduler: queued requests decode
+    lock-step and finish with the same outputs as solo runs."""
+    rcfg, params, _ = family_setup("ssm_mamba1")
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=4)
+    solo = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                       page_size=4)
+    other = Request(prompt=np.array([9, 8, 7], np.int32), max_new_tokens=4)
+    ref_other = solo.generate([Request(prompt=other.prompt,
+                                       max_new_tokens=4)])[0]
+    sreq = Request(prompt=np.array([1, 2], np.int32), max_new_tokens=6,
+                   temperature=0.8, seed=11)
+    stream = eng.submit(sreq, stream=True)
+    rid_other = eng.submit(other)
+    toks = [tok for tok, _ in stream]
+    assert len(toks) == 6
+    done = eng.scheduler.run()          # other finished alongside
+    np.testing.assert_array_equal(
+        np.asarray(done[rid_other].out, np.int32), ref_other.output)
+
+
+def test_streaming_custom_detokenizer_diffs():
+    """A multi-char detokenizer streams text diffs (incremental
+    detokenization re-renders the prefix and emits only the new text)."""
+    rcfg, params, _ = family_setup("decoder")
+
+    def detok(ids):
+        return " ".join(str(int(i)) for i in ids)
+
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=1,
+                      page_size=4, detokenize=detok)
+    sreq = Request(prompt=np.array([2, 4, 6], np.int32), max_new_tokens=4)
+    pieces = [piece for _, piece in eng.submit(sreq, stream=True)]
+    assert "".join(pieces) == detok(sreq.output)
+    assert all(not p.startswith(" ") or i > 0
+               for i, p in enumerate(pieces))
+    # a non-prefix-monotonic detokenizer falls back to re-emitting the
+    # full rendering instead of a broken diff
+    eng2 = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=1,
+                       page_size=4,
+                       detokenize=lambda ids: f"[{len(ids)} tokens]")
+    sreq2 = Request(prompt=np.array([1, 3], np.int32), max_new_tokens=3)
+    pieces2 = [p for _, p in eng2.submit(sreq2, stream=True)]
+    assert pieces2 == ["[1 tokens]", "[2 tokens]", "[3 tokens]"]
+
+
+def test_make_backend_rejects_non_decode_families():
+    for fam, extra in (("encoder", {}),
+                       ("encdec", {"n_dec_layers": 4})):
+        kw = dict(name="x", family=fam, n_layers=4, d_model=32, n_heads=2,
+                  n_kv_heads=2, d_ff=64, vocab_size=VOCAB, act="gelu",
+                  norm="layernorm", dtype="float32", **extra)
+        rcfg = RunConfig(
+            model=ModelConfig(**kw),
+            mgrit=MGRITConfig(enabled=False),
+            optimizer=OptimizerConfig(),
+            shape=ShapeConfig("x", "train", 16, 4))
+        with pytest.raises(NotImplementedError, match="CacheBackend"):
+            make_backend(rcfg, params=None)

@@ -86,6 +86,63 @@ def test_scheduler_fuzz_drains_without_drops_or_leaks(setup, seed):
     assert all(r == 0 for r in sched.alloc._ref[1:])
 
 
+@pytest.mark.parametrize("fam,seed", [("ssm_mamba1", 0), ("hybrid", 1),
+                                      ("decoder", 2)])
+def test_backend_conformance_fuzz_seeded(fam, seed):
+    """Tier-1 seeded twin of the hypothesis CacheBackend conformance suite
+    (test_properties.py): random mixed queues — shared prefixes, greedy +
+    seeded sampling — through the paged engine must match the dense
+    serial-forward oracle token-for-token on every backend."""
+    from serve_oracle import dense_decode_oracle
+
+    from repro.configs.base import SSMConfig
+    from repro.serve.engine import Request, ServeEngine
+
+    kw = dict(name=fam, family="decoder", n_layers=4, d_model=16,
+              n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=VOCAB,
+              act="gelu", norm="layernorm", dtype="float32")
+    if fam == "ssm_mamba1":
+        kw.update(family="ssm", ssm=SSMConfig(version=1, d_state=8,
+                                              d_conv=3))
+    elif fam == "hybrid":
+        kw.update(family="hybrid", n_layers=5, hybrid_attn_every=2,
+                  ssm=SSMConfig(version=2, d_state=8, d_conv=3,
+                                headdim=16))
+    rcfg = RunConfig(
+        model=ModelConfig(**kw),
+        mgrit=MGRITConfig(enabled=True, cf=2, levels=2, fwd_iters=1,
+                          bwd_iters=1, n_open=1, n_close=1, pad_to=2),
+        optimizer=OptimizerConfig(),
+        shape=ShapeConfig(fam, "train", 16, 4))
+    params = transformer.init_model(jax.random.PRNGKey(10 + seed), rcfg)
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=4)
+    step = jax.jit(lambda p, c, t: transformer.decode_step(p, c, t, rcfg))
+
+    def oracle(req):
+        return dense_decode_oracle(rcfg, params, step, req, MAX_LEN)
+
+    rng = np.random.default_rng(seed)
+    common = rng.integers(0, VOCAB, size=8).astype(np.int32)
+    for _ in range(3):                     # waves reuse the prefix trie
+        reqs = []
+        for _ in range(int(rng.integers(1, 4))):
+            tail = rng.integers(0, VOCAB, size=int(
+                rng.integers(1, 6))).astype(np.int32)
+            prompt = np.concatenate([common, tail]) \
+                if rng.random() < 0.5 else tail
+            sampled = rng.random() < 0.4
+            reqs.append(Request(
+                prompt=prompt, max_new_tokens=int(rng.integers(1, 5)),
+                temperature=0.9 if sampled else 0.0,
+                top_k=int(rng.choice([0, 8])) if sampled else 0,
+                top_p=float(rng.choice([1.0, 0.9])) if sampled else 1.0,
+                seed=int(rng.integers(0, 100))))
+        for r in eng.generate(reqs):
+            np.testing.assert_array_equal(r.output, oracle(r))
+    assert eng.scheduler.n_active == 0
+
+
 def test_scheduler_run_raises_when_pool_too_small(setup):
     """Regression for the `run()` error path: a request that can never get
     enough pages must raise, not spin forever."""
