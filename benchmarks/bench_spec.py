@@ -1,0 +1,112 @@
+"""Coarse-propagator speculative decoding vs plain paged decode.
+
+Per backend family, the same greedy workload runs through a plain paged
+engine and a spec engine (``cf=4, k=4`` — the paper's default coarsening
+as the draft), asserting token-for-token identical outputs, and reports:
+
+  serve/spec_attn     decode us/token with spec decode, attention backend
+  serve/spec_ssm      same, SSM (mamba1) snapshot-page backend
+  serve/spec_hybrid   same, hybrid (zamba2-style) backend
+
+Each row's derived field carries ``tok_s`` (spec decode throughput,
+steady-state decode phase only), ``plain_tok_s``, ``speedup`` and
+``accept`` (fraction of drafted tokens accepted). The bench RAISES if
+spec decode fails to beat plain decode on any family (the ISSUE 4
+acceptance criterion), or if any greedy output differs.
+
+Weights are initialized into the *trained regime*: residual output
+projections are damped so each block is a small perturbation of the
+identity — the smooth neural-ODE discretization trained transformers
+exhibit and the paper's multilevel coarsening assumes (§2). Raw random
+init is adversarial to ANY layer-coarsened draft (layer outputs are
+uncorrelated noise), and would measure tie-breaking luck instead of the
+mechanism. Acceptance rates are reported, not assumed.
+"""
+from __future__ import annotations
+
+import jax
+import numpy as np
+
+from benchmarks.bench_serve import hybrid_rcfg, serve_rcfg, ssm_rcfg
+from benchmarks.common import CSV
+from repro.models import transformer
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.spec import SpecConfig
+
+BATCH = 4
+PROMPT = 16
+NEW_TOKENS = 48
+MAX_LEN = 256
+CF, K = 4, 4
+
+# residual output projections (block F -> residual stream); norm_scale is
+# mamba2's gated-RMSNorm gain, which otherwise pins |F| at O(1)
+_RESIDUAL_OUT = ("out_proj", "wo", "w_out", "norm_scale")
+
+
+def trained_regime(params, factor: float):
+    """Damp every residual output projection by ``factor``: post-training
+    transformer blocks are near-identity maps (the paper's smoothness
+    premise); this reproduces that regime from random init."""
+    if isinstance(params, dict):
+        return {k: (v * factor if k in _RESIDUAL_OUT
+                    else trained_regime(v, factor))
+                for k, v in params.items()}
+    return params
+
+
+def _requests(rcfg):
+    rng = np.random.default_rng(0)
+    return [Request(
+        prompt=rng.integers(0, rcfg.model.vocab_size,
+                            size=PROMPT).astype(np.int32),
+        max_new_tokens=NEW_TOKENS) for _ in range(BATCH)]
+
+
+def _decode_tok_s(engine, reqs):
+    """Run the workload and return (decode tokens/s, outputs): throughput
+    comes from the scheduler's own decode counters, so prefill
+    compile/time is excluded — that path is identical for both engines
+    and benched by serve/prefill_chunked."""
+    for k in engine.scheduler.stats:
+        engine.scheduler.stats[k] = type(engine.scheduler.stats[k])(0)
+    out = engine.generate(reqs)
+    s = engine.scheduler.stats
+    assert all(len(r.output) == NEW_TOKENS for r in out)
+    return s["decode_tokens"] / max(s["decode_s"], 1e-9), out
+
+
+def run(csv: CSV):
+    fams = (("serve/spec_attn", serve_rcfg(), 0.1),
+            ("serve/spec_ssm", ssm_rcfg(), 0.1),
+            ("serve/spec_hybrid", hybrid_rcfg(), 0.05))
+    failures = []
+    for row, rcfg, damp in fams:
+        params = trained_regime(
+            transformer.init_model(jax.random.PRNGKey(0), rcfg), damp)
+        kw = dict(max_len=MAX_LEN, max_batch=BATCH, page_size=16)
+        plain = ServeEngine(rcfg, params, **kw)
+        spec = ServeEngine(rcfg, params, spec=SpecConfig(cf=CF, k=K), **kw)
+        plain.generate(_requests(rcfg))          # warm every trace
+        spec.generate(_requests(rcfg))
+        best_p, best_s = 0.0, 0.0
+        for _ in range(3):                       # medians are too spiky on
+            p_tok_s, ref = _decode_tok_s(plain, _requests(rcfg))
+            s_tok_s, got = _decode_tok_s(spec, _requests(rcfg))
+            best_p = max(best_p, p_tok_s)        # shared CI hosts; compare
+            best_s = max(best_s, s_tok_s)        # best-of-3 each
+        for a, b in zip(ref, got):
+            if not np.array_equal(a.output, b.output):
+                failures.append(f"{row}: greedy outputs diverged")
+                break
+        accept = spec.stats["accept_rate"]
+        speedup = best_s / max(best_p, 1e-9)
+        csv.add(row, 1e6 / best_s,
+                f"tok_s={best_s:.0f};plain_tok_s={best_p:.0f};"
+                f"speedup={speedup:.2f};accept={accept:.2f}")
+        if speedup <= 1.0:
+            failures.append(
+                f"{row}: spec decode {best_s:.0f} tok/s not faster than "
+                f"plain {best_p:.0f} tok/s (accept={accept:.2f})")
+    if failures:
+        raise RuntimeError("; ".join(failures))

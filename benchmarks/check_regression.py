@@ -17,9 +17,9 @@ allocate strictly fewer pages than ``serve/prefix_baseline`` (these are
 exact counters, so no tolerance applies).
 
 Rows in ``REQUIRED_ROWS`` (the CacheBackend coverage rows: paged SSM +
-hybrid decode, the shared-prefix counters) may not silently vanish from
-the current run: a rename or a deleted benchmark fails the gate instead
-of downgrading to a WARN.
+hybrid decode, the shared-prefix counters, the per-family speculative-
+decoding rows) may not silently vanish from the current run: a rename or
+a deleted benchmark fails the gate instead of downgrading to a WARN.
 """
 from __future__ import annotations
 
@@ -37,6 +37,12 @@ REQUIRED_ROWS = (
     "serve/decode_hybrid_paged",
     "serve/prefix_shared",
     "serve/prefix_baseline",
+    # speculative decoding: one row per backend family (tokens/s +
+    # acceptance rate; bench_spec itself raises if spec fails to beat
+    # plain decode, which surfaces here as a _meta ERROR)
+    "serve/spec_attn",
+    "serve/spec_ssm",
+    "serve/spec_hybrid",
 )
 
 

@@ -9,6 +9,7 @@
   bench_kernels        (ours)     Pallas kernels vs oracles
   bench_roofline       (ours)     dry-run roofline aggregation
   bench_serve          (ours)     continuous-batching serve engine
+  bench_spec           (ours)     coarse-propagator speculative decoding
 
 Prints ``name,us_per_call,derived`` CSV; ``--emit-json PATH`` also writes
 the rows as JSON for the CI regression gate (benchmarks.check_regression).
@@ -28,9 +29,10 @@ sys.path.insert(0, "src")
 from benchmarks.common import CSV  # noqa: E402
 
 ALL = ("kernels", "roofline", "perf_report", "scaling", "dp_lp", "serve",
-       "convergence", "indicator", "buffer", "finetune_delta")
+       "spec", "convergence", "indicator", "buffer", "finetune_delta")
 
-FAST = ("kernels", "roofline", "perf_report", "scaling", "dp_lp", "serve")
+FAST = ("kernels", "roofline", "perf_report", "scaling", "dp_lp", "serve",
+        "spec")
 
 
 def main(argv=None) -> None:

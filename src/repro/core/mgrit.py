@@ -154,13 +154,30 @@ def serial_solve(step_fn: StepFn, stacked, z0, h: float, g=None,
 
 
 # ---------------------------------------------------------------------------
-# The V-cycle
+# Level restriction
 # ---------------------------------------------------------------------------
 
 
-def _coarse_args(chunked, spec: MGRITSpec):
-    """Level l+1 stacked propagator args = fine args at coarse indices."""
-    return _tree_idx(chunked, (slice(None), 0))
+def coarse_restrict(stacked, cf: int):
+    """Level restriction R: the coarse propagator's stacked arguments are
+    the fine arguments at every ``cf``-th layer (paper Fig. 2 — coarse
+    point j reuses the fine weights of layer ``j*cf``; the ODE step is
+    rescaled by the caller: ``h_c = h * cf`` inside the V-cycle, a gate /
+    residual scale at serve time). This is the single owner of the
+    coarse-grid restriction, shared by the MGRIT solver below and the
+    serve engine's coarse-propagator draft model
+    (``repro.serve.spec`` via ``transformer.coarse_draft_params``).
+
+    Unlike the solver (which requires ``N % cf == 0``), the restriction
+    itself accepts any depth: the last coarse layer of a ragged stack
+    stands in for ``N - (J-1)*cf < cf`` fine layers.
+    """
+    return jax.tree.map(lambda a: a[::cf], stacked)
+
+
+# ---------------------------------------------------------------------------
+# The V-cycle
+# ---------------------------------------------------------------------------
 
 
 def _vcycle(step_fn: StepFn, stacked, z0, states, zT, g, spec: MGRITSpec,
@@ -204,7 +221,7 @@ def _vcycle(step_fn: StepFn, stacked, z0, states, zT, g, spec: MGRITSpec,
     resnorm = jnp.sqrt(jnp.sum(jnp.square(r.astype(jnp.float32))))
 
     # ---- coarse grid (FAS): u_{j+1} = Phi_c(u_j) + g_c[j] ----
-    coarse = _coarse_args(chunked, spec)
+    coarse = coarse_restrict(stacked, cf)
     h_c = h * cf
     # replicate the coarse problem (the paper's serial coarse solve)
     u0_rep = logical_constraint(u0, (None,) + spec.znames) \
@@ -266,7 +283,7 @@ def mgrit_solve(step_fn: StepFn, stacked, z0, spec: MGRITSpec,
     chunked = _chunk(stacked, J, cf)
 
     if init_states is None:
-        coarse = _coarse_args(chunked, spec)
+        coarse = coarse_restrict(stacked, cf)
         cs, czT = serial_solve(step_fn, coarse, z0, spec.h * cf)
         Zc0 = _constrain(cs, spec, ("layers",))
         U = _f_relax(step_fn, chunked, Zc0, None, spec, spec.h)

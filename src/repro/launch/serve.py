@@ -4,16 +4,22 @@
       [--reduced] [--requests 12] [--new-tokens 8] \
       [--max-batch 4] [--page-size 16] [--max-len 256] \
       [--temperature 0.8] [--top-k 40] [--top-p 0.95] \
-      [--shared-prefix-len 0] [--no-share-prefix] [--stream]
+      [--shared-prefix-len 0] [--no-share-prefix] [--stream] \
+      [--spec-cf 4 --spec-k 4] [--stats]
 
 Every decode-capable family runs the same paged continuous-batching
 engine (batched chunked prefill + refcounted paged state with prefix
 sharing/copy-on-write + slot scheduler + per-request sampling): attention
 decoders page their KV cache, SSM archs (falcon_mamba_7b) page
 recurrent-state snapshots, hybrid (zamba2_1p2b) composes both — all
-behind the CacheBackend protocol (repro.serve.cache). On the production
-meshes, serving shards with Megatron TP + flash-decoding KV-seq sharding
-(configs/registry.decode_sharding); on this CPU container use --reduced.
+behind the CacheBackend protocol (repro.serve.cache). ``--spec-cf``
+turns on coarse-propagator speculative decoding (repro.serve.spec): the
+paper's coarse grid — every cf-th layer, ODE step rescaled — drafts
+``--spec-k`` tokens per wave and the full model verifies them in one
+call (greedy output is bitwise identical to plain decode). On the
+production meshes, serving shards with Megatron TP + flash-decoding
+KV-seq sharding (configs/registry.decode_sharding); on this CPU
+container use --reduced.
 """
 from __future__ import annotations
 
@@ -48,6 +54,14 @@ def main(argv=None):
                     help="disable the prefix cache / copy-on-write pages")
     ap.add_argument("--stream", action="store_true",
                     help="stream the first request token-by-token")
+    ap.add_argument("--spec-cf", type=int, default=0,
+                    help="> 0 enables coarse-propagator speculative "
+                         "decoding with this layer-coarsening factor")
+    ap.add_argument("--spec-k", type=int, default=4,
+                    help="drafted tokens per verify wave")
+    ap.add_argument("--stats", action="store_true",
+                    help="print the engine's full counter dict (spec "
+                         "decode + prefix cache included)")
     args = ap.parse_args(argv)
 
     import jax
@@ -55,6 +69,7 @@ def main(argv=None):
     from repro.configs.reduce import reduce_config
     from repro.models import transformer
     from repro.serve.engine import Request, ServeEngine
+    from repro.serve.spec import SpecConfig
 
     rcfg = registry.get_config(args.arch, "decode_32k")
     if args.reduced:
@@ -67,12 +82,18 @@ def main(argv=None):
             params = restored[0]
             print(f"restored params from step {restored[2]}")
 
+    spec = SpecConfig(cf=args.spec_cf, k=args.spec_k) \
+        if args.spec_cf > 0 else None
     engine = ServeEngine(rcfg, params, max_len=args.max_len,
                          max_batch=args.max_batch,
                          page_size=args.page_size,
-                         share_prefix=not args.no_share_prefix)
+                         share_prefix=not args.no_share_prefix,
+                         spec=spec)
     print(f"engine: paged continuous-batching via "
-          f"{type(engine.backend).__name__}")
+          f"{type(engine.backend).__name__}"
+          + (f" + spec decode (cf={spec.cf}, k={spec.k}, "
+             f"{engine.scheduler.spec.n_coarse} coarse layers)"
+             if spec else ""))
     rng = np.random.default_rng(args.seed)
     common = rng.integers(0, rcfg.model.vocab_size,
                           size=args.shared_prefix_len).astype(np.int32)
@@ -111,6 +132,18 @@ def main(argv=None):
     print(f"prefix sharing: {st['shared_tokens']} prompt tokens "
           f"reused, {st['pages_shared']} pages shared, "
           f"{st['pages_allocated']} pages allocated")
+    if spec:
+        es = engine.stats
+        print(f"spec decode: {es['tokens_accepted']}/"
+              f"{es['tokens_drafted']} drafted tokens accepted "
+              f"({100 * es['accept_rate']:.0f}%), "
+              f"{es['draft_calls']} draft calls, "
+              f"{es['verify_calls']} verify waves")
+    if args.stats:
+        print("engine stats:")
+        for key, val in sorted(engine.stats.items()):
+            print(f"  {key} = {val:.4f}" if isinstance(val, float)
+                  else f"  {key} = {val}")
     print(f"steady-state decode probe: "
           f"{engine.throughput_probe(args.max_batch):.1f} tok/s")
     return 0

@@ -184,6 +184,226 @@ def sample_tokens(logits, temps, top_ks, top_ps, seeds, counters):
                         None)
 
 
+# ---------------------------------------------------------------------------
+# Speculative decoding: draft sampling + acceptance (paper's coarse
+# propagator as a self-speculative draft — see repro.serve.spec)
+# ---------------------------------------------------------------------------
+
+
+def draft_sample_tokens(logits, temps, top_ks, top_ps, seeds, counters):
+    """Draft-side sampling: (B, V) logits -> (tokens (B,), probs (B, V)).
+
+    ``probs`` is the draft's TRUE proposal distribution — the verifier's
+    rejection sampling needs q(d) and the full q vector for the leftover
+    distribution. Greedy slots (temps <= 0) propose the argmax with a
+    one-hot q (verification then reduces to exact match). Sampled slots
+    draw from the temperature-scaled top-k/top-p-masked distribution
+    with the request's *draft* stream ``fold_in(fold_in(PRNGKey(seed),
+    counter), 2)`` — disjoint from the canonical stream (fold 0 = accept
+    u / bonus gumbel, fold 1 = leftover gumbel), so acceptance draws stay
+    independent of the proposals. Distribution preservation holds for any
+    proposal stream; only the acceptance rate depends on it.
+    """
+    lf = logits.astype(jnp.float32)
+    V = lf.shape[-1]
+    greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
+    g_probs = jax.nn.one_hot(greedy, V, dtype=jnp.float32)
+
+    def _sampled(_):
+        scaled = lf / jnp.maximum(temps, 1e-6)[:, None]
+        masked = apply_top_k_top_p(scaled, top_ks, top_ps)
+        probs = jax.nn.softmax(masked, axis=-1)
+
+        def draw(seed, counter):
+            key = jax.random.fold_in(
+                jax.random.fold_in(jax.random.PRNGKey(seed), counter), 2)
+            return jax.random.gumbel(key, (V,), jnp.float32)
+
+        gum = jax.vmap(draw)(seeds, counters)
+        samp = jnp.argmax(masked + gum, axis=-1).astype(jnp.int32)
+        tok = jnp.where(temps <= 0.0, greedy, samp)
+        pr = jnp.where((temps <= 0.0)[:, None], g_probs, probs)
+        return tok, pr
+
+    return jax.lax.cond(jnp.any(temps > 0.0), _sampled,
+                        lambda _: (greedy, g_probs), None)
+
+
+def speculative_accept(logits, tokens, draft_probs, temps, top_ks, top_ps,
+                       seeds, counters, n_new):
+    """Accept a drafted prefix against the fine model's own targets.
+
+    logits: (B, S, V) fine logits over the verify window; tokens: (B, S)
+    = [pending, d_1..d_k]; draft_probs: (B, k, V) proposal distributions;
+    n_new: (B,) = per-slot drafted count + 1 (0 = idle slot). Position i
+    of the window is the request's emission index ``counters[b] + i``, so
+    every draw is keyed exactly like plain decode.
+
+    Greedy slots: accepted = longest prefix where d_{i+1} equals the fine
+    argmax — emitted tokens are bitwise what plain decode would produce.
+    Sampled slots: standard speculative rejection sampling — accept d
+    with prob min(1, p(d)/q(d)); on first rejection draw from the
+    normalized leftover max(p - q, 0); when every draft survives, draw
+    the bonus token from p at the next position with the SAME key plain
+    decode would use. Either way the emitted distribution is exactly the
+    target p (Leviathan et al. 2023).
+
+    Returns (accepted (B,) in [0, n_new-1], next_token (B,)).
+    """
+    B, S, V = logits.shape
+    k = S - 1
+    lf = logits.astype(jnp.float32)
+    drafts = tokens[:, 1:]
+    n_draft = jnp.maximum(n_new - 1, 0)
+    pos_ok = jnp.arange(k)[None, :] < n_draft[:, None]
+    greedy_t = jnp.argmax(lf, axis=-1).astype(jnp.int32)          # (B, S)
+    g_match = (drafts == greedy_t[:, :k]) & pos_ok
+    g_acc = jnp.sum(jnp.cumprod(g_match.astype(jnp.int32), axis=1), axis=1)
+    g_next = jnp.take_along_axis(greedy_t, g_acc[:, None], axis=1)[:, 0]
+
+    def _sampled(_):
+        scaled = lf / jnp.maximum(temps, 1e-6)[:, None, None]
+        masked = apply_top_k_top_p(
+            scaled.reshape(B * S, V),
+            jnp.repeat(top_ks, S), jnp.repeat(top_ps, S)).reshape(B, S, V)
+        p = jax.nn.softmax(masked, axis=-1)
+        q = draft_probs.astype(jnp.float32)                        # (B, k, V)
+
+        def slot_keys(seed, counter):
+            base = jax.random.PRNGKey(seed)
+            return jax.vmap(
+                lambda i: jax.random.fold_in(base, counter + i))(
+                jnp.arange(S))
+        keys = jax.vmap(slot_keys)(seeds, counters)                # (B, S, 2)
+        u = jax.vmap(jax.vmap(
+            lambda kk: jax.random.uniform(kk, ())))(keys[:, :k])
+        p_d = jnp.take_along_axis(p[:, :k], drafts[..., None], -1)[..., 0]
+        q_d = jnp.take_along_axis(q, drafts[..., None], -1)[..., 0]
+        ok = (u < p_d / jnp.maximum(q_d, 1e-30)) & pos_ok
+        s_acc = jnp.sum(jnp.cumprod(ok.astype(jnp.int32), axis=1), axis=1)
+        j = s_acc                          # first rejected index, or n_draft
+        p_j = jnp.take_along_axis(p, j[:, None, None], axis=1)[:, 0]
+        q_pad = jnp.concatenate([q, jnp.zeros((B, 1, V), jnp.float32)], 1)
+        q_j = jnp.take_along_axis(q_pad, j[:, None, None], axis=1)[:, 0]
+        rejected = j < n_draft
+        res = jnp.clip(p_j - q_j, 0.0, None)
+        rs = jnp.sum(res, axis=-1, keepdims=True)
+        res = jnp.where(rs > 0, res / jnp.maximum(rs, 1e-30), p_j)
+        dist = jnp.where(rejected[:, None], res, p_j)
+        key_j = jnp.take_along_axis(
+            keys, jnp.broadcast_to(j[:, None, None], (B, 1, 2)),
+            axis=1)[:, 0]
+        left_keys = jax.vmap(lambda kk: jax.random.fold_in(kk, 1))(key_j)
+        gkey = jnp.where(rejected[:, None], left_keys, key_j)
+        gum = jax.vmap(
+            lambda kk: jax.random.gumbel(kk, (V,), jnp.float32))(gkey)
+        s_next = jnp.argmax(jnp.log(jnp.maximum(dist, 1e-30)) + gum,
+                            axis=-1).astype(jnp.int32)
+        acc = jnp.where(temps > 0.0, s_acc, g_acc).astype(jnp.int32)
+        nxt = jnp.where(temps > 0.0, s_next, g_next)
+        return acc, nxt
+
+    return jax.lax.cond(jnp.any(temps > 0.0), _sampled,
+                        lambda _: (g_acc.astype(jnp.int32), g_next), None)
+
+
+def make_paged_verify_fn(rcfg: RunConfig, mesh: Optional[Mesh], verify_fn,
+                         commit_fn=None):
+    """Speculative-verification step builder: ONE jitted occupancy-masked
+    call runs the FULL model over each slot's pending token + k drafted
+    tokens, samples the per-position targets, computes the accepted
+    prefix (:func:`speculative_accept`), and commits decode state for
+    exactly the accepted prefix.
+
+    ``verify_fn`` is the family's paged verify forward
+    (``transformer.{paged,ssm_paged,hybrid_paged}_verify_step``);
+    ``commit_fn`` is its deferred snapshot commit, or None for backends
+    whose rollback is host-side length truncation (attention KV). The
+    returned callable maps (params, state, tokens (B, k+1), lengths,
+    n_new, page_table, sampling params, counters, draft_probs (B, k, V))
+    -> (accepted (B,), next_token (B,), new_state).
+    """
+    def paged_verify_step(params, state, tokens, lengths, n_new, page_table,
+                          temps, top_ks, top_ps, seeds, counters,
+                          draft_probs):
+        ctx = axis_rules(mesh, rcfg.sharding) if mesh is not None else \
+            _nullctx()
+        with ctx:
+            logits, state2, art = verify_fn(params, state, tokens, lengths,
+                                            n_new, page_table, rcfg)
+            acc, nxt = speculative_accept(logits, tokens, draft_probs,
+                                          temps, top_ks, top_ps, seeds,
+                                          counters, n_new)
+            if commit_fn is not None:
+                n_write = jnp.where(n_new > 0,
+                                    jnp.minimum(acc + 1, n_new), 0)
+                state2 = commit_fn(state2, art, page_table, lengths,
+                                   n_write)
+        return acc, nxt, state2
+
+    return paged_verify_step
+
+
+def make_draft_wave_fn(rcfg: RunConfig, mesh: Optional[Mesh], decode_fn,
+                       *, k: int, page_size: int, snapshot_state: bool):
+    """One fused jitted call for a whole draft wave of the coarse
+    propagator: (1) the catch-up ingest — canonical tokens the draft has
+    not yet cached plus the pending token, S = k+1 occupancy-masked —
+    which commits TRUE state and proposes d_1; (2) k-1 in-call
+    autoregressive speculative steps (a lax.scan feeding each sampled
+    token back) proposing d_2..d_k. Slots stop advancing at their own
+    ``n_draft``, so near-finished requests never write past capacity.
+
+    On snapshot backends the partial state page holding the
+    post-ingest committed state is saved before speculation and restored
+    before returning — speculative writes to it are undone in-call, so
+    the next wave's ingest resumes from true canonical state (KV drafts
+    skip this: stale entries beyond the committed length are masked and
+    later overwritten). Returns (drafted (B, k), draft_probs (B, k, V),
+    new_state).
+    """
+    def draft_wave(params, state, tokens, lengths, n_in, page_table,
+                   temps, top_ks, top_ps, seeds, counters, n_draft):
+        ctx = axis_rules(mesh, rcfg.sharding) if mesh is not None else \
+            _nullctx()
+        with ctx:
+            logits, state = decode_fn(params, state, tokens, lengths, n_in,
+                                      page_table, rcfg)
+            tok, probs = draft_sample_tokens(logits, temps, top_ks, top_ps,
+                                             seeds, counters)
+            committed = lengths + n_in
+            if snapshot_state:
+                P = page_table.shape[1]
+                slot = jnp.clip((committed - 1) // page_size, 0, P - 1)
+                part = jnp.take_along_axis(page_table, slot[:, None],
+                                           axis=1)[:, 0]
+                saved = jax.tree.map(lambda a: a[:, part], state)
+
+            def body(carry, i):
+                st, ln, tk = carry
+                live = ((n_in > 0) & (n_draft >= i + 2)).astype(jnp.int32)
+                lg, st = decode_fn(params, st, tk[:, None], ln, live,
+                                   page_table, rcfg)
+                t2, p2 = draft_sample_tokens(lg, temps, top_ks, top_ps,
+                                             seeds, counters + i + 1)
+                return (st, ln + live, t2), (t2, p2)
+
+            if k > 1:
+                (state, _, _), (ts, ps_) = jax.lax.scan(
+                    body, (state, committed, tok), jnp.arange(k - 1))
+                d = jnp.concatenate([tok[:, None], ts.T], axis=1)
+                q = jnp.concatenate([probs[:, None],
+                                     jnp.moveaxis(ps_, 0, 1)], axis=1)
+            else:
+                d, q = tok[:, None], probs[:, None]
+            if snapshot_state:
+                state = jax.tree.map(
+                    lambda a, s: a.at[:, part].set(s), state, saved)
+        return d, q, state
+
+    return draft_wave
+
+
 def make_paged_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh],
                         decode_fn=None):
     """Paged-state step: one jitted function serves both chunked prefill

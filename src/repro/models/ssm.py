@@ -194,6 +194,29 @@ def _gather_windows(xp, t, K: int):
     return xp[jnp.arange(B)[:, None, None], idx]
 
 
+def paged_pool_commit(conv_pool, h_pool, xp, hs_b, *, page_table, lengths,
+                      n_new, page_size: int):
+    """Publish one layer's state snapshots for the first ``n_new[b]`` of
+    the tokens a paged apply just processed. ``xp`` is the padded conv
+    input ([init window | new inputs], (B, S+K-1, C)) and ``hs_b`` the
+    per-step recurrent states ((B, S, ...)) that
+    ``mamba{1,2}_paged_apply(..., commit=False)`` returns — every local
+    step's state is a candidate snapshot, so the caller may commit any
+    prefix of the processed tokens. Speculative decoding uses exactly
+    this: verification runs the recurrence over all k+1 drafted tokens,
+    then commits only the accepted prefix (``n_new = accepted + 1``) —
+    the snapshot-page twin of "truncate lengths" KV rollback. Returns
+    (new_conv_pool, new_h_pool).
+    """
+    K = conv_pool.shape[-2] + 1
+    t, phys = snapshot_steps(page_table, lengths, n_new, page_size)
+    B = phys.shape[0]
+    h_snap = hs_b[jnp.arange(B)[:, None], t]
+    new_h = paged_state_write(h_pool, h_snap, phys)
+    new_conv = paged_state_write(conv_pool, _gather_windows(xp, t, K), phys)
+    return new_conv, new_h
+
+
 def init_paged_ssm_pool(cfg: ModelConfig, n_layers: int, n_pages: int,
                         version: int):
     """State-snapshot page pool stacked over layers (page axis 1, matching
@@ -216,7 +239,8 @@ def init_paged_ssm_pool(cfg: ModelConfig, n_layers: int, n_pages: int,
 
 
 def mamba1_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
-                       page_table, lengths, n_new, page_size: int):
+                       page_table, lengths, n_new, page_size: int,
+                       commit: bool = True):
     """One layer's mamba1 mixer against the paged state pool.
 
     x: (B, S, D) normed block input; slot b contributes ``n_new[b] <= S``
@@ -225,6 +249,11 @@ def mamba1_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     K-1, di); h_pool: (n_pages, di, d_state). Returns (mixer output
     (B, S, D), new_conv_pool, new_h_pool). Outputs at padded positions are
     garbage; the caller reads position n_new-1 only.
+
+    ``commit=False`` defers the state-page writes: returns (out, xp,
+    hs_b) — the per-step snapshot candidates — and leaves the pools
+    untouched; the caller publishes an accepted prefix later via
+    :func:`paged_pool_commit` (speculative-decode verification).
     """
     s = cfg.ssm
     dt_ = jnp.dtype(cfg.dtype)
@@ -271,16 +300,18 @@ def mamba1_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
     out = logical_constraint(out, ("batch", "seq", "embed"))
 
-    t, phys = snapshot_steps(page_table, lengths, n_new, page_size)
     hs_b = jnp.swapaxes(hs, 0, 1)                              # (B, S, ...)
-    h_snap = hs_b[jnp.arange(B)[:, None], t]                   # (B, P, ...)
-    new_h = paged_state_write(h_pool, h_snap, phys)
-    new_conv = paged_state_write(conv_pool, _gather_windows(xp, t, K), phys)
+    if not commit:
+        return out, xp, hs_b
+    new_conv, new_h = paged_pool_commit(
+        conv_pool, h_pool, xp, hs_b, page_table=page_table, lengths=lengths,
+        n_new=n_new, page_size=page_size)
     return out, new_conv, new_h
 
 
 def mamba2_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
-                       page_table, lengths, n_new, page_size: int):
+                       page_table, lengths, n_new, page_size: int,
+                       commit: bool = True):
     """Mamba2 twin of :func:`mamba1_paged_apply` (same pool contract;
     conv runs over the concatenated x/B/C channels, h is per-head)."""
     s = cfg.ssm
@@ -330,11 +361,12 @@ def mamba2_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
     out = logical_constraint(out, ("batch", "seq", "embed"))
 
-    t, phys = snapshot_steps(page_table, lengths, n_new, page_size)
     hs_b = jnp.swapaxes(hs, 0, 1)
-    h_snap = hs_b[jnp.arange(B)[:, None], t]
-    new_h = paged_state_write(h_pool, h_snap, phys)
-    new_conv = paged_state_write(conv_pool, _gather_windows(xp, t, K), phys)
+    if not commit:
+        return out, xp, hs_b
+    new_conv, new_h = paged_pool_commit(
+        conv_pool, h_pool, xp, hs_b, page_table=page_table, lengths=lengths,
+        n_new=n_new, page_size=page_size)
     return out, new_conv, new_h
 
 

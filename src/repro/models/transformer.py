@@ -399,18 +399,23 @@ def _stacked_layer_depth(rcfg: RunConfig) -> int:
     return plan.n_open + plan.n_mid_padded + plan.n_close
 
 
-def init_paged_cache(rcfg: RunConfig, n_pages: int, page_size: int):
+def init_paged_cache(rcfg: RunConfig, n_pages: int, page_size: int,
+                     n_layers: int = 0):
     """Attention KV page pool sized for the full serial layer stack
-    (open+mid+close)."""
-    return attn_mod.init_paged_kv_cache(rcfg.model, _stacked_layer_depth(rcfg),
-                                        n_pages, page_size)
+    (open+mid+close), or an explicit ``n_layers`` (the coarse-propagator
+    draft model pools a restricted stack)."""
+    return attn_mod.init_paged_kv_cache(
+        rcfg.model, n_layers or _stacked_layer_depth(rcfg), n_pages,
+        page_size)
 
 
-def init_paged_ssm_cache(rcfg: RunConfig, n_pages: int):
-    """State-snapshot page pool for the ssm family's full layer stack."""
+def init_paged_ssm_cache(rcfg: RunConfig, n_pages: int, n_layers: int = 0):
+    """State-snapshot page pool for the ssm family's full layer stack
+    (or an explicit coarse ``n_layers``)."""
     cfg = rcfg.model
-    return ssm_mod.init_paged_ssm_pool(cfg, _stacked_layer_depth(rcfg),
-                                       n_pages, cfg.ssm.version)
+    return ssm_mod.init_paged_ssm_pool(
+        cfg, n_layers or _stacked_layer_depth(rcfg), n_pages,
+        cfg.ssm.version)
 
 
 def init_paged_hybrid_cache(rcfg: RunConfig, n_pages: int, page_size: int):
@@ -432,18 +437,19 @@ def _paged_last_logits(params, z, n_new, cfg: ModelConfig):
     return unembed(params["embed"], z_last, cfg)[:, 0]
 
 
-def paged_decode_step(params, pages, tokens, lengths, n_new, page_table,
-                      rcfg: RunConfig, *, page_size: int = 0):
-    """Batched step against the shared KV page pool — static shapes,
-    dynamic occupancy.
+def _paged_all_logits(params, z, cfg: ModelConfig):
+    """Logits at every position of the step window (B, S, V) — the
+    speculative-decode verifier needs per-drafted-token targets, not just
+    the last one. Positions >= n_new carry garbage; callers mask them."""
+    z = norm_apply(params["final_norm"], z, cfg)
+    return unembed(params["embed"], z, cfg)
 
-    tokens: (B, S). S == 1 in steady-state decode; S == the prompt bucket
-    during chunked prefill (one call writes the whole chunk). Slot b holds
-    ``lengths[b]`` cached tokens and contributes ``n_new[b] <= S`` new ones;
-    ``n_new[b] == 0`` marks an empty slot, so the same compiled step serves
-    any occupancy without retracing. Returns (last_logits (B, V) at each
-    slot's final real token, new_pages).
-    """
+
+def _paged_attn_forward(params, pages, tokens, lengths, n_new, page_table,
+                        rcfg: RunConfig):
+    """Shared trunk of the attention paged step/verify: embeds, runs the
+    full stacked layer scan against the KV page pool, returns (z (B,S,D),
+    new_pages)."""
     cfg = rcfg.model
     kind = block_kind(cfg)
     if kind not in ("attn_mlp", "attn_moe"):
@@ -463,17 +469,52 @@ def paged_decode_step(params, pages, tokens, lengths, n_new, page_table,
 
     z, (nk, nv) = jax.lax.scan(step, z, (stacked, gates,
                                          (pages["k"], pages["v"])))
-    logits = _paged_last_logits(params, z, n_new, cfg)
-    return logits, {"k": nk, "v": nv}
+    return z, {"k": nk, "v": nv}
 
 
-def ssm_paged_decode_step(params, pools, tokens, lengths, n_new, page_table,
-                          rcfg: RunConfig, *, page_size: int):
-    """Paged twin of the dense SSM decode: same step contract as
-    :func:`paged_decode_step`, with KV pages replaced by state-snapshot
-    pages. Unlike the dense cache, chunked prefill works here: padded
-    positions (>= n_new) freeze the recurrent state, so one call advances
-    a whole prompt chunk."""
+def paged_decode_step(params, pages, tokens, lengths, n_new, page_table,
+                      rcfg: RunConfig, *, page_size: int = 0):
+    """Batched step against the shared KV page pool — static shapes,
+    dynamic occupancy.
+
+    tokens: (B, S). S == 1 in steady-state decode; S == the prompt bucket
+    during chunked prefill (one call writes the whole chunk). Slot b holds
+    ``lengths[b]`` cached tokens and contributes ``n_new[b] <= S`` new ones;
+    ``n_new[b] == 0`` marks an empty slot, so the same compiled step serves
+    any occupancy without retracing. Returns (last_logits (B, V) at each
+    slot's final real token, new_pages).
+    """
+    z, new_pages = _paged_attn_forward(params, pages, tokens, lengths,
+                                       n_new, page_table, rcfg)
+    return _paged_last_logits(params, z, n_new, rcfg.model), new_pages
+
+
+def paged_verify_step(params, pages, tokens, lengths, n_new, page_table,
+                      rcfg: RunConfig, *, page_size: int = 0):
+    """Speculative-verify forward for the attention family: one call over
+    the pending token + k drafted tokens, logits at EVERY position.
+    Returns (logits (B, S, V), new_pages, None).
+
+    KV rollback is free: the k+1 K/V entries are written positionally, and
+    anything beyond the accepted length is masked out of future attention
+    (``kpos > qpos``) until the next wave overwrites it — so the host
+    rolls back by truncating ``lengths``. The trailing ``None`` mirrors
+    the deferred-commit artifact slot the snapshot families return.
+    """
+    z, new_pages = _paged_attn_forward(params, pages, tokens, lengths,
+                                       n_new, page_table, rcfg)
+    return _paged_all_logits(params, z, rcfg.model), new_pages, None
+
+
+def _ssm_paged_forward(params, pools, tokens, lengths, n_new, page_table,
+                       rcfg: RunConfig, *, page_size: int, commit: bool):
+    """Shared trunk of the SSM paged step/verify. ``commit=True`` writes
+    the state-snapshot pages in-line (normal decode/prefill) and returns
+    (z, new_pools, None); ``commit=False`` leaves the pools untouched and
+    returns (z, pools, artifacts) where artifacts hold every layer's
+    per-step snapshot candidates for a later
+    :func:`ssm_paged_commit_step` (speculative verification commits only
+    the accepted prefix)."""
     cfg = rcfg.model
     kind = block_kind(cfg)
     if kind not in ("mamba1", "mamba2"):
@@ -485,24 +526,68 @@ def ssm_paged_decode_step(params, pools, tokens, lengths, n_new, page_table,
 
     def step(z, xs):
         p, gate, (cpool, hpool) = xs
-        f, nc, nh = mixer(p["mixer"], norm_apply(p["norm"], z, cfg), cfg,
-                          conv_pool=cpool, h_pool=hpool,
-                          page_table=page_table, lengths=lengths,
-                          n_new=n_new, page_size=page_size)
-        return z + gate.astype(z.dtype) * f, (nc, nh)
+        f, a, b = mixer(p["mixer"], norm_apply(p["norm"], z, cfg), cfg,
+                        conv_pool=cpool, h_pool=hpool,
+                        page_table=page_table, lengths=lengths,
+                        n_new=n_new, page_size=page_size, commit=commit)
+        return z + gate.astype(z.dtype) * f, (a, b)
 
-    z, (nc, nh) = jax.lax.scan(step, z, (stacked, gates,
-                                         (pools["conv"], pools["h"])))
-    logits = _paged_last_logits(params, z, n_new, cfg)
-    return logits, {"conv": nc, "h": nh}
+    z, (a, b) = jax.lax.scan(step, z, (stacked, gates,
+                                       (pools["conv"], pools["h"])))
+    if commit:
+        return z, {"conv": a, "h": b}, None
+    return z, pools, {"xp": a, "hs": b}
 
 
-def hybrid_paged_decode_step(params, state, tokens, lengths, n_new,
-                             page_table, rcfg: RunConfig, *, page_size: int):
-    """Paged decode for the hybrid family: per-block composition keyed by
-    block kind — mamba2 backbone layers advance state-snapshot pages,
-    the interleaved shared-attention block reads/writes its KV pages —
-    all against one page table / one physical page id space."""
+def ssm_paged_decode_step(params, pools, tokens, lengths, n_new, page_table,
+                          rcfg: RunConfig, *, page_size: int):
+    """Paged twin of the dense SSM decode: same step contract as
+    :func:`paged_decode_step`, with KV pages replaced by state-snapshot
+    pages. Unlike the dense cache, chunked prefill works here: padded
+    positions (>= n_new) freeze the recurrent state, so one call advances
+    a whole prompt chunk."""
+    z, new_pools, _ = _ssm_paged_forward(
+        params, pools, tokens, lengths, n_new, page_table, rcfg,
+        page_size=page_size, commit=True)
+    return _paged_last_logits(params, z, n_new, rcfg.model), new_pools
+
+
+def ssm_paged_verify_step(params, pools, tokens, lengths, n_new, page_table,
+                          rcfg: RunConfig, *, page_size: int):
+    """Speculative-verify forward for the SSM family: advances the masked
+    recurrence over the pending + k drafted tokens WITHOUT touching the
+    snapshot pools; returns (logits (B, S, V), pools, artifacts). After
+    acceptance is known, :func:`ssm_paged_commit_step` publishes only the
+    accepted prefix's snapshots — the recurrent-state analogue of
+    truncating KV lengths (PR-3's snapshot-page design is what makes the
+    rollback exact: every local step's state is a snapshot candidate)."""
+    z, pools, art = _ssm_paged_forward(
+        params, pools, tokens, lengths, n_new, page_table, rcfg,
+        page_size=page_size, commit=False)
+    return _paged_all_logits(params, z, rcfg.model), pools, art
+
+
+def ssm_paged_commit_step(pools, art, page_table, lengths, n_write,
+                          *, page_size: int):
+    """Deferred snapshot-page commit for every layer of the SSM stack:
+    writes the state after exactly ``n_write[b]`` of the verified tokens
+    (``accepted + 1``; 0 skips the slot) into the pools."""
+    def one(cpool, hpool, xp, hs):
+        return ssm_mod.paged_pool_commit(
+            cpool, hpool, xp, hs, page_table=page_table, lengths=lengths,
+            n_new=n_write, page_size=page_size)
+
+    nc, nh = jax.vmap(one)(pools["conv"], pools["h"], art["xp"], art["hs"])
+    return {"conv": nc, "h": nh}
+
+
+def _hybrid_paged_forward(params, state, tokens, lengths, n_new, page_table,
+                          rcfg: RunConfig, *, page_size: int, commit: bool):
+    """Shared trunk of the hybrid paged step/verify. The interleaved
+    shared-attention block always writes its KV pages in-line (truncation
+    rollback, like the attention family); ``commit=False`` defers only
+    the mamba2 backbone's snapshot-page writes, returning (z, state',
+    artifacts) with the backbone pools untouched."""
     cfg = rcfg.model
     k = cfg.hybrid_attn_every
     n_seg, rem = divmod(cfg.n_layers, k)
@@ -516,14 +601,15 @@ def hybrid_paged_decode_step(params, state, tokens, lengths, n_new,
         span = k if s_i < n_seg else rem
         for _ in range(span):
             p = jax.tree.map(lambda a: a[li], params["backbone"])
-            f, nc, nh = ssm_mod.mamba2_paged_apply(
+            f, a, b = ssm_mod.mamba2_paged_apply(
                 p["mixer"], norm_apply(p["norm"], z, cfg), cfg,
                 conv_pool=state["mamba"]["conv"][li],
                 h_pool=state["mamba"]["h"][li], page_table=page_table,
-                lengths=lengths, n_new=n_new, page_size=page_size)
+                lengths=lengths, n_new=n_new, page_size=page_size,
+                commit=commit)
             z = z + f
-            new_conv.append(nc)
-            new_h.append(nh)
+            new_conv.append(a)
+            new_h.append(b)
             li += 1
         if s_i < n_seg:
             z, npk, npv = paged_attn_block(
@@ -532,8 +618,108 @@ def hybrid_paged_decode_step(params, state, tokens, lengths, n_new,
                 page_table=page_table, lengths=lengths, n_new=n_new)
             new_k.append(npk)
             new_v.append(npv)
-    logits = _paged_last_logits(params, z, n_new, cfg)
-    return logits, {
-        "mamba": {"conv": jnp.stack(new_conv), "h": jnp.stack(new_h)},
-        "attn": {"k": jnp.stack(new_k), "v": jnp.stack(new_v)},
-    }
+    attn = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
+    if commit:
+        state2 = {"mamba": {"conv": jnp.stack(new_conv),
+                            "h": jnp.stack(new_h)}, "attn": attn}
+        return z, state2, None
+    state2 = {"mamba": state["mamba"], "attn": attn}
+    art = {"xp": jnp.stack(new_conv), "hs": jnp.stack(new_h)}
+    return z, state2, art
+
+
+def hybrid_paged_decode_step(params, state, tokens, lengths, n_new,
+                             page_table, rcfg: RunConfig, *, page_size: int):
+    """Paged decode for the hybrid family: per-block composition keyed by
+    block kind — mamba2 backbone layers advance state-snapshot pages,
+    the interleaved shared-attention block reads/writes its KV pages —
+    all against one page table / one physical page id space."""
+    z, state2, _ = _hybrid_paged_forward(
+        params, state, tokens, lengths, n_new, page_table, rcfg,
+        page_size=page_size, commit=True)
+    return _paged_last_logits(params, z, n_new, rcfg.model), state2
+
+
+def hybrid_paged_verify_step(params, state, tokens, lengths, n_new,
+                             page_table, rcfg: RunConfig, *, page_size: int):
+    """Speculative-verify forward for the hybrid family: shared-attention
+    KV is written in-line (length-truncation rollback), backbone
+    snapshot-page writes are deferred to
+    :func:`hybrid_paged_commit_step`. Returns (logits (B,S,V), state',
+    artifacts)."""
+    z, state2, art = _hybrid_paged_forward(
+        params, state, tokens, lengths, n_new, page_table, rcfg,
+        page_size=page_size, commit=False)
+    return _paged_all_logits(params, z, rcfg.model), state2, art
+
+
+def hybrid_paged_commit_step(state, art, page_table, lengths, n_write,
+                             *, page_size: int):
+    """Deferred backbone snapshot commit for the hybrid family (the attn
+    half of ``state`` was already written by the verify forward)."""
+    new_mamba = ssm_paged_commit_step(
+        state["mamba"], art, page_table, lengths, n_write,
+        page_size=page_size)
+    return {"mamba": new_mamba, "attn": state["attn"]}
+
+
+# ---------------------------------------------------------------------------
+# Coarse-propagator draft model (speculative decoding)
+# ---------------------------------------------------------------------------
+
+
+def coarse_draft_params(params, rcfg: RunConfig, cf: int):
+    """The paper's coarse propagator as a zero-parameter draft model.
+
+    The multilevel hierarchy approximates the fine network with every
+    ``cf``-th layer and the ODE step rescaled by ``cf``
+    (:func:`repro.core.mgrit.coarse_restrict`) — exactly a weight-sharing
+    draft for self-speculative decoding. Returns ``(draft_params,
+    draft_rcfg, n_coarse)``:
+
+    - decoder / ssm families: the full serial stack (open+mid+close with
+      gates) is restricted to every ``cf``-th layer; the coarse gate is
+      the SUM of the chunk's fine gates, so Phi_c(z) = z + (#real layers
+      in chunk) * F(z) — the forward-Euler step over the chunk's time
+      span — and fully-padded chunks stay identity. ``draft_rcfg`` is the
+      fine rcfg (the paged steps read depth from the params).
+    - hybrid: the mamba2 backbone is restricted and the chunk span is
+      baked into each coarse layer's ``out_proj`` (the mixer is linear in
+      it); the shared attention block is kept at a proportionally
+      coarsened cadence. ``draft_rcfg`` carries the coarse ``n_layers`` /
+      ``hybrid_attn_every``.
+
+    Embeddings and final norm are shared by reference: the draft adds
+    zero parameters and zero training.
+    """
+    cfg = rcfg.model
+    if cf < 1:
+        raise ValueError("cf must be >= 1")
+    if cfg.family == "hybrid":
+        N = cfg.n_layers
+        n_coarse = -(-N // cf)
+        sizes = jnp.minimum(cf, N - cf * jnp.arange(n_coarse))
+        bb = mgrit.coarse_restrict(params["backbone"], cf)
+        bb = dict(bb)
+        bb["mixer"] = dict(bb["mixer"])
+        op = bb["mixer"]["out_proj"]
+        bb["mixer"]["out_proj"] = op * sizes.astype(op.dtype)[:, None, None]
+        hae = min(max(1, cfg.hybrid_attn_every // cf), n_coarse)
+        cfg_c = dataclasses.replace(cfg, n_layers=n_coarse,
+                                    hybrid_attn_every=hae)
+        draft = {"embed": params["embed"],
+                 "final_norm": params["final_norm"],
+                 "backbone": bb,
+                 "shared_attn": params["shared_attn"]}
+        return draft, dataclasses.replace(rcfg, model=cfg_c), n_coarse
+
+    stacked, gates = _all_layers_stacked(params, cfg)
+    N = jax.tree.leaves(stacked)[0].shape[0]
+    n_coarse = -(-N // cf)
+    gpad = jnp.pad(gates, (0, n_coarse * cf - N))
+    cgate = gpad.reshape(n_coarse, cf).sum(axis=1)
+    draft = {"embed": params["embed"],
+             "final_norm": params["final_norm"],
+             "mid": {"params": mgrit.coarse_restrict(stacked, cf),
+                     "gate": cgate}}
+    return draft, rcfg, n_coarse

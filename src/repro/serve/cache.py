@@ -46,6 +46,8 @@ import numpy as np
 
 from repro.configs.base import RunConfig
 from repro.launch import steps as steps_mod
+from repro.models import attention as attn_mod
+from repro.models import ssm as ssm_mod
 from repro.models import transformer
 from repro.models.blocks import block_kind
 from repro.serve.kv_pages import PageAllocator
@@ -116,6 +118,7 @@ class CacheBackend:
         self._step_fn = jax.jit(
             steps_mod.make_paged_serve_fn(rcfg, mesh, self._decode_fn()),
             donate_argnums=(1,))
+        self._verify_fn = None          # built lazily (spec decode only)
 
     # -- device half --------------------------------------------------------
 
@@ -149,6 +152,52 @@ class CacheBackend:
         """Steady-state decode: tokens (B, 1); returns (state, next
         (B, 1)). Same compiled fn as prefill at S == 1."""
         return self._apply(state, slots, tokens)
+
+    # -- device half: speculative decoding ----------------------------------
+
+    def _verify_fns(self):
+        """(verify forward, deferred commit or None) for this family —
+        the two halves :func:`repro.launch.steps.make_paged_verify_fn`
+        fuses into the jitted verify call."""
+        raise NotImplementedError(
+            f"{type(self).__name__} does not support speculative decoding")
+
+    def verify(self, state, slots: SlotBatch, tokens, draft_probs):
+        """Multi-token speculative verification: tokens (B, k+1) =
+        [pending, d_1..d_k] per slot with ``slots.n_new`` real entries
+        (0 = idle), draft_probs (B, k, V) the drafts' proposal
+        distributions. ONE jitted occupancy-masked call scores every
+        position with the full model, accepts the longest valid prefix
+        (greedy: exact match — bitwise plain decode; sampled: rejection
+        sampling with leftover redraws), and commits state for exactly
+        the accepted prefix — rejected suffixes are rolled back (KV:
+        stale entries beyond ``lengths`` stay masked; snapshot pools:
+        the deferred commit never writes them). Returns (state,
+        accepted (B,), next_token (B,)); the host advances each slot by
+        ``accepted + 1`` emitted tokens."""
+        if self._verify_fn is None:
+            vf, cf = self._verify_fns()
+            self._verify_fn = jax.jit(
+                steps_mod.make_paged_verify_fn(self.rcfg, self.mesh, vf,
+                                               cf),
+                donate_argnums=(1,))
+        acc, nxt, state = self._verify_fn(
+            self.params, state, tokens, slots.lengths, slots.n_new,
+            slots.page_table, slots.temps, slots.top_ks, slots.top_ps,
+            slots.seeds, slots.counters, draft_probs)
+        return state, acc, nxt
+
+    def coarse_draft(self, cf: int):
+        """(draft_params, draft_rcfg, n_coarse) — the paper's coarse
+        propagator over this backend's weights (every cf-th layer, ODE
+        step rescaled); see ``transformer.coarse_draft_params``."""
+        return transformer.coarse_draft_params(self.params, self.rcfg, cf)
+
+    def init_draft_state(self, draft_rcfg: RunConfig, n_layers: int,
+                         n_pages: int):
+        """Fresh page pools for a coarse-depth twin of this backend's
+        state (the draft's private, allocator-free pool)."""
+        raise NotImplementedError
 
     # -- host half: page ops ------------------------------------------------
     # No-ops (empty views, identity) would be valid for a non-paged
@@ -189,6 +238,15 @@ class PagedKVBackend(CacheBackend):
         return transformer.init_paged_cache(self.rcfg, n_pages,
                                             self.page_size)
 
+    def _verify_fns(self):
+        # rollback = truncate lengths: stale KV beyond len is masked
+        return transformer.paged_verify_step, None
+
+    def init_draft_state(self, draft_rcfg: RunConfig, n_layers: int,
+                         n_pages: int):
+        return attn_mod.init_paged_kv_cache(draft_rcfg.model, n_layers,
+                                            n_pages, self.page_size)
+
 
 class SSMStateBackend(CacheBackend):
     """Mamba1/mamba2 models: recurrent state as snapshot pages."""
@@ -201,6 +259,20 @@ class SSMStateBackend(CacheBackend):
 
     def init_state(self, n_pages: int):
         return transformer.init_paged_ssm_cache(self.rcfg, n_pages)
+
+    def _verify_fns(self):
+        # rollback = snapshot-page restore: the verify forward defers all
+        # pool writes, the fused commit publishes the accepted prefix only
+        return (functools.partial(transformer.ssm_paged_verify_step,
+                                  page_size=self.page_size),
+                functools.partial(transformer.ssm_paged_commit_step,
+                                  page_size=self.page_size))
+
+    def init_draft_state(self, draft_rcfg: RunConfig, n_layers: int,
+                         n_pages: int):
+        return ssm_mod.init_paged_ssm_pool(draft_rcfg.model, n_layers,
+                                           n_pages,
+                                           draft_rcfg.model.ssm.version)
 
 
 class HybridBackend(CacheBackend):
@@ -215,6 +287,18 @@ class HybridBackend(CacheBackend):
 
     def init_state(self, n_pages: int):
         return transformer.init_paged_hybrid_cache(self.rcfg, n_pages,
+                                                   self.page_size)
+
+    def _verify_fns(self):
+        return (functools.partial(transformer.hybrid_paged_verify_step,
+                                  page_size=self.page_size),
+                functools.partial(transformer.hybrid_paged_commit_step,
+                                  page_size=self.page_size))
+
+    def init_draft_state(self, draft_rcfg: RunConfig, n_layers: int,
+                         n_pages: int):
+        # draft_rcfg carries the coarse n_layers / attn cadence
+        return transformer.init_paged_hybrid_cache(draft_rcfg, n_pages,
                                                    self.page_size)
 
 

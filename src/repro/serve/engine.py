@@ -17,13 +17,21 @@ contexts) — the paper's layer-parallelism targets training (DESIGN.md §6).
 
 :meth:`ServeEngine.submit` with ``stream=True`` returns an iterator
 yielding ``(token_id, text_piece)`` as tokens are emitted, with
-incremental detokenization.
+incremental detokenization; dropping it cancels the request and frees
+its pages. ``spec=SpecConfig(cf, k)`` turns on coarse-propagator
+speculative decoding (:mod:`repro.serve.spec`): the paper's multilevel
+coarse grid drafts k tokens per wave from the same weights and the full
+model verifies them in one call — greedy output is bitwise identical to
+plain decode. ``prefix_cache_path`` restores a persisted prefix cache
+(:meth:`save_prefix_cache` / ``PrefixCache.save``) so restarts begin
+warm.
 """
 from __future__ import annotations
 
 import dataclasses
+import os
 import time
-from typing import Callable, List, Optional
+from typing import Callable, Dict, List, Optional
 
 import jax
 import jax.numpy as jnp
@@ -34,6 +42,7 @@ from repro.launch import steps as steps_mod
 from repro.models import transformer
 from repro.serve.cache import SlotBatch
 from repro.serve.scheduler import Scheduler, bucket_len
+from repro.serve.spec import SpecConfig
 
 
 @dataclasses.dataclass
@@ -72,7 +81,9 @@ class ServeEngine:
     def __init__(self, rcfg: RunConfig, params, mesh=None,
                  max_len: int = 0, max_batch: int = 8, page_size: int = 16,
                  share_prefix: bool = True,
-                 detokenize: Optional[Callable] = None):
+                 detokenize: Optional[Callable] = None,
+                 spec: Optional[SpecConfig] = None,
+                 prefix_cache_path: Optional[str] = None):
         self.rcfg = rcfg
         self.params = params
         self.mesh = mesh
@@ -80,11 +91,52 @@ class ServeEngine:
         self.detokenize = detokenize or default_detokenize
         self.scheduler = Scheduler(
             rcfg, params, max_batch=max_batch, page_size=page_size,
-            max_len=self.max_len, mesh=mesh, share_prefix=share_prefix)
+            max_len=self.max_len, mesh=mesh, share_prefix=share_prefix,
+            spec=spec)
         self.backend = self.scheduler.backend
         # dense-cache decode fn: the serial-forward oracle and the
         # apples-to-apples comparison probe (throughput_probe(paged=False))
         self._decode = jax.jit(steps_mod.make_serve_fn(rcfg, mesh))
+        if prefix_cache_path and os.path.exists(prefix_cache_path):
+            self.load_prefix_cache(prefix_cache_path)
+
+    # -- prefix-cache persistence -------------------------------------------
+
+    def save_prefix_cache(self, path: str) -> int:
+        """Persist the prefix trie + the device contents of its pinned
+        pages to ``path`` (npz). Returns the number of pages saved."""
+        sched = self.scheduler
+        if sched.prefix is None:
+            raise ValueError("engine was built with share_prefix=False")
+        return sched.prefix.save(path, sched.state)
+
+    def load_prefix_cache(self, path: str) -> int:
+        """Restore a saved prefix cache into this engine's (empty) trie
+        and page pool — a warm restart: prompts whose prefixes were
+        cached before the restart skip their prefill again. Returns the
+        number of pages restored (pages that no longer fit the pool are
+        dropped with their subtrees)."""
+        sched = self.scheduler
+        if sched.prefix is None:
+            raise ValueError("engine was built with share_prefix=False")
+        sched.state, n = sched.prefix.load(path, sched.state)
+        return n
+
+    # -- reporting ----------------------------------------------------------
+
+    @property
+    def stats(self) -> Dict[str, float]:
+        """One merged counter dict: scheduler counters (prefill/decode/
+        spec-decode: draft_calls, verify_calls, tokens_drafted/accepted)
+        + prefix-trie counters (hit/miss/evictions)."""
+        s = dict(self.scheduler.stats)
+        prefix = self.scheduler.prefix
+        s["trie_hit_pages"] = prefix.stats["hit_pages"] if prefix else 0
+        s["trie_miss_prompts"] = prefix.stats["miss_prompts"] if prefix \
+            else 0
+        s["trie_evictions"] = prefix.stats["evicted"] if prefix else 0
+        s["accept_rate"] = self.scheduler.accept_rate()
+        return s
 
     # -- generation ---------------------------------------------------------
 
@@ -139,21 +191,31 @@ class ServeEngine:
     def _stream(self, req, request: Request, detokenize: Callable):
         """Incremental detokenization: each new token re-detokenizes the
         full emitted prefix and yields the text *diff*, so multi-byte /
-        multi-token pieces surface as soon as they are complete."""
+        multi-token pieces surface as soon as they are complete.
+
+        Dropping the iterator mid-generation (``close()`` / GeneratorExit
+        / an exception in the consumer) cancels the request: its slot and
+        pages go back to the pool immediately instead of leaking until
+        someone else happens to drive the scheduler."""
         sched = self.scheduler
         emitted, text = 0, ""
-        while True:
-            while emitted < len(req.out):
-                tok = req.out[emitted]
-                emitted += 1
-                full = detokenize(req.out[:emitted])
-                piece = full[len(text):] if full.startswith(text) else full
-                text = full
-                yield int(tok), piece
-            if req.done:
-                break
-            sched.step()         # raises if the pool can never serve rid
-        self._finalize(request, req)
+        try:
+            while True:
+                while emitted < len(req.out):
+                    tok = req.out[emitted]
+                    emitted += 1
+                    full = detokenize(req.out[:emitted])
+                    piece = full[len(text):] if full.startswith(text) \
+                        else full
+                    text = full
+                    yield int(tok), piece
+                if req.done:
+                    break
+                sched.step()     # raises if the pool can never serve rid
+        finally:
+            if not req.done:
+                sched.cancel(req)
+            self._finalize(request, req)
 
     # -- probes -------------------------------------------------------------
 

@@ -231,3 +231,87 @@ class PrefixCache:
         for _, _, node in list(self._walk()):
             self.alloc.free([node.page])
         self.children = {}
+
+    # -- persistence --------------------------------------------------------
+    # The trie + the device contents of its pinned pages round-trip
+    # through one npz file, so a restarted engine starts warm: cached
+    # prompt prefixes skip their prefill again without recomputation.
+    # State leaves are saved in jax.tree order (page axis 1 by the
+    # CacheBackend convention) — load requires the same model config.
+
+    def save(self, path: str, state) -> int:
+        """Write the trie structure + pinned page contents to ``path``.
+        ``state`` is the backend's device state whose pages the trie
+        pins. Returns the number of pages saved."""
+        import jax
+        import numpy as np
+
+        recs: List[Tuple[int, Tuple[int, ...], int]] = []
+
+        def walk(children, parent):
+            for key, node in children.items():
+                recs.append((parent, key, node.page))
+                walk(node.children, len(recs) - 1)
+
+        walk(self.children, -1)
+        pages = np.asarray([r[2] for r in recs], np.int32)
+        data = {
+            "page_size": np.int32(self.page_size),
+            "parents": np.asarray([r[0] for r in recs], np.int32),
+            "keys": np.asarray([r[1] for r in recs],
+                               np.int32).reshape(len(recs), self.page_size),
+            "pages": pages,
+        }
+        for i, leaf in enumerate(jax.tree.leaves(state)):
+            data[f"leaf_{i}"] = np.asarray(leaf[:, pages])
+        np.savez(path, **data)
+        return len(recs)
+
+    def load(self, path: str, state):
+        """Restore a saved cache into this (empty) trie: allocates fresh
+        pages, scatters the saved contents into ``state``, and rebuilds
+        the trie nodes pinning them. Nodes that no longer fit the pool —
+        or whose parent was dropped — are skipped with their subtrees.
+        Returns (new_state, n_pages_restored)."""
+        import jax
+        import jax.numpy as jnp
+        import numpy as np
+
+        d = np.load(path)
+        if int(d["page_size"]) != self.page_size:
+            raise ValueError(
+                f"prefix cache was saved with page_size="
+                f"{int(d['page_size'])}, engine uses {self.page_size}")
+        parents = d["parents"]
+        n = len(parents)
+        new_ids = np.full((n,), -1, np.int32)
+        nodes: Dict[int, _PrefixNode] = {}
+        kept: List[int] = []
+        for i in range(n):
+            parent = int(parents[i])
+            if parent >= 0 and parent not in nodes:
+                continue                       # subtree of a dropped node
+            children = self.children if parent < 0 \
+                else nodes[parent].children
+            key = tuple(int(t) for t in d["keys"][i])
+            if key in children:                # already cached post-restart
+                nodes[i] = children[key]
+                continue
+            got = self.alloc.alloc(1)
+            if got is None:
+                continue                       # pool full: drop subtree
+            new_ids[i] = got[0]
+            self._tick += 1
+            node = _PrefixNode(got[0], self._tick)
+            children[key] = node
+            nodes[i] = node
+            kept.append(i)
+        if kept:
+            dst = jnp.asarray(new_ids[kept])
+            leaves, treedef = jax.tree.flatten(state)
+            leaves = [
+                leaf.at[:, dst].set(
+                    jnp.asarray(d[f"leaf_{j}"][:, kept], leaf.dtype))
+                for j, leaf in enumerate(leaves)]
+            state = jax.tree.unflatten(treedef, leaves)
+        return state, len(kept)

@@ -15,7 +15,12 @@ request never recompiles. One scheduler iteration:
      prompts into the pages and yields each one's first token (prompt
      remainder padded to a power-of-two bucket, so compile count is
      O(log max_len), not O(T) and not O(queue)).
-  2. decode — one lock-step call over all occupied slots.
+  2. decode — one lock-step call over all occupied slots; with
+     ``spec=SpecConfig(cf, k)`` this becomes a **speculative wave**
+     (:mod:`repro.serve.spec`): the coarse-propagator draft proposes k
+     tokens per slot and one full-model verify call accepts a per-slot
+     prefix, so each slot advances by a variable ``accepted + 1`` tokens
+     per iteration (greedy output stays bitwise-plain-decode).
   3. reap — finished sequences (max_new reached or EOS) release their
      pages and slot immediately; the next iteration refills them.
 
@@ -45,11 +50,13 @@ import dataclasses
 import time
 from typing import Deque, Dict, List, Optional, Set, Tuple
 
+import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import RunConfig
 from repro.serve.cache import CacheBackend, SlotBatch, make_backend
 from repro.serve.kv_pages import (SCRATCH_PAGE, PrefixCache, pages_needed)
+from repro.serve.spec import CoarseDraft, SpecConfig
 
 
 @dataclasses.dataclass
@@ -92,7 +99,8 @@ class Scheduler:
     def __init__(self, rcfg: RunConfig, params, *, max_batch: int = 8,
                  page_size: int = 16, max_len: int = 0, n_pages: int = 0,
                  mesh=None, share_prefix: bool = True,
-                 backend: Optional[CacheBackend] = None):
+                 backend: Optional[CacheBackend] = None,
+                 spec: Optional[SpecConfig] = None):
         self.rcfg, self.params = rcfg, params
         self.max_len = max_len or min(rcfg.model.max_seq_len, 4096)
         self.page_size = page_size
@@ -108,6 +116,10 @@ class Scheduler:
         self.prefix: Optional[PrefixCache] = \
             PrefixCache(self.alloc, page_size) if share_prefix else None
         self._pending: Set[int] = set()   # pages this admit wave will write
+        self.spec: Optional[CoarseDraft] = None
+        if spec is not None:
+            self.spec = CoarseDraft(self.backend, spec, max_batch,
+                                    self.pages_per_slot, mesh=mesh)
 
         self.page_table = np.full((max_batch, self.pages_per_slot),
                                   SCRATCH_PAGE, np.int32)
@@ -126,7 +138,9 @@ class Scheduler:
                       "prefill_calls": 0, "decode_tokens": 0,
                       "decode_s": 0.0, "decode_steps": 0,
                       "shared_tokens": 0, "pages_allocated": 0,
-                      "pages_shared": 0}
+                      "pages_shared": 0, "draft_calls": 0,
+                      "verify_calls": 0, "tokens_drafted": 0,
+                      "tokens_accepted": 0}
 
     # -- submission ---------------------------------------------------------
 
@@ -277,9 +291,25 @@ class Scheduler:
                                            n_full])
             plans.append((slot, req, shared_len))
         if plans:
+            if self.spec is not None:
+                self._draft_prefill(plans)
             self._batched_prefill(plans)
             self._pending.clear()
         return len(plans)
+
+    def _draft_prefill(self, plans) -> None:
+        """Mirror an admission wave into the coarse draft: ONE jitted
+        coarse-model call writes every admitted slot's FULL prompt into
+        the draft's private pages (the draft has no prefix trie, so its
+        bucket is the whole prompt, not the unshared remainder)."""
+        S = bucket_len(max(len(r.prompt) for _, r, _ in plans))
+        toks = np.zeros((self.max_batch, S), np.int32)
+        n_new = np.zeros((self.max_batch,), np.int32)
+        for slot, req, _ in plans:
+            toks[slot, :len(req.prompt)] = req.prompt
+            n_new[slot] = len(req.prompt)
+        self.spec.prefill(toks, n_new)
+        self.stats["draft_calls"] += 1
 
     def _slot_batch(self, n_new, counters) -> SlotBatch:
         return SlotBatch(self.lengths.copy(), n_new, self.page_table,
@@ -347,6 +377,65 @@ class Scheduler:
             if self._is_done(req, tok):
                 self._reap(slot)
 
+    def _spec_wave(self) -> None:
+        """One speculative decode wave: coarse-propagator draft of up to
+        ``k`` tokens per slot + ONE full-model verify call; each slot
+        advances by ``accepted + 1`` tokens (greedy slots emit bitwise
+        what plain decode would). Two jitted calls and one host sync for
+        up to k+1 tokens per slot."""
+        sp = self.spec
+        k = sp.spec.k
+        B = self.max_batch
+        n_draft = np.zeros((B,), np.int32)
+        n_in = np.zeros((B,), np.int32)
+        ingest = np.zeros((B, k + 1), np.int32)
+        counters = np.zeros((B,), np.int32)
+        for b, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            # never draft past the request's budget: accepted+1 <= room
+            n_draft[b] = min(k, req.max_new_tokens - len(req.out) - 1)
+            # canonical tokens the draft has not cached yet + the pending
+            # token (position L); the catch-up is <= last wave's accepted
+            # count, so k+1 columns always suffice
+            row = req.out[int(sp.lengths[b]) - len(req.prompt):]
+            assert 1 <= len(row) <= k + 1
+            ingest[b, :len(row)] = row
+            n_in[b] = len(row)
+            counters[b] = len(req.out)
+        t0 = time.perf_counter()
+        d, q = sp.wave(ingest, n_in, n_draft, self.temps, self.top_ks,
+                       self.top_ps, self.seeds, counters)
+        # verify window: [pending, d_1..d_k] per slot, assembled on device
+        pending = jnp.take_along_axis(
+            jnp.asarray(ingest), jnp.maximum(n_in - 1, 0)[:, None], axis=1)
+        ver_toks = jnp.concatenate([pending, d], axis=1)
+        slots = self._slot_batch(np.where(n_in > 0, n_draft + 1, 0),
+                                 counters)
+        self.state, acc, nxt = self.backend.verify(self.state, slots,
+                                                   ver_toks, q)
+        acc = np.asarray(acc)
+        nxt = np.asarray(nxt)
+        d_host = np.asarray(d)
+        dt = time.perf_counter() - t0
+        self.stats["draft_calls"] += 1
+        self.stats["verify_calls"] += 1
+        self.stats["tokens_drafted"] += int(n_draft.sum())
+        self.stats["decode_s"] += dt
+        self.stats["decode_steps"] += 1
+        for b, req in enumerate(self.slot_req):
+            if req is None:
+                continue
+            a = int(acc[b])
+            self.stats["tokens_accepted"] += a
+            self.lengths[b] += a + 1   # committed: pending + accepted
+            for tok in [*d_host[b, :a], nxt[b]]:
+                req.out.append(int(tok))
+                self.stats["decode_tokens"] += 1
+                if self._is_done(req, int(tok)):
+                    self._reap(b)
+                    break
+
     def _is_done(self, req: ScheduledRequest, tok: int) -> bool:
         return (len(req.out) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id))
@@ -364,6 +453,26 @@ class Scheduler:
         self.top_ks[slot] = 0
         self.top_ps[slot] = 1.0
         self.seeds[slot] = 0
+        if self.spec is not None:
+            self.spec.reset_slot(slot)
+
+    def cancel(self, req: ScheduledRequest) -> None:
+        """Abort a queued or in-flight request: its slot and pages return
+        to the pool immediately and nothing more is generated (streaming
+        early termination). Finished/unknown requests are a no-op."""
+        if req.done:
+            return
+        try:
+            self.queue.remove(req)
+            req.t_done = time.perf_counter()
+            self.finished[req.rid] = req
+            return
+        except ValueError:
+            pass
+        for slot, r in enumerate(self.slot_req):
+            if r is req:
+                self._reap(slot)
+                return
 
     def drop_prefix_cache(self) -> None:
         """Release every trie-pinned page (pages still mapped by live
@@ -380,7 +489,10 @@ class Scheduler:
             return False
         admitted = self._admit()
         if self.n_active:
-            self._decode_once()
+            if self.spec is not None:
+                self._spec_wave()
+            else:
+                self._decode_once()
         elif self.queue and admitted == 0:
             # nothing running, nothing admitted: the head request can
             # never get pages (admitted > 0 with everything already
@@ -398,6 +510,12 @@ class Scheduler:
 
     # -- reporting ----------------------------------------------------------
 
+    def accept_rate(self) -> float:
+        """Fraction of spec-drafted tokens the verifier accepted (0 when
+        spec decode is off) — the single owner of this derivation."""
+        return self.stats["tokens_accepted"] / max(
+            self.stats["tokens_drafted"], 1)
+
     def throughput(self) -> Dict[str, float]:
         s = self.stats
         return {
@@ -406,4 +524,5 @@ class Scheduler:
             "decode_steps": float(s["decode_steps"]),
             "prefill_calls": float(s["prefill_calls"]),
             "shared_tokens": float(s["shared_tokens"]),
+            "accept_rate": self.accept_rate(),
         }

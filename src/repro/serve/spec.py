@@ -1,0 +1,131 @@
+"""Coarse-propagator speculative decoding — the paper's multilevel
+hierarchy as a decode accelerator.
+
+The MGRIT coarse grid approximates the fine network with every ``cf``-th
+layer and the ODE step rescaled by ``cf`` (Günther et al.; Lauga et al.).
+That is exactly the shape of a *free* draft model: zero extra parameters,
+zero training, same tokenizer/embedding — so the serve engine can draft
+``k`` tokens with the coarse propagator and verify them with ONE
+occupancy-masked full-model call per wave.
+
+Wave protocol (2 jitted calls + 1 host sync, any batch composition):
+
+1. **draft wave** (:func:`repro.launch.steps.make_draft_wave_fn`): the
+   coarse model ingests the canonical tokens it has not yet cached plus
+   the pending token (committing true draft state), then runs k-1
+   in-call autoregressive steps proposing ``d_1..d_k`` with their
+   proposal distributions ``q_i``. On snapshot backends the partial
+   state page is saved post-ingest and restored in-call, so speculative
+   writes never corrupt committed draft state.
+2. **verify** (:meth:`repro.serve.cache.CacheBackend.verify`): the fine
+   model scores ``[pending, d_1..d_k]`` in one call, accepts the longest
+   valid prefix (greedy: exact argmax match — emitted tokens are bitwise
+   identical to plain decode; sampled: leftover-distribution rejection
+   sampling keyed off the canonical ``fold_in(seed, n_emitted)`` streams
+   — the emitted distribution is exactly the target), emits
+   ``accepted + 1`` tokens, and commits fine state for exactly the
+   accepted prefix (KV: host-side length truncation; snapshot pools:
+   deferred in-call commit).
+
+The draft's decode state is deliberately simple: a private per-slot
+linear page region (no allocator, no prefix trie, no COW) sized
+``max_batch * pages_per_slot`` pages of the COARSE stack — about
+``1/cf`` of one fine pool. Draft quality only moves the acceptance rate;
+correctness is carried entirely by verification.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import numpy as np
+
+from repro.launch import steps as steps_mod
+from repro.serve.cache import CacheBackend
+
+
+@dataclasses.dataclass(frozen=True)
+class SpecConfig:
+    """Speculative-decoding knobs: ``cf`` is the layer-coarsening factor
+    of the draft (the paper's c_f), ``k`` the number of tokens drafted
+    per verify wave."""
+    cf: int = 4
+    k: int = 4
+
+    def __post_init__(self):
+        if self.cf < 1:
+            raise ValueError("spec cf must be >= 1")
+        if self.k < 1:
+            raise ValueError("spec k must be >= 1")
+
+
+class CoarseDraft:
+    """Self-speculative draft model + its private decode state.
+
+    Built from a fine :class:`~repro.serve.cache.CacheBackend`: the draft
+    params are the backend's weights restricted to every ``cf``-th layer
+    (``transformer.coarse_draft_params``), the decode fn is the same
+    family step the backend uses, and the state is a coarse-depth page
+    pool with a static per-slot page table. ``lengths[b]`` tracks the
+    draft's committed canonical tokens for slot b — always <= the fine
+    scheduler's lengths, and re-synced by each wave's catch-up ingest.
+    """
+
+    def __init__(self, backend: CacheBackend, spec: SpecConfig,
+                 max_batch: int, pages_per_slot: int, mesh=None):
+        self.spec = spec
+        self.backend = backend
+        self.max_batch = max_batch
+        params_d, rcfg_d, n_coarse = backend.coarse_draft(spec.cf)
+        self.params = params_d
+        self.rcfg = rcfg_d
+        self.n_coarse = n_coarse
+        n_pages = 1 + max_batch * pages_per_slot
+        self.state = backend.init_draft_state(rcfg_d, n_coarse, n_pages)
+        self.table = np.asarray(
+            1 + np.arange(max_batch * pages_per_slot).reshape(
+                max_batch, pages_per_slot), np.int32)
+        self.lengths = np.zeros((max_batch,), np.int32)
+        decode_fn = backend._decode_fn()
+        self._prefill_fn = jax.jit(
+            steps_mod.make_paged_serve_fn(rcfg_d, mesh, decode_fn),
+            donate_argnums=(1,))
+        self._wave_fn = jax.jit(
+            steps_mod.make_draft_wave_fn(
+                rcfg_d, mesh, decode_fn, k=spec.k,
+                page_size=backend.page_size,
+                snapshot_state=backend.snapshot_state),
+            donate_argnums=(1,))
+        self._greedy = (np.zeros((max_batch,), np.float32),
+                        np.zeros((max_batch,), np.int32),
+                        np.ones((max_batch,), np.float32),
+                        np.zeros((max_batch,), np.int32),
+                        np.zeros((max_batch,), np.int32))
+
+    def reset_slot(self, slot: int) -> None:
+        self.lengths[slot] = 0
+
+    def prefill(self, tokens: np.ndarray, n_new: np.ndarray) -> None:
+        """One jitted call writes every admitted slot's FULL prompt into
+        the draft pools (the draft has no prefix trie, so it always
+        prefills from position 0). The sampled output is discarded."""
+        lengths = np.zeros((self.max_batch,), np.int32)
+        temps, top_ks, top_ps, seeds, counters = self._greedy
+        _, self.state = self._prefill_fn(
+            self.params, self.state, np.asarray(tokens, np.int32), lengths,
+            np.asarray(n_new, np.int32), self.table, temps, top_ks, top_ps,
+            seeds, counters)
+        self.lengths[:] = np.where(n_new > 0, n_new, self.lengths)
+
+    def wave(self, ingest, n_in, n_draft, temps, top_ks, top_ps, seeds,
+             counters):
+        """Catch-up ingest + k drafted tokens in one jitted call. Returns
+        (drafted (B, k), draft_probs (B, k, V)) as device arrays and
+        advances the committed draft lengths by ``n_in``."""
+        d, q, self.state = self._wave_fn(
+            self.params, self.state, np.asarray(ingest, np.int32),
+            self.lengths.copy(), np.asarray(n_in, np.int32), self.table,
+            temps, top_ks, top_ps, seeds, np.asarray(counters, np.int32),
+            np.asarray(n_draft, np.int32))
+        self.lengths += np.asarray(n_in, np.int32)
+        return d, q

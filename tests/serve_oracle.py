@@ -13,6 +13,21 @@ import numpy as np
 
 from repro.launch.steps import sample_tokens
 from repro.models import transformer
+from repro.serve.engine import Request, ServeEngine
+
+
+def engine_outputs(rcfg, params, reqs, **engine_kw):
+    """Run a list of (prompt, max_new_tokens[, kwargs]) specs through a
+    fresh ServeEngine and return the output arrays. One harness for the
+    plain-vs-spec conformance suites: ``engine_kw`` selects the engine
+    under test (e.g. ``spec=SpecConfig(cf, k)``), the request list stays
+    byte-identical across engines."""
+    engine = ServeEngine(rcfg, params, **engine_kw)
+    out = engine.generate(
+        [Request(prompt=np.asarray(p, np.int32), max_new_tokens=n,
+                 **(kw[0] if kw else {}))
+         for p, n, *kw in reqs])
+    return engine, [r.output for r in out]
 
 
 def dense_decode_oracle(rcfg, params, step, req, max_len: int) -> np.ndarray:

@@ -1,0 +1,338 @@
+"""Coarse-propagator speculative decoding: conformance + satellites.
+
+The hard guarantee: with temperature 0, spec decode is token-for-token
+identical to plain paged decode on every backend family — acceptance is
+exact argmax match, so wrong drafts cost waves, never correctness. The
+sampled path preserves the target distribution via rejection sampling;
+the top_k=1 case collapses it back to greedy and is asserted bitwise.
+
+Also covered here (PR satellites): engine stats counters for spec decode
+and the prefix trie, streaming early termination releasing pages, and
+prefix-cache persistence across an engine restart.
+"""
+import os
+
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import (MGRITConfig, ModelConfig, OptimizerConfig,
+                                RunConfig, SSMConfig, ShapeConfig)
+from repro.core import mgrit
+from repro.models import transformer
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.spec import SpecConfig
+from serve_oracle import engine_outputs
+
+pytestmark = pytest.mark.serve
+
+VOCAB = 64
+MAX_LEN = 32
+
+FAMILY_MODELS = {
+    "decoder": dict(family="decoder"),
+    "ssm": dict(family="ssm", n_layers=4, act="silu", norm="rmsnorm",
+                ssm=SSMConfig(version=2, d_state=8, d_conv=3, headdim=16)),
+    "hybrid": dict(family="hybrid", n_layers=5, hybrid_attn_every=2,
+                   act="silu", norm="rmsnorm",
+                   ssm=SSMConfig(version=2, d_state=8, d_conv=3,
+                                 headdim=16)),
+}
+
+
+def family_rcfg(name: str) -> RunConfig:
+    kw = dict(name=name, family="decoder", n_layers=8, d_model=32,
+              n_heads=2, n_kv_heads=2, d_ff=64, vocab_size=VOCAB,
+              act="gelu", norm="layernorm", dtype="float32")
+    kw.update(FAMILY_MODELS[name])
+    return RunConfig(
+        model=ModelConfig(**kw),
+        mgrit=MGRITConfig(enabled=True, cf=2, levels=2, fwd_iters=1,
+                          bwd_iters=1, n_open=1, n_close=1, pad_to=2),
+        optimizer=OptimizerConfig(),
+        shape=ShapeConfig(name, "train", 16, 4))
+
+
+_PARAMS = {}
+
+
+def family_setup(name: str):
+    if name not in _PARAMS:
+        rcfg = family_rcfg(name)
+        params = transformer.init_model(
+            jax.random.PRNGKey(sum(map(ord, name)) % 997), rcfg)
+        _PARAMS[name] = (rcfg, params)
+    return _PARAMS[name]
+
+
+MIXED_REQS = [(np.array([5, 9, 3, 7, 2, 11], np.int32), 9),
+              (np.array([1, 2, 3], np.int32), 7),
+              (np.array([4], np.int32), 5)]
+
+
+# ---------------------------------------------------------------------------
+# Conformance: greedy spec decode == plain paged decode, all families
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("name", sorted(FAMILY_MODELS))
+def test_spec_greedy_bitwise_equals_plain(name):
+    """Acceptance criterion: temp-0 spec decode is token-for-token the
+    plain paged engine on attention, SSM, and hybrid backends — mixed
+    prompt lengths, continuous batching, uneven per-slot acceptance."""
+    rcfg, params = family_setup(name)
+    kw = dict(max_len=MAX_LEN, max_batch=2, page_size=4)
+    _, ref = engine_outputs(rcfg, params, MIXED_REQS, **kw)
+    eng, got = engine_outputs(rcfg, params, MIXED_REQS,
+                              spec=SpecConfig(cf=2, k=3), **kw)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+    st = eng.stats
+    assert st["verify_calls"] > 0 and st["tokens_drafted"] > 0
+    # spec must finish in fewer decode waves than plain emits tokens
+    assert st["decode_steps"] < sum(len(o) for o in got)
+
+
+@pytest.mark.parametrize("cf,k", [(1, 1), (1, 4), (3, 2), (4, 5)])
+def test_spec_cf_k_grid_stays_bitwise(cf, k):
+    """cf=1 (draft == fine, everything accepted) and ragged cf/k combos
+    all stay bitwise-greedy; cf=1 acceptance is exactly 1."""
+    rcfg, params = family_setup("decoder")
+    kw = dict(max_len=MAX_LEN, max_batch=2, page_size=4)
+    _, ref = engine_outputs(rcfg, params, MIXED_REQS, **kw)
+    eng, got = engine_outputs(rcfg, params, MIXED_REQS,
+                              spec=SpecConfig(cf=cf, k=k), **kw)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+    if cf == 1:
+        assert eng.stats["accept_rate"] == 1.0
+
+
+def test_spec_eos_truncates_like_plain():
+    """EOS inside an accepted burst truncates the output exactly where
+    plain decode would have stopped."""
+    rcfg, params = family_setup("decoder")
+    kw = dict(max_len=MAX_LEN, max_batch=1, page_size=4)
+    prompt = np.array([3, 1, 4], np.int32)
+    _, (probe,) = engine_outputs(rcfg, params, [(prompt, 8)], **kw)
+    eos = int(probe[2])                      # third emitted token
+    reqs = [(prompt, 8, dict(eos_id=eos))]
+    _, (ref,) = engine_outputs(rcfg, params, reqs, **kw)
+    _, (got,) = engine_outputs(rcfg, params, reqs,
+                               spec=SpecConfig(cf=2, k=4), **kw)
+    np.testing.assert_array_equal(ref, got)
+    assert len(got) == 3 and got[-1] == eos
+
+
+def test_spec_topk1_sampling_collapses_to_greedy():
+    """Distribution-preservation edge: top_k=1 at any temperature makes
+    the target one-hot, so spec sampling must reproduce plain greedy
+    bitwise (rejection sampling + leftover redraw included)."""
+    rcfg, params = family_setup("ssm")
+    kw = dict(max_len=MAX_LEN, max_batch=2, page_size=4)
+    greedy_reqs = [(p, n) for p, n, *_ in MIXED_REQS]
+    hot_reqs = [(p, n, dict(temperature=0.9, top_k=1, seed=11 + i))
+                for i, (p, n) in enumerate(greedy_reqs)]
+    _, ref = engine_outputs(rcfg, params, greedy_reqs, **kw)
+    _, got = engine_outputs(rcfg, params, hot_reqs,
+                            spec=SpecConfig(cf=2, k=3), **kw)
+    for a, b in zip(ref, got):
+        np.testing.assert_array_equal(a, b)
+
+
+def test_spec_sampled_is_deterministic_and_placement_free():
+    """Sampled spec decode is a function of (prompt, params, seed) only:
+    two runs agree, and so does a run with the batch order shuffled
+    (slot placement must not leak into the streams)."""
+    rcfg, params = family_setup("decoder")
+    kw = dict(max_len=MAX_LEN, max_batch=2, page_size=4)
+    reqs = [(np.array([7, 7, 2], np.int32), 6,
+             dict(temperature=1.2, top_k=8, seed=5)),
+            (np.array([9, 1], np.int32), 6,
+             dict(temperature=0.7, top_p=0.9, seed=6))]
+    _, a = engine_outputs(rcfg, params, reqs,
+                          spec=SpecConfig(cf=2, k=3), **kw)
+    _, b = engine_outputs(rcfg, params, reqs,
+                          spec=SpecConfig(cf=2, k=3), **kw)
+    _, c = engine_outputs(rcfg, params, reqs[::-1],
+                          spec=SpecConfig(cf=2, k=3), **kw)
+    for x, y in zip(a, b):
+        np.testing.assert_array_equal(x, y)
+    for x, y in zip(a, c[::-1]):
+        np.testing.assert_array_equal(x, y)
+
+
+def test_spec_sampled_matches_target_distribution():
+    """Rejection sampling preserves the target distribution: over many
+    seeds, the first sampled token's empirical distribution under spec
+    decode matches plain decode (both deterministic given seeds, so this
+    comparison never flakes)."""
+    rcfg, params = family_setup("decoder")
+    kw = dict(max_len=MAX_LEN, max_batch=4, page_size=4)
+    prompt = np.array([5, 9, 3], np.int32)
+
+    def first_tokens(spec):
+        toks = []
+        for lo in range(0, 48, 8):
+            reqs = [(prompt, 3, dict(temperature=1.5, seed=s))
+                    for s in range(lo, lo + 8)]
+            _, outs = engine_outputs(rcfg, params, reqs, spec=spec, **kw)
+            toks += [o[2] for o in outs]     # third token: past prefill,
+        return np.asarray(toks)              # shaped by accept/reject
+
+    plain = first_tokens(None)
+    spec = first_tokens(SpecConfig(cf=2, k=3))
+    # same target law, independent draws: compare histograms loosely
+    hp = np.bincount(plain, minlength=VOCAB) / len(plain)
+    hs = np.bincount(spec, minlength=VOCAB) / len(spec)
+    assert 0.5 * np.abs(hp - hs).sum() < 0.45   # total-variation bound
+
+
+def test_spec_counters_in_engine_stats():
+    rcfg, params = family_setup("decoder")
+    eng, _ = engine_outputs(rcfg, params, MIXED_REQS, max_len=MAX_LEN,
+                            max_batch=2, page_size=4,
+                            spec=SpecConfig(cf=2, k=3))
+    st = eng.stats
+    for key in ("draft_calls", "verify_calls", "tokens_drafted",
+                "tokens_accepted", "accept_rate", "trie_hit_pages",
+                "trie_miss_prompts", "trie_evictions"):
+        assert key in st, key
+    assert st["draft_calls"] > st["verify_calls"]   # + draft prefills
+    assert 0.0 <= st["accept_rate"] <= 1.0
+
+
+def test_coarse_restrict_is_every_cf_th_layer():
+    """The serve draft reuses the solver's level restriction: every
+    cf-th slice, ragged tails allowed."""
+    stacked = {"w": np.arange(7 * 3).reshape(7, 3)}
+    got = mgrit.coarse_restrict(stacked, 3)
+    np.testing.assert_array_equal(got["w"], stacked["w"][[0, 3, 6]])
+    rcfg, params = family_setup("decoder")
+    draft, _, n_coarse = transformer.coarse_draft_params(params, rcfg, 3)
+    n_fine = rcfg.mgrit.n_open + rcfg.mgrit.n_close \
+        + transformer.depth_plan(rcfg.model.n_layers, rcfg.mgrit).n_mid_padded
+    assert n_coarse == -(-n_fine // 3)
+    # the coarse gates sum the fine gates: total ODE time span preserved
+    assert float(draft["mid"]["gate"].sum()) == float(
+        rcfg.mgrit.n_open + rcfg.mgrit.n_close
+        + transformer.depth_plan(rcfg.model.n_layers,
+                                 rcfg.mgrit).n_mid_real)
+
+
+# ---------------------------------------------------------------------------
+# Satellites: streaming early termination + prefix persistence
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.parametrize("spec", [None, SpecConfig(cf=2, k=3)],
+                         ids=["plain", "spec"])
+def test_streaming_early_termination_releases_pages(spec):
+    """Dropping a stream=True iterator mid-generation must cancel the
+    request and hand its pages back to the allocator."""
+    rcfg, params = family_setup("decoder")
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=4, spec=spec)
+    sched = eng.scheduler
+    free0 = sched.alloc.n_free
+    req = Request(prompt=np.array([2, 4, 6, 8, 1], np.int32),
+                  max_new_tokens=12)
+    stream = eng.submit(req, stream=True)
+    got = [next(stream) for _ in range(2)]      # mid-generation...
+    assert len(got) == 2
+    stream.close()                              # ...and dropped
+    assert sched.n_active == 0
+    sched.drop_prefix_cache()
+    assert sched.alloc.n_free == free0
+    assert req.output is not None and len(req.output) >= 2
+    # the engine keeps serving normally afterwards
+    out = eng.generate([Request(prompt=np.array([1, 2], np.int32),
+                                max_new_tokens=3)])
+    assert len(out[0].output) == 3
+
+
+def test_cancel_queued_request_never_admits_it():
+    """Scheduler.cancel on a still-queued request removes it from the
+    queue; the rest of the queue drains normally."""
+    rcfg, params = family_setup("decoder")
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=1,
+                      page_size=4)
+    rid1 = eng.submit(Request(prompt=np.array([1, 2, 3], np.int32),
+                              max_new_tokens=4))
+    sreq2 = eng.scheduler.submit_request(np.array([4, 5, 6], np.int32), 4)
+    eng.scheduler.cancel(sreq2)
+    done = eng.scheduler.run()
+    assert len(done[rid1].out) == 4
+    assert sreq2.done and len(sreq2.out) == 0
+
+
+@pytest.mark.parametrize("name", ["decoder", "ssm"])
+def test_prefix_cache_persists_across_engine_restart(name, tmp_path):
+    """PrefixCache.save/load round-trips the trie + pinned page contents:
+    a restarted engine serves a cached prompt without re-prefilling the
+    shared prefix, with identical outputs."""
+    rcfg, params = family_setup(name)
+    path = os.path.join(tmp_path, "prefix.npz")
+    common = np.arange(1, 9, dtype=np.int32) % VOCAB       # 2 pages of 4
+    reqs = [(np.concatenate([common, np.array([20 + i], np.int32)]), 4)
+            for i in range(2)]
+    eng1, ref = engine_outputs(rcfg, params, reqs, max_len=MAX_LEN,
+                               max_batch=2, page_size=4)
+    n_saved = eng1.save_prefix_cache(path)
+    assert n_saved == eng1.scheduler.prefix.n_cached_pages > 0
+
+    eng2 = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                       page_size=4, prefix_cache_path=path)
+    assert eng2.scheduler.prefix.n_cached_pages == n_saved
+    out = eng2.generate([Request(prompt=p, max_new_tokens=n)
+                         for p, n in reqs])
+    for a, b in zip(ref, out):
+        np.testing.assert_array_equal(a, b.output)
+    st = eng2.scheduler.stats
+    assert st["shared_tokens"] >= len(common)   # restored pages reused
+    eng2.scheduler.drop_prefix_cache()
+    assert eng2.scheduler.alloc.n_free == eng2.scheduler.alloc.n_pages - 1
+
+
+def test_prefix_cache_load_rejects_page_size_mismatch(tmp_path):
+    rcfg, params = family_setup("decoder")
+    path = os.path.join(tmp_path, "prefix.npz")
+    eng1, _ = engine_outputs(
+        rcfg, params, [(np.arange(1, 9, dtype=np.int32), 2)],
+        max_len=MAX_LEN, max_batch=1, page_size=4)
+    eng1.save_prefix_cache(path)
+    eng2 = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=1,
+                       page_size=8)
+    with pytest.raises(ValueError, match="page_size"):
+        eng2.load_prefix_cache(path)
+
+
+# ---------------------------------------------------------------------------
+# Property check (optional hypothesis dependency, like test_properties)
+# ---------------------------------------------------------------------------
+
+
+def test_spec_conformance_property():
+    hypothesis = pytest.importorskip("hypothesis")
+    from hypothesis import given, settings, strategies as st
+
+    rcfg, params = family_setup("decoder")
+
+    @settings(max_examples=8, deadline=None)
+    @given(data=st.data())
+    def run(data):
+        rng = np.random.default_rng(data.draw(st.integers(0, 2**31 - 1)))
+        n_req = data.draw(st.integers(1, 3))
+        reqs = [(rng.integers(0, VOCAB, size=int(rng.integers(1, 12)))
+                 .astype(np.int32), int(rng.integers(1, 8)))
+                for _ in range(n_req)]
+        k = data.draw(st.integers(1, 5))
+        cf = data.draw(st.integers(1, 5))
+        kw = dict(max_len=MAX_LEN, max_batch=2, page_size=4)
+        _, ref = engine_outputs(rcfg, params, reqs, **kw)
+        _, got = engine_outputs(rcfg, params, reqs,
+                                spec=SpecConfig(cf=cf, k=k), **kw)
+        for a, b in zip(ref, got):
+            np.testing.assert_array_equal(a, b)
+
+    run()
