@@ -12,6 +12,12 @@ Reports, for a small decoder LM on this host:
                           recurrent state served from snapshot pages
                           through the same CacheBackend protocol
   serve/decode_hybrid_paged  same for the hybrid (zamba2-style) backend
+  serve/decode_mesh_tp2   steady-state paged decode on a 2-device host
+                          mesh (dp1xtp2: weights TP over 'model', page
+                          pools over 'data') — run in a subprocess with
+                          XLA_FLAGS=--xla_force_host_platform_device_count=2
+                          since the parent's jax is already initialized;
+                          the derived field carries the mesh label
   serve/ttft              time-to-first-token through the scheduler
   serve/e2e_sched         mixed-length queue end-to-end through the
                           scheduler: aggregate generated tokens/sec
@@ -23,6 +29,10 @@ Reports, for a small decoder LM on this host:
 """
 from __future__ import annotations
 
+import json
+import os
+import subprocess
+import sys
 import time
 
 import jax
@@ -31,6 +41,7 @@ import numpy as np
 from benchmarks.common import CSV, time_call
 from repro.configs.base import (MGRITConfig, ModelConfig, OptimizerConfig,
                                 RunConfig, ShapeConfig)
+from repro.launch.hostdev import force_host_device_count
 from repro.models import transformer
 from repro.serve.engine import Request, ServeEngine
 
@@ -65,6 +76,63 @@ def hybrid_rcfg() -> RunConfig:
                       n_layers=6, hybrid_attn_every=3,
                       ssm=SSMConfig(version=2, d_state=16, d_conv=4,
                                     headdim=16))
+
+
+def mesh_probe(dp: int = 1, tp: int = 2) -> dict:
+    """Steady-state mesh-sharded paged decode throughput — called inside
+    a subprocess whose host platform was forced to ``dp * tp`` devices
+    (see :func:`_mesh_row`). Greedy output is conformance-checked against
+    a single-device engine on the same weights before timing."""
+    n = dp * tp
+    if jax.device_count() < n:
+        # an operator-set --xla_force_host_platform_device_count wins
+        # over _mesh_row's (hostdev.force_host_device_count contract)
+        raise RuntimeError(
+            f"mesh_probe needs {n} devices, have {jax.device_count()} "
+            "(XLA_FLAGS already forced a smaller host device count?)")
+    mesh = jax.make_mesh((dp, tp), ("data", "model"),
+                         devices=jax.devices()[:n])
+    rcfg = serve_rcfg()
+    params = transformer.init_model(jax.random.PRNGKey(0), rcfg)
+    kw = dict(max_len=MAX_LEN, max_batch=BATCH, page_size=16)
+    eng = ServeEngine(rcfg, params, mesh=mesh, **kw)
+    solo = ServeEngine(rcfg, params, **kw)
+    rng = np.random.default_rng(0)
+    reqs = [Request(prompt=rng.integers(0, 256, size=24).astype(np.int32),
+                    max_new_tokens=8) for _ in range(BATCH)]
+    got = eng.generate([Request(prompt=r.prompt.copy(), max_new_tokens=8)
+                        for r in reqs])
+    ref = solo.generate(reqs)
+    if any(not np.array_equal(a.output, b.output)
+           for a, b in zip(got, ref)):
+        raise RuntimeError("mesh decode diverged from single-device")
+    tok_s = eng.throughput_probe(BATCH, steps=16)
+    return {"tok_s": tok_s, "mesh": f"dp{dp}xtp{tp}",
+            "devices": int(jax.device_count())}
+
+
+def _mesh_row(csv: CSV, dp: int = 1, tp: int = 2) -> None:
+    """serve/decode_mesh_tp2 in a subprocess: jax in THIS process is
+    already initialized with one CPU device, so the forced multi-device
+    host platform must come up in a fresh interpreter."""
+    env = dict(os.environ, JAX_PLATFORMS="cpu")
+    # appends to (not replaces) any operator-set XLA_FLAGS so this row
+    # is timed under the same XLA settings as the sibling serve rows
+    force_host_device_count(dp * tp, env=env)
+    env["PYTHONPATH"] = "src" + os.pathsep + env.get("PYTHONPATH", "")
+    code = ("import json; from benchmarks.bench_serve import mesh_probe; "
+            f"print('RESULT ' + json.dumps(mesh_probe({dp}, {tp})))")
+    r = subprocess.run([sys.executable, "-c", code], capture_output=True,
+                       text=True, env=env, timeout=1200)
+    if r.returncode != 0:
+        raise RuntimeError(f"mesh bench subprocess failed: "
+                           f"{r.stderr[-2000:]}")
+    line = [ln for ln in r.stdout.splitlines()
+            if ln.startswith("RESULT ")][-1]
+    out = json.loads(line[len("RESULT "):])
+    csv.add(f"serve/decode_mesh_tp{tp}", BATCH / out["tok_s"] * 1e6,
+            f"tok_s={out['tok_s']:.0f};mesh={out['mesh']};"
+            f"devices={out['devices']}")
 
 
 def run(csv: CSV):
@@ -111,6 +179,9 @@ def run(csv: CSV):
                            max_batch=BATCH, page_size=16)
         tps_fam = feng.throughput_probe(BATCH, steps=16)
         csv.add(row, BATCH / tps_fam * 1e6, f"tok_s={tps_fam:.0f}")
+
+    # -- mesh-sharded decode (dp1xtp2 host mesh, subprocess) ---------------
+    _mesh_row(csv, dp=1, tp=2)
 
     # -- scheduler: TTFT + mixed-queue end-to-end -------------------------
     rng = np.random.default_rng(0)

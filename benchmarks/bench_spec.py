@@ -43,6 +43,13 @@ CF, K = 4, 4
 # mamba2's gated-RMSNorm gain, which otherwise pins |F| at O(1)
 _RESIDUAL_OUT = ("out_proj", "wo", "w_out", "norm_scale")
 
+# THE damped-init knob (referenced by repro.serve.spec): per-family
+# damping factor applied by ``trained_regime`` to every residual output
+# projection. Smaller = closer to identity blocks = higher draft
+# acceptance; the hybrid family needs a stronger damp because its shared
+# attention block is coarsened in cadence, not just depth.
+TRAINED_REGIME_DAMP = {"attn": 0.1, "ssm": 0.1, "hybrid": 0.05}
+
 
 def trained_regime(params, factor: float):
     """Damp every residual output projection by ``factor``: post-training
@@ -77,9 +84,10 @@ def _decode_tok_s(engine, reqs):
 
 
 def run(csv: CSV):
-    fams = (("serve/spec_attn", serve_rcfg(), 0.1),
-            ("serve/spec_ssm", ssm_rcfg(), 0.1),
-            ("serve/spec_hybrid", hybrid_rcfg(), 0.05))
+    fams = (("serve/spec_attn", serve_rcfg(), TRAINED_REGIME_DAMP["attn"]),
+            ("serve/spec_ssm", ssm_rcfg(), TRAINED_REGIME_DAMP["ssm"]),
+            ("serve/spec_hybrid", hybrid_rcfg(),
+             TRAINED_REGIME_DAMP["hybrid"]))
     failures = []
     for row, rcfg, damp in fams:
         params = trained_regime(

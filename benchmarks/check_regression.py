@@ -35,6 +35,10 @@ REQUIRED_ROWS = (
     "serve/decode_paged",
     "serve/decode_ssm_paged",
     "serve/decode_hybrid_paged",
+    # mesh-sharded serving: losing this row means SPMD decode stopped
+    # being measured (bench_serve._mesh_row also conformance-checks the
+    # mesh output against a single-device engine and raises on drift)
+    "serve/decode_mesh_tp2",
     "serve/prefix_shared",
     "serve/prefix_baseline",
     # speculative decoding: one row per backend family (tokens/s +

@@ -176,7 +176,8 @@ class ShardingConfig:
     """Maps logical axes to physical mesh axes.
 
     Logical axes used throughout the codebase:
-      batch, layers, heads, kv_heads, mlp, embed, vocab, experts, kv_seq, seq
+      batch, layers, heads, kv_heads, mlp, embed, vocab, experts, kv_seq,
+      seq, pages
     Values are physical axis names or None (replicated). "data+pod" means the
     product of the two axes.
     """
@@ -188,6 +189,7 @@ class ShardingConfig:
     embed: Optional[str] = None
     experts: Optional[str] = None     # expert parallelism
     kv_seq: Optional[str] = None      # KV-cache sequence sharding (long ctx)
+    pages: Optional[str] = None       # paged-serving state pools (page axis)
     fsdp: Optional[str] = None        # storage sharding of big weight dims
     # whether gradient reduction across pods uses int8 compression
     compress_grads: bool = False

@@ -99,6 +99,17 @@ def decode_sharding(long_context: bool = False) -> ShardingConfig:
     return s
 
 
+def serve_sharding() -> ShardingConfig:
+    """Mesh-sharded paged serving (the ServeEngine's default under a
+    mesh): weights Megatron-TP over 'model' (heads / d_ff / SSM inner
+    dims), decode-state page pools and the slot batch over 'data'. The
+    scheduler/allocator stay host-side and mesh-blind — page ids and
+    slot ids are global; only device arrays carry shardings (see
+    docs/sharding.md)."""
+    return ShardingConfig(batch="data", heads="model", mlp="model",
+                          vocab="model", layers=None, pages="data")
+
+
 # gradient-accumulation microbatches per arch for train_4k: bounds the live
 # MGRIT state + activation memory per chip (EXPERIMENTS.md §Dry-run)
 TRAIN_MICROBATCHES = {

@@ -5,7 +5,7 @@
       [--max-batch 4] [--page-size 16] [--max-len 256] \
       [--temperature 0.8] [--top-k 40] [--top-p 0.95] \
       [--shared-prefix-len 0] [--no-share-prefix] [--stream] \
-      [--spec-cf 4 --spec-k 4] [--stats]
+      [--spec-cf 4 --spec-k 4] [--stats] [--mesh 1,2]
 
 Every decode-capable family runs the same paged continuous-batching
 engine (batched chunked prefill + refcounted paged state with prefix
@@ -16,10 +16,12 @@ behind the CacheBackend protocol (repro.serve.cache). ``--spec-cf``
 turns on coarse-propagator speculative decoding (repro.serve.spec): the
 paper's coarse grid — every cf-th layer, ODE step rescaled — drafts
 ``--spec-k`` tokens per wave and the full model verifies them in one
-call (greedy output is bitwise identical to plain decode). On the
-production meshes, serving shards with Megatron TP + flash-decoding
-KV-seq sharding (configs/registry.decode_sharding); on this CPU
-container use --reduced.
+call (greedy output is bitwise identical to plain decode). ``--mesh
+dp,tp`` serves mesh-sharded (docs/sharding.md): weights Megatron-TP over
+'model', page pools over 'data' (registry.serve_sharding), one jitted
+SPMD call per wave — temp-0 output stays token-for-token identical to
+single-device decode. On a CPU container the host platform is forced to
+dp*tp devices automatically; use --reduced for the big archs.
 """
 from __future__ import annotations
 
@@ -62,7 +64,20 @@ def main(argv=None):
     ap.add_argument("--stats", action="store_true",
                     help="print the engine's full counter dict (spec "
                          "decode + prefix cache included)")
+    ap.add_argument("--mesh", default="",
+                    help="dp,tp — serve mesh-sharded on a (data, model) "
+                         "mesh (e.g. --mesh 1,2 for 2-way tensor "
+                         "parallelism); forces dp*tp host devices when "
+                         "the platform has fewer")
     args = ap.parse_args(argv)
+
+    mesh_shape = None
+    if args.mesh:
+        from repro.launch.hostdev import force_host_device_count
+        dp, tp = (int(x) for x in args.mesh.split(","))
+        mesh_shape = (dp, tp)
+        # must land before the jax import below touches the backend
+        force_host_device_count(dp * tp)
 
     import jax
     from repro.configs import registry
@@ -70,6 +85,16 @@ def main(argv=None):
     from repro.models import transformer
     from repro.serve.engine import Request, ServeEngine
     from repro.serve.spec import SpecConfig
+
+    mesh = None
+    if mesh_shape is not None:
+        n = mesh_shape[0] * mesh_shape[1]
+        if jax.device_count() < n:
+            raise SystemExit(
+                f"--mesh {args.mesh} needs {n} devices, have "
+                f"{jax.device_count()} (XLA_FLAGS was set too late?)")
+        mesh = jax.make_mesh(mesh_shape, ("data", "model"),
+                             devices=jax.devices()[:n])
 
     rcfg = registry.get_config(args.arch, "decode_32k")
     if args.reduced:
@@ -84,7 +109,7 @@ def main(argv=None):
 
     spec = SpecConfig(cf=args.spec_cf, k=args.spec_k) \
         if args.spec_cf > 0 else None
-    engine = ServeEngine(rcfg, params, max_len=args.max_len,
+    engine = ServeEngine(rcfg, params, mesh=mesh, max_len=args.max_len,
                          max_batch=args.max_batch,
                          page_size=args.page_size,
                          share_prefix=not args.no_share_prefix,
@@ -93,7 +118,9 @@ def main(argv=None):
           f"{type(engine.backend).__name__}"
           + (f" + spec decode (cf={spec.cf}, k={spec.k}, "
              f"{engine.scheduler.spec.n_coarse} coarse layers)"
-             if spec else ""))
+             if spec else "")
+          + (f" on mesh dp{mesh_shape[0]}xtp{mesh_shape[1]} "
+             f"({dp * tp} devices)" if mesh is not None else ""))
     rng = np.random.default_rng(args.seed)
     common = rng.integers(0, rcfg.model.vocab_size,
                           size=args.shared_prefix_len).astype(np.int32)

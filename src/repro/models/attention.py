@@ -251,6 +251,8 @@ def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
     cos, sin = rope
     q = apply_rope(q, cos, sin)
     k = apply_rope(k, cos, sin)
+    q = logical_constraint(q, ("batch", "seq", "heads", "head_dim"))
+    k = logical_constraint(k, ("batch", "seq", "kv_heads", "head_dim"))
 
     B, S = x.shape[:2]
     n_pages, page_size = pk.shape[0], pk.shape[1]
@@ -272,8 +274,10 @@ def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
     # per-slot dense view in logical order: (B, P*page_size, Hkv, hd)
     gather = (page_table[:, :, None] * page_size
               + jnp.arange(page_size)[None, None, :]).reshape(B, -1)
-    kd = pk_flat[gather]
-    vd = pv_flat[gather]
+    kd = logical_constraint(pk_flat[gather],
+                            ("batch", "kv_seq", "kv_heads", "head_dim"))
+    vd = logical_constraint(pv_flat[gather],
+                            ("batch", "kv_seq", "kv_heads", "head_dim"))
 
     # keys gathered in logical order sit at absolute positions 0..cap-1;
     # garbage beyond a slot's written length always has kpos > qpos and
@@ -281,4 +285,11 @@ def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
     with jax.named_scope("paged_attn_core"):
         out = dot_attention(q, kd, vd, causal=True, q_offset=lengths)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
-    return y, pk_flat.reshape(pk.shape), pv_flat.reshape(pv.shape)
+    y = logical_constraint(y, ("batch", "seq", "embed"))
+    # pools keep their mesh placement across steps (pages over serving
+    # DP, kv heads over TP) instead of decaying to replicated
+    new_pk = logical_constraint(pk_flat.reshape(pk.shape),
+                                ("pages", None, "kv_heads", "head_dim"))
+    new_pv = logical_constraint(pv_flat.reshape(pv.shape),
+                                ("pages", None, "kv_heads", "head_dim"))
+    return y, new_pk, new_pv

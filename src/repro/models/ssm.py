@@ -145,6 +145,19 @@ def init_mamba1_cache(cfg: ModelConfig, batch: int, n_layers: int):
 # land there, and reads at position 0 are masked to the zero state.
 
 
+def constrain_pools(conv_pool, h_pool, *, stacked: bool = False):
+    """Pin snapshot pools to their logical mesh axes (pages over the
+    serving DP axis, inner/head dims over TP) so jitted steps keep the
+    pools sharded instead of decaying to replicated. ``stacked=True``
+    for (L, n_pages, ...) trees (a leading layer axis); mamba1 h pools
+    are rank 3 per layer, mamba2 rank 4. No-op without active rules."""
+    pre = (None,) if stacked else ()
+    conv_pool = logical_constraint(conv_pool, pre + ("pages", None, "mlp"))
+    h_axes = ("pages", "mlp", None) if h_pool.ndim == len(pre) + 3 \
+        else ("pages", "heads", None, None)
+    return conv_pool, logical_constraint(h_pool, pre + h_axes)
+
+
 def paged_state_read(pool, page_table, lengths, page_size: int):
     """Per-slot incoming state: pool page holding the snapshot after
     ``lengths`` tokens (zeros for slots at position 0). pool: (n_pages,
@@ -306,6 +319,7 @@ def mamba1_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     new_conv, new_h = paged_pool_commit(
         conv_pool, h_pool, xp, hs_b, page_table=page_table, lengths=lengths,
         n_new=n_new, page_size=page_size)
+    new_conv, new_h = constrain_pools(new_conv, new_h)
     return out, new_conv, new_h
 
 
@@ -367,6 +381,7 @@ def mamba2_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     new_conv, new_h = paged_pool_commit(
         conv_pool, h_pool, xp, hs_b, page_table=page_table, lengths=lengths,
         n_new=n_new, page_size=page_size)
+    new_conv, new_h = constrain_pools(new_conv, new_h)
     return out, new_conv, new_h
 
 

@@ -434,7 +434,8 @@ def _paged_last_logits(params, z, n_new, cfg: ModelConfig):
     z = norm_apply(params["final_norm"], z, cfg)
     last = jnp.maximum(n_new - 1, 0)
     z_last = jnp.take_along_axis(z, last[:, None, None], axis=1)
-    return unembed(params["embed"], z_last, cfg)[:, 0]
+    logits = unembed(params["embed"], z_last, cfg)
+    return logical_constraint(logits, ("batch", "seq", "vocab"))[:, 0]
 
 
 def _paged_all_logits(params, z, cfg: ModelConfig):
@@ -442,7 +443,8 @@ def _paged_all_logits(params, z, cfg: ModelConfig):
     speculative-decode verifier needs per-drafted-token targets, not just
     the last one. Positions >= n_new carry garbage; callers mask them."""
     z = norm_apply(params["final_norm"], z, cfg)
-    return unembed(params["embed"], z, cfg)
+    logits = unembed(params["embed"], z, cfg)
+    return logical_constraint(logits, ("batch", "seq", "vocab"))
 
 
 def _paged_attn_forward(params, pages, tokens, lengths, n_new, page_table,
@@ -459,6 +461,7 @@ def _paged_attn_forward(params, pages, tokens, lengths, n_new, page_table,
     pos = lengths[:, None] + jnp.arange(S)[None, :]
     rope = rope_freqs(cfg.resolved_head_dim, cfg.rope_theta, pos)
     z = embed_tokens(params["embed"], tokens, cfg)
+    z = logical_constraint(z, ("batch", "seq", "embed"))
 
     def step(z, xs):
         p, gate, (pk, pv) = xs
@@ -523,6 +526,7 @@ def _ssm_paged_forward(params, pools, tokens, lengths, n_new, page_table,
         else ssm_mod.mamba2_paged_apply
     stacked, gates = _all_layers_stacked(params, cfg)
     z = embed_tokens(params["embed"], tokens, cfg)
+    z = logical_constraint(z, ("batch", "seq", "embed"))
 
     def step(z, xs):
         p, gate, (cpool, hpool) = xs
@@ -578,6 +582,7 @@ def ssm_paged_commit_step(pools, art, page_table, lengths, n_write,
             n_new=n_write, page_size=page_size)
 
     nc, nh = jax.vmap(one)(pools["conv"], pools["h"], art["xp"], art["hs"])
+    nc, nh = ssm_mod.constrain_pools(nc, nh, stacked=True)
     return {"conv": nc, "h": nh}
 
 
@@ -595,6 +600,7 @@ def _hybrid_paged_forward(params, state, tokens, lengths, n_new, page_table,
     pos = lengths[:, None] + jnp.arange(S)[None, :]
     rope = rope_freqs(cfg.resolved_head_dim, cfg.rope_theta, pos)
     z = embed_tokens(params["embed"], tokens, cfg)
+    z = logical_constraint(z, ("batch", "seq", "embed"))
     new_conv, new_h, new_k, new_v = [], [], [], []
     li = 0
     for s_i in range(n_seg + (1 if rem else 0)):

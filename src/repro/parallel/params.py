@@ -146,6 +146,28 @@ _CACHE_AXES = {
     ("index", 0): (),
 }
 
+# Paged-serving page pools (repro.serve.cache state trees). Same leaf
+# names as the dense caches but the batch/seq axes are replaced by one
+# global physical-page axis (axis 1 by the CacheBackend convention):
+#   KV pages        k/v   (L, n_pages, page_size, Hkv, hd)
+#   mamba1 snapshots conv (L, n_pages, K-1, d_inner), h (L, n_pages,
+#                    d_inner, d_state)
+#   mamba2 snapshots conv (L, n_pages, K-1, d_inner+2*d_state), h
+#                    (L, n_pages, n_heads, headdim, d_state)
+# The "pages" logical axis is the serving data-parallel dimension
+# (ShardingConfig.pages, 'data' under registry.serve_sharding): each
+# shard stores a slice of the physical pages while page ids stay global
+# — the host allocator/trie/scheduler never see the mesh. Head/inner
+# dims ride the same TP mapping as the weights so a TP shard keeps its
+# own heads' KV local.
+_PAGED_POOL_AXES = {
+    ("k", 5): (None, "pages", None, "kv_heads", "head_dim"),
+    ("v", 5): (None, "pages", None, "kv_heads", "head_dim"),
+    ("conv", 4): (None, "pages", None, "mlp"),
+    ("h", 4): (None, "pages", "mlp", None),
+    ("h", 5): (None, "pages", "heads", None, None),
+}
+
 
 def batch_specs(batch, rcfg: RunConfig, mesh: Mesh):
     cfg = rcfg.sharding
@@ -159,12 +181,25 @@ def batch_specs(batch, rcfg: RunConfig, mesh: Mesh):
 
 
 def cache_specs(cache, rcfg: RunConfig, mesh: Mesh):
+    """Pytree of NamedShardings for a dense decode cache (stacked over
+    layers, per-slot batch axis)."""
+    return _state_specs(cache, rcfg, mesh, _CACHE_AXES)
+
+
+def paged_state_specs(state, rcfg: RunConfig, mesh: Mesh):
+    """Pytree of NamedShardings for a CacheBackend page-pool state tree
+    (``_PAGED_POOL_AXES``): physical pages sharded over the serving DP
+    axis, head/inner dims over TP, with the usual divisibility checks —
+    a non-divisible mapping is dropped (replicated), never an error."""
+    return _state_specs(state, rcfg, mesh, _PAGED_POOL_AXES)
+
+
+def _state_specs(tree, rcfg: RunConfig, mesh: Mesh, table):
     cfg = rcfg.sharding
 
     def one(path, leaf):
         name = _path_names(path)[-1]
-        logical = _CACHE_AXES.get((name, leaf.ndim),
-                                  (None,) * leaf.ndim)
+        logical = table.get((name, leaf.ndim), (None,) * leaf.ndim)
         return NamedSharding(mesh, build_spec(logical, leaf.shape, cfg, mesh))
 
-    return jax.tree_util.tree_map_with_path(one, cache)
+    return jax.tree_util.tree_map_with_path(one, tree)

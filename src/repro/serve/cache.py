@@ -33,6 +33,17 @@ scheduler ever sees: snapshot pages cannot be read in the same jitted call
 that writes them (state reads happen at scan start), and a full-prompt
 prefix hit cannot rewind a snapshot to recompute just the final token —
 the scheduler drops such pages from the match instead of forking them.
+
+**Meshes.** ``make_backend(..., mesh=, sharding=)`` makes any backend
+SPMD: params are placed tensor-parallel over the mesh's 'model' axis
+(heads / d_ff / SSM inner dims, via :func:`repro.parallel.params.
+param_specs`) and the page pools are sharded over 'data' on the physical
+page axis (:func:`repro.parallel.params.paged_state_specs`), so
+``prefill`` / ``step`` / ``verify`` each stay ONE jitted call — GSPMD
+inserts the collectives. Everything host-side (scheduler, allocator,
+prefix trie, page tables, slot ids) is mesh-blind: page ids are global,
+only device arrays carry :class:`jax.sharding.NamedSharding`. See
+docs/sharding.md.
 """
 from __future__ import annotations
 
@@ -45,11 +56,14 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import RunConfig
+from repro.configs.registry import serve_sharding
 from repro.launch import steps as steps_mod
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models import transformer
 from repro.models.blocks import block_kind
+from repro.parallel import params as pshard
+from repro.parallel.sharding import _axis_size, resolve_axis
 from repro.serve.kv_pages import PageAllocator
 
 
@@ -102,14 +116,35 @@ def copy_state_page(state, src: int, dst: int):
 class CacheBackend:
     """Base backend: subclasses set ``snapshot_state`` and implement
     ``init_state`` (device pools) + ``_decode_fn`` (the family's paged
-    forward, signature of ``transformer.paged_decode_step``)."""
+    forward, signature of ``transformer.paged_decode_step``).
+
+    Args:
+        rcfg: the model's RunConfig; ``rcfg.sharding`` supplies the
+            logical->physical axis rules when a mesh is active.
+        params: model weights. Under a mesh they are re-placed
+            tensor-parallel (``param_specs``) at construction; callers
+            keep their replicated copy untouched.
+        mesh: optional ``jax.sharding.Mesh`` with ('data', 'model') axes.
+            None (default) runs single-device, exactly as before.
+        page_size: tokens per KV page / tokens between state snapshots.
+        sharding: optional ShardingConfig override for serving; defaults
+            to :func:`repro.configs.registry.serve_sharding` when a mesh
+            is given (TP weights + 'data'-sharded page pools) and to
+            ``rcfg.sharding`` otherwise.
+    """
 
     #: pages are state snapshots (SSM/hybrid): no intra-wave sharing, no
     #: tail forks on full-prompt prefix hits (see module docstring)
     snapshot_state = False
 
     def __init__(self, rcfg: RunConfig, params, mesh=None,
-                 page_size: int = 16):
+                 page_size: int = 16, sharding=None):
+        if mesh is not None:
+            rcfg = rcfg.replace(sharding=sharding or serve_sharding())
+            params = jax.device_put(
+                params, pshard.param_specs(params, rcfg, mesh))
+        elif sharding is not None:
+            rcfg = rcfg.replace(sharding=sharding)
         self.rcfg = rcfg
         self.params = params
         self.mesh = mesh
@@ -126,15 +161,43 @@ class CacheBackend:
         raise NotImplementedError
 
     def init_state(self, n_pages: int):
-        """Fresh device page pools only (no allocator) — probes and tests
-        use this for scratch state."""
+        """Fresh device page pools only (no allocator, replicated) —
+        probes and tests use this for scratch state. The engine-owned
+        pools go through :meth:`init`, which also mesh-shards them."""
         raise NotImplementedError
 
+    def shard_state(self, state):
+        """Place a page-pool state tree on the mesh (pages over 'data',
+        head/inner dims over 'model' — ``paged_state_specs``); identity
+        without a mesh. The paged step fns re-constrain their outputs to
+        the same logical axes, so the pools stay sharded across calls."""
+        if self.mesh is None:
+            return state
+        return jax.device_put(
+            state, pshard.paged_state_specs(state, self.rcfg, self.mesh))
+
+    def pool_pages(self, n_pages: int) -> int:
+        """Round a pool size up so the physical-page axis divides its
+        mesh sharding axis. An indivisible size would make the
+        divisibility check silently drop the 'pages' mapping and
+        replicate the pools — forfeiting the per-device pool-memory
+        scaling that is the point of sharding over serving DP. Identity
+        without a mesh (or with 'pages' unmapped); the extra pages are
+        ordinary allocatable capacity."""
+        if self.mesh is None:
+            return n_pages
+        ax = resolve_axis("pages", self.rcfg.sharding, self.mesh)
+        if ax is None:
+            return n_pages
+        size = _axis_size(self.mesh, ax)
+        return -(-n_pages // size) * size
+
     def init(self, max_batch: int, n_pages: int):
-        """Set up the host allocator and return the device state."""
+        """Set up the host allocator and return the (mesh-sharded)
+        device state. ``n_pages`` includes scratch page 0."""
         del max_batch                      # geometry is pool-global
         self.alloc = PageAllocator(n_pages)
-        return self.init_state(n_pages)
+        return self.shard_state(self.init_state(n_pages))
 
     def _apply(self, state, slots: SlotBatch, tokens):
         nxt, state = self._step_fn(
@@ -201,19 +264,29 @@ class CacheBackend:
 
     # -- host half: page ops ------------------------------------------------
     # No-ops (empty views, identity) would be valid for a non-paged
-    # backend; these delegate to the refcounted allocator.
+    # backend; these delegate to the refcounted allocator. Refcount
+    # lifecycle: alloc_view -> 1 per page, share -> +1, release -> -1
+    # (the LAST release returns the page to the pool; releasing at 0
+    # raises — exact double-free detection). Invariant the scheduler
+    # upholds: any page inside a slot's write range
+    # [lengths, lengths + n_new) is private (refcount 1) when the jitted
+    # call launches — fork() first if other readers remain.
 
     def alloc_view(self, n: int):
         """n private pages (refcount 1 each) or None when the pool can't
-        serve them right now."""
+        serve them right now (the caller waits for running requests to
+        free pages, or evicts prefix-trie leaves)."""
         return self.alloc.alloc(n)
 
     def share(self, pages):
-        """Map already-written pages read-only into another view."""
+        """Map already-written pages read-only into another view
+        (refcount +1 each; pages must be live — sharing a freed page
+        raises)."""
         self.alloc.share(pages)
 
     def release(self, pages):
-        """Drop one reference per page; last reference frees the page."""
+        """Drop one reference per page; the last reference frees the
+        page back to the pool."""
         self.alloc.free(pages)
 
     def fork(self, state, page: int):
@@ -303,17 +376,18 @@ class HybridBackend(CacheBackend):
 
 
 def make_backend(rcfg: RunConfig, params, mesh=None,
-                 page_size: int = 16) -> CacheBackend:
+                 page_size: int = 16, sharding=None) -> CacheBackend:
     """The only family dispatch in the serve stack: everything downstream
-    (scheduler, engine) speaks the CacheBackend protocol."""
+    (scheduler, engine) speaks the CacheBackend protocol. ``mesh`` /
+    ``sharding`` make the backend SPMD (see :class:`CacheBackend`)."""
     cfg = rcfg.model
     kind = block_kind(cfg)
     if cfg.family == "decoder" and kind in ("attn_mlp", "attn_moe"):
-        return PagedKVBackend(rcfg, params, mesh, page_size)
+        return PagedKVBackend(rcfg, params, mesh, page_size, sharding)
     if cfg.family == "ssm" and kind in ("mamba1", "mamba2"):
-        return SSMStateBackend(rcfg, params, mesh, page_size)
+        return SSMStateBackend(rcfg, params, mesh, page_size, sharding)
     if cfg.family == "hybrid":
-        return HybridBackend(rcfg, params, mesh, page_size)
+        return HybridBackend(rcfg, params, mesh, page_size, sharding)
     raise NotImplementedError(
         f"no CacheBackend for family={cfg.family!r} (kind={kind!r}): "
         "encoder models have no autoregressive decode, and encdec needs "

@@ -78,12 +78,34 @@ def default_detokenize(ids) -> str:
 
 
 class ServeEngine:
+    """User-facing serving API over the :class:`~repro.serve.scheduler.
+    Scheduler`: batch generation (:meth:`generate`), queued submission
+    and streaming (:meth:`submit`), prefix-cache persistence, merged
+    counters (:attr:`stats`), and the throughput/prefill probes the
+    benchmarks use. One engine = one model + one page pool + one
+    (optional) mesh."""
+
     def __init__(self, rcfg: RunConfig, params, mesh=None,
                  max_len: int = 0, max_batch: int = 8, page_size: int = 16,
-                 share_prefix: bool = True,
+                 share_prefix: bool = True, sharding=None,
                  detokenize: Optional[Callable] = None,
                  spec: Optional[SpecConfig] = None,
                  prefix_cache_path: Optional[str] = None):
+        """Args:
+            rcfg / params: model config and weights.
+            mesh: optional ('data', 'model') ``jax.sharding.Mesh`` —
+                serving goes SPMD: weights tensor-parallel over 'model',
+                page pools sharded over 'data', one jitted call per wave
+                either way (see docs/sharding.md). ``sharding``
+                optionally overrides the default
+                :func:`repro.configs.registry.serve_sharding` rules.
+            max_len / max_batch / page_size / share_prefix: forwarded to
+                the :class:`~repro.serve.scheduler.Scheduler`.
+            detokenize: ids -> text callable for streaming (defaults to
+                rendering each id as ``⟨id⟩``).
+            spec: SpecConfig enabling speculative decoding.
+            prefix_cache_path: restore a persisted prefix cache npz.
+        """
         self.rcfg = rcfg
         self.params = params
         self.mesh = mesh
@@ -91,12 +113,15 @@ class ServeEngine:
         self.detokenize = detokenize or default_detokenize
         self.scheduler = Scheduler(
             rcfg, params, max_batch=max_batch, page_size=page_size,
-            max_len=self.max_len, mesh=mesh, share_prefix=share_prefix,
-            spec=spec)
+            max_len=self.max_len, mesh=mesh, sharding=sharding,
+            share_prefix=share_prefix, spec=spec)
         self.backend = self.scheduler.backend
         # dense-cache decode fn: the serial-forward oracle and the
-        # apples-to-apples comparison probe (throughput_probe(paged=False))
-        self._decode = jax.jit(steps_mod.make_serve_fn(rcfg, mesh))
+        # apples-to-apples comparison probe (throughput_probe(paged=False));
+        # built from the backend's rcfg so both paths share one set of
+        # sharding rules under a mesh
+        self._decode = jax.jit(steps_mod.make_serve_fn(self.backend.rcfg,
+                                                       mesh))
         if prefix_cache_path and os.path.exists(prefix_cache_path):
             self.load_prefix_cache(prefix_cache_path)
 
@@ -128,7 +153,9 @@ class ServeEngine:
     def stats(self) -> Dict[str, float]:
         """One merged counter dict: scheduler counters (prefill/decode/
         spec-decode: draft_calls, verify_calls, tokens_drafted/accepted)
-        + prefix-trie counters (hit/miss/evictions)."""
+        + prefix-trie counters (hit/miss/evictions) + the mesh shape the
+        engine decodes on (``mesh_dp``/``mesh_tp``/``mesh_devices``, all
+        1 single-device)."""
         s = dict(self.scheduler.stats)
         prefix = self.scheduler.prefix
         s["trie_hit_pages"] = prefix.stats["hit_pages"] if prefix else 0
@@ -136,6 +163,11 @@ class ServeEngine:
             else 0
         s["trie_evictions"] = prefix.stats["evicted"] if prefix else 0
         s["accept_rate"] = self.scheduler.accept_rate()
+        shape = dict(self.mesh.shape) if self.mesh is not None else {}
+        s["mesh_dp"] = int(shape.get("data", 1))
+        s["mesh_tp"] = int(shape.get("model", 1))
+        s["mesh_devices"] = int(self.mesh.devices.size) \
+            if self.mesh is not None else 1
         return s
 
     # -- generation ---------------------------------------------------------
@@ -167,6 +199,10 @@ class ServeEngine:
         return r
 
     def generate(self, requests: List[Request]) -> List[Request]:
+        """Queue every request, drain the scheduler, and return the same
+        Request objects with ``output`` / ``ttft_s`` / ``latency_s``
+        filled in (order preserved). The whole batch is validated before
+        anything is queued, so a bad request can't orphan earlier ones."""
         self._validate(requests)
         sched = self.scheduler
         rids = [self._submit_one(r).rid for r in requests]
@@ -245,9 +281,11 @@ class ServeEngine:
 
     def _paged_probe(self, batch: int, steps: int) -> float:
         """Steady-state paged decode at full occupancy on a probe-local
-        scratch state (reuses the backend's compiled step)."""
+        scratch state (reuses the backend's compiled step; under a mesh
+        the scratch pools are placed like the engine's own)."""
         table = self._scratch_table(batch, steps + 1)
-        state = self.backend.init_state(1 + table.size)
+        state = self.backend.shard_state(self.backend.init_state(
+            self.backend.pool_pages(1 + table.size)))
         slots = SlotBatch.greedy(batch, table)
         tok = np.ones((batch, 1), np.int32)
         state, tok = self.backend.step(state, slots, tok)   # compile
@@ -273,7 +311,8 @@ class ServeEngine:
             batch, table, n_new=np.full((batch,), prompt_len, np.int32))
 
         def call():
-            state = self.backend.init_state(1 + table.size)
+            state = self.backend.shard_state(self.backend.init_state(
+                self.backend.pool_pages(1 + table.size)))
             return self.backend.prefill(state, slots, toks)
 
         out = call()

@@ -28,6 +28,13 @@ scheduler evicts least-recently-matched leaves.
 Page ``SCRATCH_PAGE`` (id 0) is never allocated: the jitted step routes
 writes from padded prompt positions and unoccupied slots there, which keeps
 every shape static regardless of occupancy.
+
+Everything in this module is host-side and **placement-blind**: page ids
+are global integers even when the device pools are mesh-sharded over the
+'data' axis (``CacheBackend.shard_state`` / docs/sharding.md) —
+refcounts, the trie, and npz persistence never see a mesh; the
+``PrefixCache.save``/``load`` device gathers/scatters go through jax and
+work on sharded pools unchanged.
 """
 from __future__ import annotations
 

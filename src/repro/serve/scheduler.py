@@ -61,6 +61,11 @@ from repro.serve.spec import CoarseDraft, SpecConfig
 
 @dataclasses.dataclass
 class ScheduledRequest:
+    """Scheduler-internal view of one request: prompt + sampling params
+    + the growing ``out`` token list (the streaming path watches it) +
+    submit/first-token/done timestamps. Produced by
+    :meth:`Scheduler.submit_request`; the engine converts finished ones
+    back into :class:`repro.serve.engine.Request` results."""
     rid: int
     prompt: np.ndarray               # (T,) int32
     max_new_tokens: int
@@ -96,21 +101,51 @@ def bucket_len(n: int, lo: int = 8) -> int:
 
 
 class Scheduler:
+    """Continuous-batching slot scheduler (see module docstring): admits
+    queued requests into ``max_batch`` decode slots, plans/maps pages
+    host-side, and drives the backend's jitted calls — one batched
+    prefill per admission wave, one decode (or draft+verify) call per
+    iteration, reaping finished slots in between. Family- and
+    mesh-blind: everything device-shaped lives behind ``self.backend``."""
+
     def __init__(self, rcfg: RunConfig, params, *, max_batch: int = 8,
                  page_size: int = 16, max_len: int = 0, n_pages: int = 0,
-                 mesh=None, share_prefix: bool = True,
+                 mesh=None, sharding=None, share_prefix: bool = True,
                  backend: Optional[CacheBackend] = None,
                  spec: Optional[SpecConfig] = None):
+        """Args:
+            rcfg / params: model config and weights (under a mesh the
+                backend re-places the weights tensor-parallel).
+            max_batch: in-flight decode slots (the static batch shape).
+            page_size: tokens per state page.
+            max_len: per-request prompt+output cap; defaults to
+                min(model max_seq_len, 4096).
+            n_pages: physical page-pool size incl. scratch page 0;
+                defaults to every slot holding a max_len sequence.
+            mesh / sharding: SPMD placement, forwarded to
+                :func:`repro.serve.cache.make_backend` — the scheduler
+                itself stays host-side and mesh-blind.
+            share_prefix: publish full prompt pages in the prefix trie.
+            backend: pre-built CacheBackend (tests); otherwise built via
+                ``make_backend``.
+            spec: SpecConfig to enable coarse-propagator speculative
+                decoding.
+        """
         self.rcfg, self.params = rcfg, params
         self.max_len = max_len or min(rcfg.model.max_seq_len, 4096)
         self.page_size = page_size
         self.max_batch = max_batch
         self.backend = backend if backend is not None else \
-            make_backend(rcfg, params, mesh=mesh, page_size=page_size)
+            make_backend(rcfg, params, mesh=mesh, page_size=page_size,
+                         sharding=sharding)
         assert self.backend.page_size == page_size
         self.pages_per_slot = pages_needed(self.max_len, page_size)
-        # default pool: every slot can hold a max_len sequence, + scratch
-        n_pages = n_pages or 1 + max_batch * self.pages_per_slot
+        # default pool: every slot can hold a max_len sequence, + scratch;
+        # under a mesh the size is rounded up so the page axis divides
+        # the 'pages' sharding axis (pool_pages — else it silently
+        # replicates)
+        n_pages = self.backend.pool_pages(
+            n_pages or 1 + max_batch * self.pages_per_slot)
         self.state = self.backend.init(max_batch, n_pages)
         self.alloc = self.backend.alloc
         self.prefix: Optional[PrefixCache] = \
@@ -118,8 +153,10 @@ class Scheduler:
         self._pending: Set[int] = set()   # pages this admit wave will write
         self.spec: Optional[CoarseDraft] = None
         if spec is not None:
+            # the draft derives its mesh from the backend, so a prebuilt
+            # mesh backend keeps draft and fine placement consistent
             self.spec = CoarseDraft(self.backend, spec, max_batch,
-                                    self.pages_per_slot, mesh=mesh)
+                                    self.pages_per_slot)
 
         self.page_table = np.full((max_batch, self.pages_per_slot),
                                   SCRATCH_PAGE, np.int32)
@@ -187,6 +224,7 @@ class Scheduler:
 
     @property
     def n_active(self) -> int:
+        """Occupied decode slots (in-flight requests, excluding queue)."""
         return sum(r is not None for r in self.slot_req)
 
     def _match_prefix(self, req: ScheduledRequest) -> List[int]:
@@ -517,6 +555,9 @@ class Scheduler:
             self.stats["tokens_drafted"], 1)
 
     def throughput(self) -> Dict[str, float]:
+        """Aggregate rates derived from the counters: prefill/decode
+        tokens per second of call wall-time, call counts, prompt tokens
+        reused via prefix sharing, and the spec-decode accept rate."""
         s = self.stats
         return {
             "prefill_tok_s": s["prefill_tokens"] / max(s["prefill_s"], 1e-9),

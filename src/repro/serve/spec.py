@@ -31,7 +31,13 @@ The draft's decode state is deliberately simple: a private per-slot
 linear page region (no allocator, no prefix trie, no COW) sized
 ``max_batch * pages_per_slot`` pages of the COARSE stack — about
 ``1/cf`` of one fine pool. Draft quality only moves the acceptance rate;
-correctness is carried entirely by verification.
+correctness is carried entirely by verification — the coarse grid is a
+good draft when the weights sit in the near-identity *trained regime*
+the paper's coarsening assumes (§2); on raw random init acceptance is
+tie-breaking luck. The benchmark's damped init reproducing that regime
+lives in ``benchmarks.bench_spec``: ``trained_regime(params, factor)``
+with the per-family ``TRAINED_REGIME_DAMP`` factors — not in this
+module, which never touches weight values.
 """
 from __future__ import annotations
 
@@ -72,16 +78,25 @@ class CoarseDraft:
     """
 
     def __init__(self, backend: CacheBackend, spec: SpecConfig,
-                 max_batch: int, pages_per_slot: int, mesh=None):
+                 max_batch: int, pages_per_slot: int):
         self.spec = spec
         self.backend = backend
         self.max_batch = max_batch
+        # the draft always serves on the fine backend's mesh (a separate
+        # mesh could silently disagree with where shard_state puts the
+        # draft pools)
+        mesh = backend.mesh
         params_d, rcfg_d, n_coarse = backend.coarse_draft(spec.cf)
         self.params = params_d
         self.rcfg = rcfg_d
         self.n_coarse = n_coarse
-        n_pages = 1 + max_batch * pages_per_slot
-        self.state = backend.init_draft_state(rcfg_d, n_coarse, n_pages)
+        n_pages = backend.pool_pages(1 + max_batch * pages_per_slot)
+        # the draft's pools ride the same mesh placement as the fine
+        # pools (pages over serving DP, inner dims over TP); the slots'
+        # linear page regions only use ids 1..max_batch*pages_per_slot,
+        # any rounding surplus just sits unaddressed
+        self.state = backend.shard_state(
+            backend.init_draft_state(rcfg_d, n_coarse, n_pages))
         self.table = np.asarray(
             1 + np.arange(max_batch * pages_per_slot).reshape(
                 max_batch, pages_per_slot), np.int32)
@@ -103,6 +118,8 @@ class CoarseDraft:
                         np.zeros((max_batch,), np.int32))
 
     def reset_slot(self, slot: int) -> None:
+        """Forget a reaped slot's committed draft length (its linear
+        page region is reused in-place by the next admission)."""
         self.lengths[slot] = 0
 
     def prefill(self, tokens: np.ndarray, n_new: np.ndarray) -> None:

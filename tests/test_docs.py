@@ -1,0 +1,99 @@
+"""Doc-drift guards (CI doc-lint step — no jax import, runs anywhere).
+
+1. Every intra-repo markdown link in README.md / ROADMAP.md / docs/*
+   resolves to a real file, and a ``file.md#fragment`` link names a
+   heading that actually exists in the target.
+2. Every CacheBackend method named in docs/cache-backends.md (the
+   protocol tables and ``CacheBackend.x`` references) exists on the
+   class in src/repro/serve/cache.py — the protocol doc cannot silently
+   drift from the code. Checked with ``ast`` so the lint job needs no
+   model dependencies.
+"""
+import ast
+import os
+import re
+
+import pytest
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+
+DOC_FILES = ["README.md", "ROADMAP.md"] + sorted(
+    os.path.join("docs", f) for f in os.listdir(os.path.join(REPO, "docs"))
+    if f.endswith(".md"))
+
+_LINK = re.compile(r"\[[^\]]*\]\(([^)\s]+)\)")
+
+
+def _headings(path):
+    """GitHub-style anchor slugs for every heading in a markdown file
+    (lines inside ``` fences are code, not headings)."""
+    slugs = set()
+    fenced = False
+    for line in open(path, encoding="utf-8"):
+        if line.lstrip().startswith("```"):
+            fenced = not fenced
+            continue
+        m = None if fenced else re.match(r"#+\s+(.*)", line)
+        if m:
+            text = re.sub(r"[`*]", "", m.group(1).strip()).lower()
+            slugs.add(re.sub(r"[^\w\- ]", "", text).replace(" ", "-"))
+    return slugs
+
+
+@pytest.mark.parametrize("doc", DOC_FILES)
+def test_intra_repo_markdown_links_resolve(doc):
+    path = os.path.join(REPO, doc)
+    body = open(path, encoding="utf-8").read()
+    bad = []
+    for target in _LINK.findall(body):
+        if target.startswith(("http://", "https://", "mailto:")):
+            continue
+        file_part, _, frag = target.partition("#")
+        dest = os.path.normpath(os.path.join(
+            os.path.dirname(path), file_part)) if file_part else path
+        if not dest.startswith(REPO + os.sep):
+            continue      # GitHub-site-relative (e.g. the CI badge)
+        if not os.path.exists(dest):
+            bad.append(f"{target}: {file_part} does not exist")
+        elif frag and dest.endswith(".md") \
+                and frag not in _headings(dest):
+            bad.append(f"{target}: no heading #{frag} in {file_part}")
+    assert not bad, f"{doc}: broken links: {bad}"
+
+
+def _cache_backend_names():
+    """Method names of CacheBackend + module-level callables in
+    serve/cache.py, via ast (no repro import needed)."""
+    src = os.path.join(REPO, "src", "repro", "serve", "cache.py")
+    tree = ast.parse(open(src, encoding="utf-8").read())
+    methods, module_fns = set(), set()
+    for node in tree.body:
+        if isinstance(node, ast.FunctionDef):
+            module_fns.add(node.name)
+        if isinstance(node, ast.ClassDef) and node.name == "CacheBackend":
+            methods = {n.name for n in node.body
+                       if isinstance(n, ast.FunctionDef)}
+    assert methods, "CacheBackend class not found in serve/cache.py"
+    return methods, module_fns
+
+
+def test_cache_backends_doc_methods_exist():
+    """The protocol tables (| `name(...)` | rows) and dotted
+    ``CacheBackend.name`` references in docs/cache-backends.md must all
+    name real CacheBackend methods."""
+    methods, module_fns = _cache_backend_names()
+    body = open(os.path.join(REPO, "docs", "cache-backends.md"),
+                encoding="utf-8").read()
+    named = set()
+    for line in body.splitlines():
+        m = re.match(r"\|\s*`([A-Za-z_]\w*)\s*\(", line)
+        if m:
+            named.add(m.group(1))
+    named |= set(re.findall(r"CacheBackend\.([A-Za-z_]\w*)", body))
+    assert named >= {"init", "prefill", "step", "verify", "fork"}, \
+        f"protocol tables look truncated: only found {sorted(named)}"
+    missing = sorted(n for n in named
+                     if n not in methods and n not in module_fns)
+    assert not missing, (
+        f"docs/cache-backends.md names CacheBackend methods that do not "
+        f"exist: {missing}")
