@@ -12,6 +12,13 @@ Reports, for a small decoder LM on this host:
                           recurrent state served from snapshot pages
                           through the same CacheBackend protocol
   serve/decode_hybrid_paged  same for the hybrid (zamba2-style) backend
+  serve/decode_{attn,ssm,hybrid}_fused  fused paged-decode kernels
+                          (page-walking attention / compact-commit SSM /
+                          sort-free sampling, ``ServeEngine(fused=True)``,
+                          the default) vs the gathered dense-view engine
+                          on production-width page tables — derived
+                          carries ``gathered_tok_s`` and ``speedup``,
+                          and the run fails if fused stops winning
   serve/decode_mesh_tp2   steady-state paged decode on a 2-device host
                           mesh (dp1xtp2: weights TP over 'model', page
                           pools over 'data') — run in a subprocess with
@@ -172,13 +179,42 @@ def run(csv: CSV):
     # -- SSM + hybrid through the same CacheBackend protocol ---------------
     # (recurrent-state snapshot pages; previously these families decoded
     # through a greedy-only dense fallback with no paging at all)
-    for row, fam_rcfg in (("serve/decode_ssm_paged", ssm_rcfg()),
-                          ("serve/decode_hybrid_paged", hybrid_rcfg())):
+    fam_weights = {"attn": (rcfg, params)}
+    for fam, fam_rcfg in (("ssm", ssm_rcfg()), ("hybrid", hybrid_rcfg())):
         fparams = transformer.init_model(jax.random.PRNGKey(1), fam_rcfg)
+        fam_weights[fam] = (fam_rcfg, fparams)
         feng = ServeEngine(fam_rcfg, fparams, max_len=MAX_LEN,
                            max_batch=BATCH, page_size=16)
         tps_fam = feng.throughput_probe(BATCH, steps=16)
-        csv.add(row, BATCH / tps_fam * 1e6, f"tok_s={tps_fam:.0f}")
+        csv.add(f"serve/decode_{fam}_paged", BATCH / tps_fam * 1e6,
+                f"tok_s={tps_fam:.0f}")
+
+    # -- fused paged-decode kernels vs the gathered dense-view path --------
+    # Same weights, production-width page tables (a full MAX_LEN of
+    # capacity per slot, as a real admission plans), decode mid-sequence:
+    # the fused engine walks only the live power-of-two page bucket and
+    # commits the compact snapshot window, while the gathered engine
+    # re-materializes every page column per step. Greedy conformance
+    # (bitwise) lives in tests/test_kernels_paged.py; this row gates the
+    # perf claim — a fused row that stops beating gathered fails the run
+    # (and check_regression fails CI on the emitted speedup field).
+    table_pages = MAX_LEN // 16
+    for fam in ("attn", "ssm", "hybrid"):
+        f_rcfg, f_params = fam_weights[fam]
+        kw = dict(max_len=MAX_LEN, max_batch=BATCH, page_size=16)
+        f_eng = ServeEngine(f_rcfg, f_params, **kw)
+        g_eng = ServeEngine(f_rcfg, f_params, fused=False, **kw)
+        tok_f = f_eng.throughput_probe(BATCH, steps=16,
+                                       table_pages=table_pages)
+        tok_g = g_eng.throughput_probe(BATCH, steps=16,
+                                       table_pages=table_pages)
+        csv.add(f"serve/decode_{fam}_fused", BATCH / tok_f * 1e6,
+                f"tok_s={tok_f:.0f};gathered_tok_s={tok_g:.0f};"
+                f"speedup={tok_f / tok_g:.2f}")
+        if tok_f <= tok_g:
+            raise RuntimeError(
+                f"fused {fam} decode is not faster than the gathered "
+                f"path: {tok_f:.0f} vs {tok_g:.0f} tok/s")
 
     # -- mesh-sharded decode (dp1xtp2 host mesh, subprocess) ---------------
     _mesh_row(csv, dp=1, tp=2)

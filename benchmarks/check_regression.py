@@ -14,7 +14,9 @@ Also fails if any ``_meta/*`` entry in the current run reports an ERROR
 shared-prefix rows are present — if prefix sharing stopped reducing work:
 ``serve/prefix_shared`` must compute strictly fewer prefill tokens and
 allocate strictly fewer pages than ``serve/prefix_baseline`` (these are
-exact counters, so no tolerance applies).
+exact counters, so no tolerance applies). The fused paged-decode rows
+(``serve/decode_*_fused``) likewise carry their gathered-path control
+in-row and must report speedup > 1.
 
 Rows in ``REQUIRED_ROWS`` (the CacheBackend coverage rows: paged SSM +
 hybrid decode, the shared-prefix counters, the per-family speculative-
@@ -42,28 +44,47 @@ REQUIRED_ROWS = (
     "serve/prefix_shared",
     "serve/prefix_baseline",
     # speculative decoding: one row per backend family (tokens/s +
-    # acceptance rate; bench_spec itself raises if spec fails to beat
-    # plain decode, which surfaces here as a _meta ERROR)
+    # acceptance rate; bench_spec itself raises on greedy divergence or
+    # an acceptance-rate drop, which surfaces here as a _meta ERROR —
+    # check_spec_accept below re-asserts the floor from the counters)
     "serve/spec_attn",
     "serve/spec_ssm",
     "serve/spec_hybrid",
+    # fused paged-decode kernels (PR-6): one row per family, each
+    # carrying its own gathered-path control in the derived counters.
+    # A missing row means the fused path silently stopped being
+    # exercised; a speedup <= 1 means it stopped paying for itself
+    # (check_fused_speedup below, and bench_serve raises in-run too).
+    "serve/decode_attn_fused",
+    "serve/decode_ssm_fused",
+    "serve/decode_hybrid_fused",
 )
 
 
-def check_required_rows(cur: dict) -> list:
+def check_required_rows(cur: dict, prefixes=None) -> list:
+    """``prefixes=None`` demands every REQUIRED_ROWS entry (the full
+    bench run); a prefix tuple scopes the demand to rows a partial
+    ``--only`` run can produce (e.g. the kernel-tier CI lane runs no
+    spec benchmarks, so serve/spec_* are not required there)."""
+    rows = REQUIRED_ROWS if prefixes is None else \
+        tuple(r for r in REQUIRED_ROWS if r.startswith(prefixes))
     return [f"required row {name} missing from current run"
-            for name in REQUIRED_ROWS if name not in cur]
+            for name in rows if name not in cur]
 
 
 def _counters(rec) -> dict:
-    """Parse a ``k=v;k=v`` derived field into int counters."""
+    """Parse a ``k=v;k=v`` derived field into numeric counters (int when
+    exact, float otherwise — the fused-speedup rows carry ratios)."""
     out = {}
     for kv in str(rec["derived"]).split(";"):
         k, _, v = kv.partition("=")
         try:
             out[k] = int(v)
         except ValueError:
-            pass
+            try:
+                out[k] = float(v)
+            except ValueError:
+                pass
     return out
 
 
@@ -86,6 +107,59 @@ def check_prefix_sharing(cur: dict) -> list:
     return failures
 
 
+def check_spec_accept(cur: dict, floor: float = 0.8) -> list:
+    """The speculative rows must keep their drafted-token acceptance rate:
+    it is deterministic for the bench's fixed greedy workload, so a drop
+    means the coarse-propagator draft or the verify/rollback contract
+    broke. (Spec tok/s is tracked by the ordinary timing gate; spec is
+    NOT required to beat fused plain decode — see bench_spec's module
+    docstring for why that comparison inverted at bench scale.)"""
+    failures = []
+    for fam in ("attn", "ssm", "hybrid"):
+        name = f"serve/spec_{fam}"
+        rec = cur.get(name)
+        if rec is None:
+            continue  # absence is check_required_rows' problem
+        accept = _counters(rec).get("accept")
+        if accept is None:
+            failures.append(f"{name}: derived field lacks accept= counter")
+        elif accept < floor:
+            failures.append(
+                f"{name}: acceptance rate {accept} below floor {floor}")
+        else:
+            print(f"ok    {name}: acceptance rate {accept} >= {floor}")
+    return failures
+
+
+def check_fused_speedup(cur: dict) -> list:
+    """The fused paged-decode rows must beat their gathered control: each
+    ``serve/decode_*_fused`` row measures both paths in the same process
+    and records ``speedup`` (fused tok/s over gathered tok/s). No
+    tolerance — a fused path that fails to win has lost its reason to
+    exist, and bench_serve itself raises in-run (surfacing as a _meta
+    ERROR) so this is a second line of defence against stale JSON."""
+    failures = []
+    for fam in ("attn", "ssm", "hybrid"):
+        name = f"serve/decode_{fam}_fused"
+        rec = cur.get(name)
+        if rec is None:
+            continue  # absence is check_required_rows' problem
+        c = _counters(rec)
+        speedup = c.get("speedup")
+        if speedup is None:
+            failures.append(f"{name}: derived field lacks speedup= counter")
+        elif not speedup > 1.0:
+            failures.append(
+                f"{name}: fused path not faster than gathered "
+                f"(speedup={speedup}, fused={c.get('tok_s')} tok/s vs "
+                f"gathered={c.get('gathered_tok_s')} tok/s)")
+        else:
+            print(f"ok    {name}: fused beats gathered "
+                  f"({speedup:.2f}x, {c.get('tok_s')} vs "
+                  f"{c.get('gathered_tok_s')} tok/s)")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -94,6 +168,9 @@ def main(argv=None) -> int:
                     help="fail when us_per_call > tol * baseline")
     ap.add_argument("--prefixes", default="kernels/,serve/",
                     help="comma-separated name prefixes gated on timing")
+    ap.add_argument("--required", choices=("all", "gated"), default="all",
+                    help="'gated' limits REQUIRED_ROWS to the gated "
+                         "prefixes (for partial --only bench runs)")
     args = ap.parse_args(argv)
 
     with open(args.current) as f:
@@ -109,7 +186,10 @@ def main(argv=None) -> int:
                 "ERROR"):
             failures.append(f"{name}: crashed ({rec['derived']})")
     failures += check_prefix_sharing(cur)
-    failures += check_required_rows(cur)
+    failures += check_fused_speedup(cur)
+    failures += check_spec_accept(cur)
+    failures += check_required_rows(
+        cur, prefixes if args.required == "gated" else None)
     for name, brec in sorted(base.items()):
         if not name.startswith(prefixes):
             continue

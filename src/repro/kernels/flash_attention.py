@@ -63,8 +63,17 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 def flash_attention_bhsd(q, k, v, *, causal: bool = True,
                          q_block: int = 128, k_block: int = 128,
-                         interpret: bool = False):
-    """q: (B, H, Sq, hd); k/v: (B, Hkv, Sk, hd). Returns (B, H, Sq, hd)."""
+                         interpret=None):
+    """q: (B, H, Sq, hd); k/v: (B, Hkv, Sk, hd). Returns (B, H, Sq, hd).
+
+    ``interpret=None`` defers to the single mode owner in
+    :mod:`repro.kernels.ops` (interpret on CPU, compiled on TPU) — an
+    unqualified call can no longer hand XLA:CPU an unloweable Mosaic
+    kernel just because the call site forgot the flag.
+    """
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret_default()
     B, H, Sq, hd = q.shape
     Hkv, Sk = k.shape[1], k.shape[2]
     g = H // Hkv

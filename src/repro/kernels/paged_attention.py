@@ -1,0 +1,173 @@
+"""Flash-decode paged-attention Pallas kernel (TPU target).
+
+Decode-side twin of :mod:`repro.kernels.flash_attention`: instead of a
+contiguous (B, H, Sk, hd) K/V tensor, keys live in the serve engine's page
+pool (n_pages, page_size, Hkv, hd) and each batch slot owns a row of the
+page table. The kernel walks that row **in-kernel** — the page table and
+per-slot lengths are scalar-prefetch operands, so the BlockSpec index maps
+resolve logical page p of slot b to physical page ``page_table[b, p]``
+while the grid runs. One grid block per (slot, head, page); the online-
+softmax state (m, l, acc) for the S query rows lives in VMEM scratch
+across the sequential page dimension, exactly like the prefill kernel's
+k-block dimension. GQA stays an index-map concern: query head h reads KV
+head ``h // group``.
+
+Dead pages (beyond ``lengths[b] + S - 1``) are skipped with ``pl.when`` —
+the page walk does the work the gathered-dense-view path spends on a
+(B, P*page_size, Hkv, hd) gather plus a full-width masked softmax.
+
+``paged_attention_ref`` is the jnp oracle AND the CPU production path
+(:mod:`repro.kernels.ops` mode="ref"): it reproduces the gathered-view
+math bit-for-bit — same gather construction, same einsum contractions,
+same mask constant — so fused serving at temperature 0 emits exactly the
+tokens the gathered path emits. Its speed lever is the caller slicing the
+page table to the live page count (``repro.serve.cache`` buckets it to a
+power of two) rather than gathering the table's full width.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _paged_flash_kernel(pt_ref, len_ref, q_ref, k_ref, v_ref, o_ref,
+                        m_ref, l_ref, acc_ref, *, page_size: int,
+                        n_pages: int, s_q: int, scale: float):
+    b = pl.program_id(0)
+    p = pl.program_id(2)          # logical page index (sequential)
+
+    @pl.when(p == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # a page is live iff its first key position can be attended by the
+    # last query row (absolute position lengths[b] + s_q - 1)
+    live = (p * page_size) <= (len_ref[b] + s_q - 1)
+
+    @pl.when(live)
+    def _page():
+        q = q_ref[0, 0].astype(jnp.float32) * scale          # (s_q, hd)
+        k = k_ref[0, :, 0, :].astype(jnp.float32)            # (ps, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+        qpos = len_ref[b] + jax.lax.broadcasted_iota(
+            jnp.int32, (s_q, page_size), 0)
+        kpos = p * page_size + jax.lax.broadcasted_iota(
+            jnp.int32, (s_q, page_size), 1)
+        # one mask covers causality AND staleness: key slots past a
+        # query's absolute position are either future tokens or garbage
+        # beyond the slot's written length
+        s = jnp.where(kpos <= qpos, s, NEG_INF)
+        m_prev = m_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=1))
+        pexp = jnp.exp(s - m_new[:, None])
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + jnp.sum(pexp, axis=1)
+        m_ref[...] = m_new
+        v = v_ref[0, :, 0, :].astype(jnp.float32)
+        acc_ref[...] = acc_ref[...] * corr[:, None] + jax.lax.dot_general(
+            pexp, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+
+    @pl.when(p == n_pages - 1)
+    def _finish():
+        o_ref[0, 0, ...] = (acc_ref[...]
+                            / jnp.maximum(l_ref[...][:, None], 1e-30)
+                            ).astype(o_ref.dtype)
+
+
+def paged_flash_attention_bhsd(q, pk, pv, page_table, lengths, *,
+                               interpret: bool = False):
+    """q: (B, H, S, hd); pk/pv: (n_pages, page_size, Hkv, hd);
+    page_table: (B, P) int32; lengths: (B,) int32 — q row i of slot b sits
+    at absolute position ``lengths[b] + i``. Returns (B, H, S, hd).
+
+    S is tiny (1 in steady-state decode, k+1 in speculative verify, the
+    prompt bucket in chunked prefill); the page walk supplies the K
+    extent, so P — not S — carries the flash tiling.
+    """
+    B, H, S, hd = q.shape
+    Hkv, page_size = pk.shape[2], pk.shape[1]
+    P = page_table.shape[1]
+    g = H // Hkv
+    scale = 1.0 / math.sqrt(hd)
+
+    kernel = functools.partial(_paged_flash_kernel, page_size=page_size,
+                               n_pages=P, s_q=S, scale=scale)
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B, H, P),
+        in_specs=[
+            pl.BlockSpec((1, 1, S, hd),
+                         lambda b, h, p, pt, ln: (b, h, 0, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, p, pt, ln: (pt[b, p], 0, h // g, 0)),
+            pl.BlockSpec((1, page_size, 1, hd),
+                         lambda b, h, p, pt, ln: (pt[b, p], 0, h // g, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, S, hd),
+                               lambda b, h, p, pt, ln: (b, h, 0, 0)),
+        scratch_shapes=[
+            pltpu.VMEM((S,), jnp.float32),        # m
+            pltpu.VMEM((S,), jnp.float32),        # l
+            pltpu.VMEM((S, hd), jnp.float32),     # acc
+        ],
+    )
+    return pl.pallas_call(
+        kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, H, S, hd), q.dtype),
+        interpret=interpret,
+    )(page_table.astype(jnp.int32), lengths.astype(jnp.int32), q, pk, pv)
+
+
+def _dot_attention_paged(q, kd, vd, lengths, *, scale=None):
+    """Dense GQA attention with per-slot causal offsets — a verbatim twin
+    of ``repro.models.attention.dot_attention(..., q_offset=lengths)``
+    (same contractions, same mask constant, same dtype casts) so the ref
+    path stays bitwise-identical to the gathered-view model path. Kept
+    here rather than imported: kernels/ must not depend on models/."""
+    B, Sq, H, hd = q.shape
+    Hkv = kd.shape[2]
+    g = H // Hkv
+    scale = scale if scale is not None else hd ** -0.5
+    qg = q.reshape(B, Sq, Hkv, g, hd)
+    logits = jnp.einsum("bqhgk,bshk->bhgqs", qg.astype(jnp.float32),
+                        kd.astype(jnp.float32)) * scale
+    Sk = kd.shape[1]
+    qoff = jnp.asarray(lengths)
+    qpos = qoff[..., None] + jnp.arange(Sq)
+    kpos = jnp.arange(Sk)
+    mask = qpos[..., :, None] >= kpos
+    mask = mask[:, None, None] if mask.ndim == 3 else mask[None, None, None]
+    logits = jnp.where(mask, logits, -1e30)
+    probs = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhgqs,bshk->bqhgk", probs.astype(vd.dtype), vd)
+    return out.reshape(B, Sq, H, hd)
+
+
+def paged_attention_ref(q, pk, pv, page_table, lengths):
+    """jnp oracle in model layout — q: (B, S, H, hd); pk/pv page pools.
+
+    This IS the gathered-view computation over however many table columns
+    the caller passes: slicing the table to the live-page bucket is what
+    makes it the fast CPU path, and because masked key slots contribute
+    exactly-zero probability mass, truncating dead pages leaves the
+    surviving logits (and the temperature-0 argmax) unchanged.
+    """
+    B = q.shape[0]
+    n_pages, page_size = pk.shape[0], pk.shape[1]
+    pk_flat = pk.reshape(n_pages * page_size, *pk.shape[2:])
+    pv_flat = pv.reshape(n_pages * page_size, *pv.shape[2:])
+    gather = (page_table[:, :, None] * page_size
+              + jnp.arange(page_size)[None, None, :]).reshape(B, -1)
+    return _dot_attention_paged(q, pk_flat[gather], pv_flat[gather], lengths)

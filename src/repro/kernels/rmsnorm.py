@@ -21,8 +21,12 @@ def _rmsnorm_kernel(x_ref, w_ref, o_ref, *, eps: float):
 
 
 def rmsnorm_2d(x, w, *, eps: float = 1e-6, row_block: int = 256,
-               interpret: bool = False):
-    """x: (R, D) rows; w: (D,)."""
+               interpret=None):
+    """x: (R, D) rows; w: (D,). ``interpret=None`` defers to the mode
+    owner in :mod:`repro.kernels.ops` (interpret on CPU)."""
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret_default()
     R, D = x.shape
     row_block = min(row_block, R)
     assert R % row_block == 0

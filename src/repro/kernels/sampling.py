@@ -1,0 +1,144 @@
+"""Sort-free top-k/top-p logit masking (fused sampling epilogue).
+
+``repro.launch.steps.apply_top_k_top_p`` drives both filters off one full
+descending argsort per row — an O(V log V) sort plus three gather/scatter
+round-trips over the vocab axis, all to find two scalar thresholds. This
+module computes those thresholds directly by binary search over the
+*sortable-integer* encoding of float32:
+
+    u = bitcast(x, uint32);  u ^= (0x80000000 | (0xFFFFFFFF if x < 0))
+
+is strictly monotone in x for finite floats, so unsigned comparisons on
+``u`` order logits without sorting. 32 fixed iterations then find
+
+  * tau_k — the k-th largest logit (largest threshold keeping >= k values),
+  * tau_p — the smallest logit whose strictly-greater survivor mass is
+    still < p (the nucleus boundary; the argmax satisfies it vacuously),
+
+and the row mask is just ``u >= max(tau_k, tau_p)``: O(V) streaming
+passes, no sort, no scatter. Gumbel noise stays *outside* the kernel —
+the sampler's key schedule (``fold_in(PRNGKey(seed), counter)``) is
+request-reproducibility contract surface and must not change.
+
+Tie semantics caveat (distinct logits are unaffected): threshold masking
+keeps *every* logit tied with the k-th value, where the sort path keeps
+only the ties that argsort happened to rank first. Equal logits do not
+occur with real model outputs, matching the documented contract of
+``apply_top_k_top_p``. The p-boundary comparison accumulates survivor
+mass in vocab order rather than sorted order, so a row whose cumulative
+mass hits p within one float ulp of the boundary could flip one
+borderline token — deterministic for a given input, and temperature-0
+slots never enter this path at all.
+
+``topk_topp_mask_ref`` (vectorized jnp, no sort) is the oracle and the
+CPU production path; ``topk_topp_mask_pallas`` runs one grid row per
+batch slot for TPU/interpret.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+_MASKED = -1e30
+_SEARCH_BITS = 32
+
+
+def _sortable_u32(x):
+    """Monotone uint32 encoding of float32 (finite values)."""
+    u = jax.lax.bitcast_convert_type(x.astype(jnp.float32), jnp.uint32)
+    flip = jnp.where(u >> jnp.uint32(31) != 0,
+                     jnp.uint32(0xFFFFFFFF), jnp.uint32(0x80000000))
+    return u ^ flip
+
+
+def _search_kth(u, k_eff):
+    """Largest threshold tau with count(u >= tau) >= k_eff, per row.
+    u: (B, V) uint32; k_eff: (B,) int32 in [1, V]."""
+    B = u.shape[0]
+
+    def step(_, lh):
+        lo, hi = lh
+        # ceil((hi-lo)/2) without the uint32 overflow of (hi-lo+1) at the
+        # full 2^32 initial range
+        span = hi - lo
+        mid = lo + (span >> jnp.uint32(1)) + (span & jnp.uint32(1))
+        cnt = jnp.sum((u >= mid[:, None]).astype(jnp.int32), axis=-1)
+        ok = cnt >= k_eff
+        return (jnp.where(ok, mid, lo),
+                jnp.where(ok, hi, mid - jnp.uint32(1)))
+
+    lo = jnp.zeros((B,), jnp.uint32)
+    hi = jnp.full((B,), 0xFFFFFFFF, jnp.uint32)
+    lo, _ = jax.lax.fori_loop(0, _SEARCH_BITS, step, (lo, hi))
+    return lo
+
+
+def _search_nucleus(u, e, p_z):
+    """Smallest threshold tau with mass(u > tau) < p_z, per row.
+    e: (B, V) unnormalized survivor weights; p_z: (B,) = p * sum(e)."""
+    B = u.shape[0]
+
+    def step(_, lh):
+        lo, hi = lh
+        mid = lo + ((hi - lo) >> jnp.uint32(1))
+        mass = jnp.sum(jnp.where(u > mid[:, None], e, 0.0), axis=-1)
+        ok = mass < p_z
+        return (jnp.where(ok, lo, mid + jnp.uint32(1)),
+                jnp.where(ok, mid, hi))
+
+    lo = jnp.zeros((B,), jnp.uint32)
+    hi = jnp.full((B,), 0xFFFFFFFF, jnp.uint32)
+    _, hi = jax.lax.fori_loop(0, _SEARCH_BITS, step, (lo, hi))
+    return hi
+
+
+def _mask_rows(lf, top_ks, top_ps):
+    """Shared mask math for ref and kernel paths. lf: (B, V) float32."""
+    V = lf.shape[-1]
+    u = _sortable_u32(lf)
+    k_eff = jnp.clip(jnp.where(top_ks <= 0, V, top_ks), 1, V)
+    tau_k = _search_kth(u, k_eff)
+    keep_k = u >= tau_k[:, None]
+    masked_k = jnp.where(keep_k, lf, _MASKED)
+    m = jnp.max(masked_k, axis=-1, keepdims=True)
+    e = jnp.exp(masked_k - m)                 # exact 0 for masked entries
+    p_z = top_ps.astype(jnp.float32) * jnp.sum(e, axis=-1)
+    tau_p = _search_nucleus(u, e, p_z)
+    keep = keep_k & (u >= tau_p[:, None])
+    return jnp.where(keep, lf, _MASKED)
+
+
+def topk_topp_mask_ref(logits, top_ks, top_ps):
+    """Mask all but each row's top-k/top-p survivors to ``_MASKED``.
+    logits: (B, V); top_ks: (B,) int32 (<= 0 disables); top_ps: (B,)
+    float in (0, 1]. Survivor logits pass through bit-unchanged."""
+    return _mask_rows(logits.astype(jnp.float32), top_ks, top_ps)
+
+
+def _sampling_kernel(ks_ref, ps_ref, x_ref, o_ref):
+    b = pl.program_id(0)
+    lf = x_ref[...].astype(jnp.float32)                        # (1, V)
+    o_ref[...] = _mask_rows(lf, ks_ref[b][None], ps_ref[b][None])
+
+
+def topk_topp_mask_pallas(logits, top_ks, top_ps, *,
+                          interpret: bool = False):
+    """Pallas twin of :func:`topk_topp_mask_ref`: one grid row per slot,
+    the whole (1, V) logit row resident in VMEM, both threshold searches
+    and the final mask fused into a single pass with no HBM sort."""
+    B, V = logits.shape
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=2,
+        grid=(B,),
+        in_specs=[pl.BlockSpec((1, V), lambda b, ks, ps: (b, 0))],
+        out_specs=pl.BlockSpec((1, V), lambda b, ks, ps: (b, 0)),
+    )
+    return pl.pallas_call(
+        _sampling_kernel,
+        grid_spec=grid_spec,
+        out_shape=jax.ShapeDtypeStruct((B, V), jnp.float32),
+        interpret=interpret,
+    )(top_ks.astype(jnp.int32), top_ps.astype(jnp.float32),
+      logits.astype(jnp.float32))

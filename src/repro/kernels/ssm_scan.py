@@ -47,9 +47,13 @@ def _ssm_kernel(dt_ref, x_ref, A_ref, B_ref, C_ref, D_ref, o_ref, h_ref, *,
     h_ref[...] = h
 
 
-def ssm_scan(dt, x, A, B, C, D, *, chunk: int = 64, interpret: bool = False):
+def ssm_scan(dt, x, A, B, C, D, *, chunk: int = 64, interpret=None):
     """dt/x: (Bb, S, di); A: (di, ds); B/C: (Bb, S, ds); D: (di,).
-    Returns y (Bb, S, di)."""
+    Returns y (Bb, S, di). ``interpret=None`` defers to the mode owner in
+    :mod:`repro.kernels.ops` (interpret on CPU)."""
+    if interpret is None:
+        from repro.kernels import ops
+        interpret = ops._interpret_default()
     Bb, S, di = x.shape
     ds = A.shape[1]
     chunk = min(chunk, S)

@@ -152,7 +152,8 @@ def apply_top_k_top_p(logits, k, p):
         jnp.arange(B)[:, None], idx].set(masked_sorted)
 
 
-def sample_tokens(logits, temps, top_ks, top_ps, seeds, counters):
+def sample_tokens(logits, temps, top_ks, top_ps, seeds, counters,
+                  fused: bool = False):
     """Vectorized per-slot sampling: (B, V) logits -> (B,) int32 tokens.
 
     Slots with ``temps <= 0`` take the exact greedy argmax path (bitwise
@@ -162,13 +163,23 @@ def sample_tokens(logits, temps, top_ks, top_ps, seeds, counters):
     the request's own seed and how many tokens it has generated, so the
     same request reproduces the same stream in any slot and any batch
     composition.
+
+    ``fused`` swaps the full-vocab sort in :func:`apply_top_k_top_p` for
+    the sort-free threshold-search mask (``repro.kernels.ops.
+    topk_topp_mask``). The key schedule and the greedy path are part of
+    the sampling contract and never change; for distinct surviving
+    logits the masks are identical, so the drawn tokens match too.
     """
     lf = logits.astype(jnp.float32)
     greedy = jnp.argmax(lf, axis=-1).astype(jnp.int32)
 
     def _sampled(_):
         scaled = lf / jnp.maximum(temps, 1e-6)[:, None]
-        scaled = apply_top_k_top_p(scaled, top_ks, top_ps)
+        if fused:
+            from repro.kernels import ops as kops
+            scaled = kops.topk_topp_mask(scaled, top_ks, top_ps)
+        else:
+            scaled = apply_top_k_top_p(scaled, top_ks, top_ps)
 
         def draw(seed, counter):
             key = jax.random.fold_in(jax.random.PRNGKey(seed), counter)
@@ -405,7 +416,7 @@ def make_draft_wave_fn(rcfg: RunConfig, mesh: Optional[Mesh], decode_fn,
 
 
 def make_paged_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh],
-                        decode_fn=None):
+                        decode_fn=None, fused: bool = False):
     """Paged-state step: one jitted function serves both chunked prefill
     (S = prompt bucket) and steady-state decode (S = 1); slot occupancy is
     the ``n_new`` mask, so admissions/evictions never retrace.
@@ -420,7 +431,8 @@ def make_paged_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh],
     Sampling is vectorized per slot inside the same trace: ``temps`` /
     ``top_ks`` / ``top_ps`` are (B,) request parameters (temperature 0 =
     greedy), ``seeds``/``counters`` derive each slot's PRNG key, so mixed
-    greedy/sampled batches decode lock-step with no retrace.
+    greedy/sampled batches decode lock-step with no retrace. ``fused``
+    selects the sort-free sampling epilogue (see :func:`sample_tokens`).
     """
     decode_fn = decode_fn or transformer.paged_decode_step
 
@@ -432,7 +444,7 @@ def make_paged_serve_fn(rcfg: RunConfig, mesh: Optional[Mesh],
             logits, state2 = decode_fn(params, state, tokens, lengths,
                                        n_new, page_table, rcfg)
             nxt = sample_tokens(logits, temps, top_ks, top_ps, seeds,
-                                counters)
+                                counters, fused=fused)
         return nxt[:, None], state2
 
     return paged_serve_step

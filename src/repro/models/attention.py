@@ -227,7 +227,7 @@ def init_paged_kv_cache(cfg: ModelConfig, n_layers: int, n_pages: int,
 
 
 def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
-                          page_table, lengths, n_new):
+                          page_table, lengths, n_new, fused: bool = False):
     """Self-attention reading/writing one layer's page pool.
 
     x: (B, S, D) new-token activations. Slot b contributes ``n_new[b] <= S``
@@ -244,6 +244,14 @@ def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
     (allocator refcount 1) — copy-on-write forks
     (``repro.serve.cache.copy_state_page``) happen host-side before the
     step is launched.
+
+    ``fused=True`` routes the attention core through the flash-decode
+    paged kernel (:func:`repro.kernels.ops.paged_attention`) — the page
+    table is walked in-kernel (or, in ref mode on CPU, gathered at
+    whatever width the caller sliced the table to) instead of always
+    materializing the full (B, P*page_size, Hkv, hd) dense view. The
+    scatter-write of new K/V and all mesh constraints are identical in
+    both branches, and unpadded outputs are bitwise-equal.
     """
     dt = jnp.dtype(cfg.dtype)
     x = x.astype(dt)
@@ -271,19 +279,26 @@ def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
     pv_flat = pv_flat.at[flat].set(v.astype(pv.dtype).reshape(
         B * S, *v.shape[2:]))
 
-    # per-slot dense view in logical order: (B, P*page_size, Hkv, hd)
-    gather = (page_table[:, :, None] * page_size
-              + jnp.arange(page_size)[None, None, :]).reshape(B, -1)
-    kd = logical_constraint(pk_flat[gather],
-                            ("batch", "kv_seq", "kv_heads", "head_dim"))
-    vd = logical_constraint(pv_flat[gather],
-                            ("batch", "kv_seq", "kv_heads", "head_dim"))
+    if fused:
+        from repro.kernels import ops as kops
+        with jax.named_scope("paged_attn_core_fused"):
+            out = kops.paged_attention(q, pk_flat.reshape(pk.shape),
+                                       pv_flat.reshape(pv.shape),
+                                       page_table, lengths)
+    else:
+        # per-slot dense view in logical order: (B, P*page_size, Hkv, hd)
+        gather = (page_table[:, :, None] * page_size
+                  + jnp.arange(page_size)[None, None, :]).reshape(B, -1)
+        kd = logical_constraint(pk_flat[gather],
+                                ("batch", "kv_seq", "kv_heads", "head_dim"))
+        vd = logical_constraint(pv_flat[gather],
+                                ("batch", "kv_seq", "kv_heads", "head_dim"))
 
-    # keys gathered in logical order sit at absolute positions 0..cap-1;
-    # garbage beyond a slot's written length always has kpos > qpos and
-    # masks out under the per-slot causal offset
-    with jax.named_scope("paged_attn_core"):
-        out = dot_attention(q, kd, vd, causal=True, q_offset=lengths)
+        # keys gathered in logical order sit at absolute positions
+        # 0..cap-1; garbage beyond a slot's written length always has
+        # kpos > qpos and masks out under the per-slot causal offset
+        with jax.named_scope("paged_attn_core"):
+            out = dot_attention(q, kd, vd, causal=True, q_offset=lengths)
     y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
     y = logical_constraint(y, ("batch", "seq", "embed"))
     # pools keep their mesh placement across steps (pages over serving
@@ -293,3 +308,91 @@ def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
     new_pv = logical_constraint(pv_flat.reshape(pv.shape),
                                 ("pages", None, "kv_heads", "head_dim"))
     return y, new_pk, new_pv
+
+
+# -- fused ref-mode decode: pre-gathered views + deferred pool commit -------
+#
+# Shipping the stacked (L, N, page_size, Hkv, hd) pools through the layer
+# scan as xs/ys costs two full-pool copies per step (scan input slicing +
+# output stacking), no matter how few pages a step touches — on CPU that
+# dominates steady-state decode. The fused ref path therefore never moves
+# the pools through the scan: it gathers each slot's live pages ONCE into
+# per-layer dense views (small: the caller's sliced table width), scans the
+# layers over those views carrying only the (B, S) new K/V rows out, and
+# publishes every layer's rows with ONE donated in-place scatter afterwards
+# (paged_kv_commit). Consumed outputs and committed pages are bitwise-equal
+# to the in-scan write path: the views hold exactly what a post-write
+# gather would (write pages are private by the prefix-sharing contract, and
+# scratch-page rows only surface at masked positions), and the commit uses
+# the same flat-index formula as the per-layer writes.
+
+
+def paged_view_gather(pool, page_table):
+    """Per-slot dense views of a stacked page pool: (L, N, page_size, H,
+    hd) + (B, P) -> (L, B, P*page_size, H, hd), rows in logical order."""
+    L, n_pages, page_size = pool.shape[:3]
+    B = page_table.shape[0]
+    idx = (page_table[:, :, None] * page_size
+           + jnp.arange(page_size)[None, None, :]).reshape(B, -1)
+    return pool.reshape(L, n_pages * page_size, *pool.shape[3:])[:, idx]
+
+
+def paged_view_attention_apply(params, x, cfg: ModelConfig, *, rope, kd, vd,
+                               lengths, n_new):
+    """One layer's self-attention over pre-gathered K/V views — the
+    deferred-write twin of :func:`paged_attention_apply`'s fused branch.
+    kd/vd: (B, cap, Hkv, hd) views from :func:`paged_view_gather`. The new
+    tokens' K/V are inserted at their logical rows (writes beyond ``cap``
+    or ``n_new`` drop), the attention core is the same causal-offset dot
+    as the gathered path, and the pool write is left to
+    :func:`paged_kv_commit`. Returns (y, k_new, v_new)."""
+    dt = jnp.dtype(cfg.dtype)
+    x = x.astype(dt)
+    q, k, v = _project_qkv(params, x, None, cfg)
+    cos, sin = rope
+    q = apply_rope(q, cos, sin)
+    k = apply_rope(k, cos, sin)
+    q = logical_constraint(q, ("batch", "seq", "heads", "head_dim"))
+    k = logical_constraint(k, ("batch", "seq", "kv_heads", "head_dim"))
+    B, S = x.shape[:2]
+    cap = kd.shape[1]
+    pos = lengths[:, None] + jnp.arange(S)[None, :]
+    valid = jnp.arange(S)[None, :] < n_new[:, None]
+    row = jnp.where(valid, pos, cap)          # out-of-bounds rows drop
+    bidx = jnp.broadcast_to(jnp.arange(B)[:, None], (B, S))
+    kd = kd.at[bidx, row].set(k.astype(kd.dtype))
+    vd = vd.at[bidx, row].set(v.astype(vd.dtype))
+    kd = logical_constraint(kd, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    vd = logical_constraint(vd, ("batch", "kv_seq", "kv_heads", "head_dim"))
+    with jax.named_scope("paged_attn_core_fused_view"):
+        out = dot_attention(q, kd, vd, causal=True, q_offset=lengths)
+    y = jnp.einsum("bshk,hkd->bsd", out, params["wo"].astype(dt))
+    y = logical_constraint(y, ("batch", "seq", "embed"))
+    return y, k, v
+
+
+def paged_kv_commit(pages, k_rows, v_rows, page_table, lengths, n_new):
+    """Publish every layer's new K/V rows into the stacked page pools with
+    one scatter per pool (in-place when the state is donated). k_rows /
+    v_rows: (L, B, S, Hkv, hd) from the layer scan. Uses the same
+    flat-index formula as :func:`paged_attention_apply` — invalid rows
+    (padding / idle slots) land in scratch page 0."""
+    pk, pv = pages["k"], pages["v"]
+    L, n_pages, page_size = pk.shape[:3]
+    B, S = k_rows.shape[1:3]
+    P = page_table.shape[1]
+    pos = lengths[:, None] + jnp.arange(S)[None, :]
+    valid = jnp.arange(S)[None, :] < n_new[:, None]
+    slot = jnp.clip(pos // page_size, 0, P - 1)
+    phys = jnp.take_along_axis(page_table, slot, axis=1)
+    flat = jnp.where(valid, phys * page_size + pos % page_size, 0)
+    flat = flat.reshape(-1)
+    rows = n_pages * page_size
+    axes = (None, "pages", None, "kv_heads", "head_dim")
+
+    def commit(pool, vals):
+        new = pool.reshape(L, rows, *pool.shape[3:]).at[:, flat].set(
+            vals.astype(pool.dtype).reshape(L, B * S, *pool.shape[3:]))
+        return logical_constraint(new.reshape(pool.shape), axes)
+
+    return {"k": commit(pk, k_rows), "v": commit(pv, v_rows)}

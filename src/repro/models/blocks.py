@@ -23,7 +23,8 @@ import jax.numpy as jnp
 from repro.configs.base import ModelConfig
 from repro.models import ssm as ssm_mod
 from repro.models.attention import (attention_apply, init_attention,
-                                    paged_attention_apply)
+                                    paged_attention_apply,
+                                    paged_view_attention_apply)
 from repro.models.layers import init_norm, norm_apply
 from repro.models.mlp import init_mlp, mlp_apply
 from repro.models.moe import init_moe, moe_apply
@@ -102,19 +103,38 @@ def attn_block_F(params, z, a, cfg: ModelConfig, *, kind: str):
 
 
 def paged_attn_block(params, z, cfg: ModelConfig, *, kind: str, rope,
-                     pk, pv, page_table, lengths, n_new, gate=None):
+                     pk, pv, page_table, lengths, n_new, gate=None,
+                     fused: bool = False):
     """One attention block step against a layer's KV page pool: the paged
     twin of ``block_step`` for attn_mlp/attn_moe kinds. Single owner of
     the "paged attention + block formula + residual" composition, shared
     by the decoder paged step (transformer.paged_decode_step) and the
-    hybrid backbone's interleaved shared-attention block. Returns
+    hybrid backbone's interleaved shared-attention block. ``fused``
+    selects the flash-decode paged kernel core. Returns
     (z_next, new_pk, new_pv)."""
     a, npk, npv = paged_attention_apply(
         params["attn"], norm_apply(params["ln1"], z, cfg), cfg, rope=rope,
-        pk=pk, pv=pv, page_table=page_table, lengths=lengths, n_new=n_new)
+        pk=pk, pv=pv, page_table=page_table, lengths=lengths, n_new=n_new,
+        fused=fused)
     f = attn_block_F(params, z, a, cfg, kind=kind)
     scale = jnp.asarray(1.0, z.dtype) if gate is None else gate.astype(z.dtype)
     return z + scale * f, npk, npv
+
+
+def paged_attn_view_block(params, z, cfg: ModelConfig, *, kind: str, rope,
+                          kd, vd, lengths, n_new, gate=None):
+    """The deferred-write twin of :func:`paged_attn_block` for the fused
+    ref decode path: attention runs over pre-gathered K/V views
+    (``attention.paged_view_gather``) and the new K/V rows are returned
+    for a single post-scan pool commit (``attention.paged_kv_commit``)
+    instead of being scattered into the pool per layer. Same block
+    formula, bitwise-equal activations. Returns (z_next, k_new, v_new)."""
+    a, k_new, v_new = paged_view_attention_apply(
+        params["attn"], norm_apply(params["ln1"], z, cfg), cfg, rope=rope,
+        kd=kd, vd=vd, lengths=lengths, n_new=n_new)
+    f = attn_block_F(params, z, a, cfg, kind=kind)
+    scale = jnp.asarray(1.0, z.dtype) if gate is None else gate.astype(z.dtype)
+    return z + scale * f, k_new, v_new
 
 
 def block_step(params, z, cfg: ModelConfig, *, kind: str, causal: bool,

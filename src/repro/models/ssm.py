@@ -189,6 +189,91 @@ def snapshot_steps(page_table, lengths, n_new, page_size: int):
     return jnp.clip(t, 0, None), phys
 
 
+def compact_snapshot_steps(page_table, lengths, n_new, page_size: int,
+                           seq_len: int):
+    """Compact twin of :func:`snapshot_steps` for the fused decode path.
+
+    A call processing ``seq_len`` tokens can finalize at most
+    W = ``max_write_pages(seq_len, page_size)`` snapshot pages per slot —
+    the contiguous page-table slots ``lengths//page_size ..
+    last//page_size`` — yet the full plan scatters all (B, P) pairs,
+    burying the handful of real writes under B*(P-W) rewrites of scratch
+    page 0. This returns the same (t, phys) contract restricted to those
+    W slots: (t (B, W) local snapshot steps, phys (B, W) physical pages,
+    unwritten entries routed to scratch page 0). Every real page the full
+    plan writes is covered with an identical snapshot step, so pools
+    committed through either plan agree everywhere except page 0.
+    """
+    from repro.kernels.paged_ssm import max_write_pages
+    W = max_write_pages(seq_len, page_size)
+    B, P = page_table.shape
+    last = lengths + n_new - 1
+    wslot = (lengths // page_size)[:, None] + jnp.arange(W)[None, :]
+    written = (n_new[:, None] > 0) & (wslot <= (last // page_size)[:, None]) \
+        & (wslot < P)
+    phys = jnp.where(written, jnp.take_along_axis(
+        page_table, jnp.clip(wslot, 0, P - 1), axis=1), 0)
+    t = jnp.minimum((wslot + 1) * page_size - 1, last[:, None]) \
+        - lengths[:, None]
+    return jnp.clip(t, 0, None), phys
+
+
+def paged_read_plan(page_table, lengths, page_size: int):
+    """The (read_page, live) pair :func:`paged_state_read` resolves —
+    exposed separately so the fused kernel can do the page read itself."""
+    P = page_table.shape[1]
+    slot = jnp.clip((lengths - 1) // page_size, 0, P - 1)
+    prev = jnp.take_along_axis(page_table, slot[:, None], axis=1)[:, 0]
+    return prev, lengths > 0
+
+
+def paged_state_read_stacked(pool, page_table, lengths, page_size: int):
+    """Every layer's incoming state in ONE gather: (L, n_pages, ...) ->
+    (L, B, ...). The fused ref decode path reads the whole stack up front
+    so the layer scan never carries the pools (see
+    :func:`paged_pools_commit_compact` for why); same masking contract as
+    :func:`paged_state_read`."""
+    prev, live = paged_read_plan(page_table, lengths, page_size)
+    init = pool[:, prev]
+    mask = live.reshape((1, -1) + (1,) * (init.ndim - 2))
+    return jnp.where(mask, init, jnp.zeros_like(init))
+
+
+def paged_pools_commit_compact(pools, xp_all, hs_all, *, page_table,
+                               lengths, n_new, page_size: int):
+    """Deferred compact commit for the whole layer stack: one scatter per
+    pool (in-place when the state is donated) publishes every layer's
+    boundary snapshots into the W compact write slots.
+
+    Shipping the stacked (L, n_pages, ...) pools through the layer scan
+    as xs/ys costs two full-pool copies per step no matter how few pages
+    change; the fused ref path instead runs the mixers with
+    ``state_in`` from :func:`paged_state_read_stacked`, collects the
+    per-layer artifacts (xp_all (L, B, S+K-1, C), hs_all (L, B, S, ...))
+    as scan outputs, and commits here. Snapshot extraction matches
+    :func:`paged_pool_commit` with the compact plan, so committed pages
+    are bitwise those of the in-scan path everywhere except scratch
+    page 0. Returns {"conv", "h"}."""
+    conv_pool, h_pool = pools["conv"], pools["h"]
+    L = conv_pool.shape[0]
+    K = conv_pool.shape[-2] + 1
+    S = hs_all.shape[2]
+    t_w, phys_w = compact_snapshot_steps(page_table, lengths, n_new,
+                                         page_size, S)
+    B, W = phys_w.shape
+    h_snap = hs_all[:, jnp.arange(B)[:, None], t_w]           # (L, B, W, ..)
+    widx = t_w[:, :, None] + jnp.arange(1, K)[None, None, :]  # (B, W, K-1)
+    conv_snap = xp_all[:, jnp.arange(B)[:, None, None], widx]
+    flat = phys_w.reshape(-1)
+    new_h = h_pool.at[:, flat].set(
+        h_snap.astype(h_pool.dtype).reshape((L, B * W) + h_pool.shape[2:]))
+    new_conv = conv_pool.at[:, flat].set(
+        conv_snap.astype(conv_pool.dtype).reshape(
+            (L, B * W) + conv_pool.shape[2:]))
+    new_conv, new_h = constrain_pools(new_conv, new_h, stacked=True)
+    return {"conv": new_conv, "h": new_h}
+
+
 def paged_state_write(pool, snaps, phys):
     """Scatter per-(slot, page) snapshots into the pool. snaps: (B, P, ...)
     aligned with phys from :func:`snapshot_steps`; duplicate scratch-page
@@ -253,7 +338,8 @@ def init_paged_ssm_pool(cfg: ModelConfig, n_layers: int, n_pages: int,
 
 def mamba1_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
                        page_table, lengths, n_new, page_size: int,
-                       commit: bool = True):
+                       commit: bool = True, fused: bool = False,
+                       state_in=None):
     """One layer's mamba1 mixer against the paged state pool.
 
     x: (B, S, D) normed block input; slot b contributes ``n_new[b] <= S``
@@ -267,6 +353,20 @@ def mamba1_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     hs_b) — the per-step snapshot candidates — and leaves the pools
     untouched; the caller publishes an accepted prefix later via
     :func:`paged_pool_commit` (speculative-decode verification).
+
+    ``fused=True`` (commit path only) runs the recurrence and the
+    snapshot commit through the paged SSM kernel
+    (:func:`repro.kernels.ops.paged_ssm_update`): the initial state is
+    read and the boundary snapshots written in-kernel from the *compact*
+    plan (W pages per slot instead of P), with identical product order —
+    outputs and non-scratch pool pages stay bitwise-equal to this
+    gathered path.
+
+    ``state_in=(win0, h0)`` supplies the incoming conv window / SSM state
+    directly (pre-gathered across layers via
+    :func:`paged_state_read_stacked`) so the pools are never touched here
+    — pass ``conv_pool=h_pool=None`` with ``commit=False`` and publish
+    the returned artifacts through :func:`paged_pools_commit_compact`.
     """
     s = cfg.ssm
     dt_ = jnp.dtype(cfg.dtype)
@@ -278,7 +378,8 @@ def mamba1_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     xin, z = jnp.split(xz, 2, axis=-1)
     xin = logical_constraint(xin, ("batch", "seq", "mlp"))
     K = params["conv_w"].shape[0]
-    win0 = paged_state_read(conv_pool, page_table, lengths, page_size)
+    win0 = state_in[0] if state_in is not None else \
+        paged_state_read(conv_pool, page_table, lengths, page_size)
     xp = jnp.concatenate([win0.astype(dt_), xin], axis=1)
     w, b = params["conv_w"].astype(dt_), params["conv_b"].astype(dt_)
     xc = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
@@ -295,39 +396,63 @@ def mamba1_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
     valid = jnp.arange(S)[None, :] < n_new[:, None]            # (B, S)
 
-    def step(h, inp):
-        dt_t, x_t, b_t, c_t, v_t = inp
-        dA = jnp.exp(dt_t[:, :, None] * A[None])
-        h2 = dA * h + dt_t[:, :, None] * b_t[:, None, :] * x_t[:, :, None]
-        h = jnp.where(v_t[:, None, None], h2, h)    # padding: state frozen
-        y = jnp.einsum("bes,bs->be", h, c_t)
-        return h, (h, y)
+    if fused and commit:
+        from repro.kernels import ops as kops
+        t_w, phys_w = compact_snapshot_steps(page_table, lengths, n_new,
+                                             page_size, S)
+        read_page, live = paged_read_plan(page_table, lengths, page_size)
+        ys_b, new_h = kops.paged_ssm_update(
+            dt32, xc32, B32, C32, A, h_pool, read_page, live, phys_w, t_w,
+            n_new, order="dbx")
+        y = ys_b.astype(dt_)
+    else:
+        def step(h, inp):
+            dt_t, x_t, b_t, c_t, v_t = inp
+            dA = jnp.exp(dt_t[:, :, None] * A[None])
+            h2 = dA * h + dt_t[:, :, None] * b_t[:, None, :] * x_t[:, :, None]
+            h = jnp.where(v_t[:, None, None], h2, h)  # padding: state frozen
+            y = jnp.einsum("bes,bs->be", h, c_t)
+            return h, (h, y)
 
-    h0 = paged_state_read(h_pool, page_table, lengths, page_size)
-    xs = (dt32.transpose(1, 0, 2), xc32.transpose(1, 0, 2),
-          B32.transpose(1, 0, 2), C32.transpose(1, 0, 2), valid.T)
-    _, (hs, ys) = jax.lax.scan(step, h0, xs)
-    y = ys.transpose(1, 0, 2).astype(dt_)
+        h0 = state_in[1] if state_in is not None else \
+            paged_state_read(h_pool, page_table, lengths, page_size)
+        xs = (dt32.transpose(1, 0, 2), xc32.transpose(1, 0, 2),
+              B32.transpose(1, 0, 2), C32.transpose(1, 0, 2), valid.T)
+        _, (hs, ys) = jax.lax.scan(step, h0, xs)
+        y = ys.transpose(1, 0, 2).astype(dt_)
     y = y + params["D"].astype(dt_)[None, None, :] * xc
     y = y * jax.nn.silu(z)
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
     out = logical_constraint(out, ("batch", "seq", "embed"))
 
-    hs_b = jnp.swapaxes(hs, 0, 1)                              # (B, S, ...)
     if not commit:
-        return out, xp, hs_b
-    new_conv, new_h = paged_pool_commit(
-        conv_pool, h_pool, xp, hs_b, page_table=page_table, lengths=lengths,
-        n_new=n_new, page_size=page_size)
+        return out, xp, jnp.swapaxes(hs, 0, 1)                 # (B, S, ...)
+    if fused:
+        K = conv_pool.shape[-2] + 1
+        new_conv = paged_state_write(conv_pool,
+                                     _gather_windows(xp, t_w, K), phys_w)
+    else:
+        new_conv, new_h = paged_pool_commit(
+            conv_pool, h_pool, xp, jnp.swapaxes(hs, 0, 1),
+            page_table=page_table, lengths=lengths, n_new=n_new,
+            page_size=page_size)
     new_conv, new_h = constrain_pools(new_conv, new_h)
     return out, new_conv, new_h
 
 
 def mamba2_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
                        page_table, lengths, n_new, page_size: int,
-                       commit: bool = True):
-    """Mamba2 twin of :func:`mamba1_paged_apply` (same pool contract;
-    conv runs over the concatenated x/B/C channels, h is per-head)."""
+                       commit: bool = True, fused: bool = False,
+                       state_in=None):
+    """Mamba2 twin of :func:`mamba1_paged_apply` (same pool contract —
+    including ``state_in`` deferred I/O; conv runs over the concatenated
+    x/B/C channels, h is per-head).
+
+    The fused path flattens (heads, headdim) to the kernel's rows axis —
+    per-head dt and A tile across headdim (identical elementwise bits)
+    and the (n_pages, nh, headdim, ds) h pool reshapes to rows and back,
+    with the mamba2 product order ``"dxb"``.
+    """
     s = cfg.ssm
     dt_ = jnp.dtype(cfg.dtype)
     x = x.astype(dt_)
@@ -338,7 +463,8 @@ def mamba2_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     proj = jnp.einsum("bsd,de->bse", x, params["in_proj"].astype(dt_))
     z, xbc, dt = jnp.split(proj, [di, 2 * di + 2 * s.d_state], axis=-1)
     K = params["conv_w"].shape[0]
-    win0 = paged_state_read(conv_pool, page_table, lengths, page_size)
+    win0 = state_in[0] if state_in is not None else \
+        paged_state_read(conv_pool, page_table, lengths, page_size)
     xp = jnp.concatenate([win0.astype(dt_), xbc], axis=1)
     w, b = params["conv_w"].astype(dt_), params["conv_b"].astype(dt_)
     xbc = sum(xp[:, i:i + S, :] * w[i][None, None, :] for i in range(K))
@@ -352,20 +478,36 @@ def mamba2_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     B32, C32 = Bm.astype(jnp.float32), Cm.astype(jnp.float32)
     valid = jnp.arange(S)[None, :] < n_new[:, None]
 
-    def step(h, inp):
-        dt_t, x_t, b_t, c_t, v_t = inp
-        dA = jnp.exp(dt_t * A[None])
-        h2 = dA[:, :, None, None] * h \
-            + (dt_t[:, :, None] * x_t)[..., None] * b_t[:, None, None, :]
-        h = jnp.where(v_t[:, None, None, None], h2, h)
-        y = jnp.einsum("bhes,bs->bhe", h, c_t)
-        return h, (h, y)
+    if fused and commit:
+        from repro.kernels import ops as kops
+        R = nh * s.headdim
+        t_w, phys_w = compact_snapshot_steps(page_table, lengths, n_new,
+                                             page_size, S)
+        read_page, live = paged_read_plan(page_table, lengths, page_size)
+        A_rows = jnp.broadcast_to(
+            jnp.repeat(A, s.headdim)[:, None], (R, s.d_state))
+        ys_r, new_h_rows = kops.paged_ssm_update(
+            jnp.repeat(dt, s.headdim, axis=-1), xh.reshape(B, S, R),
+            B32, C32, A_rows, h_pool.reshape(-1, R, s.d_state),
+            read_page, live, phys_w, t_w, n_new, order="dxb")
+        new_h = new_h_rows.reshape(h_pool.shape)
+        y = ys_r.reshape(B, S, nh, s.headdim)
+    else:
+        def step(h, inp):
+            dt_t, x_t, b_t, c_t, v_t = inp
+            dA = jnp.exp(dt_t * A[None])
+            h2 = dA[:, :, None, None] * h \
+                + (dt_t[:, :, None] * x_t)[..., None] * b_t[:, None, None, :]
+            h = jnp.where(v_t[:, None, None, None], h2, h)
+            y = jnp.einsum("bhes,bs->bhe", h, c_t)
+            return h, (h, y)
 
-    h0 = paged_state_read(h_pool, page_table, lengths, page_size)
-    xs = (dt.transpose(1, 0, 2), xh.transpose(1, 0, 2, 3),
-          B32.transpose(1, 0, 2), C32.transpose(1, 0, 2), valid.T)
-    _, (hs, ys) = jax.lax.scan(step, h0, xs)
-    y = ys.transpose(1, 0, 2, 3)
+        h0 = state_in[1] if state_in is not None else \
+            paged_state_read(h_pool, page_table, lengths, page_size)
+        xs = (dt.transpose(1, 0, 2), xh.transpose(1, 0, 2, 3),
+              B32.transpose(1, 0, 2), C32.transpose(1, 0, 2), valid.T)
+        _, (hs, ys) = jax.lax.scan(step, h0, xs)
+        y = ys.transpose(1, 0, 2, 3)
     y = y + params["D"].astype(jnp.float32)[None, None, :, None] * xh
     y = y.reshape(B, S, di).astype(dt_)
     y = y * jax.nn.silu(z)
@@ -375,12 +517,17 @@ def mamba2_paged_apply(params, x, cfg: ModelConfig, *, conv_pool, h_pool,
     out = jnp.einsum("bse,ed->bsd", y, params["out_proj"].astype(dt_))
     out = logical_constraint(out, ("batch", "seq", "embed"))
 
-    hs_b = jnp.swapaxes(hs, 0, 1)
     if not commit:
-        return out, xp, hs_b
-    new_conv, new_h = paged_pool_commit(
-        conv_pool, h_pool, xp, hs_b, page_table=page_table, lengths=lengths,
-        n_new=n_new, page_size=page_size)
+        return out, xp, jnp.swapaxes(hs, 0, 1)
+    if fused:
+        K = conv_pool.shape[-2] + 1
+        new_conv = paged_state_write(conv_pool,
+                                     _gather_windows(xp, t_w, K), phys_w)
+    else:
+        new_conv, new_h = paged_pool_commit(
+            conv_pool, h_pool, xp, jnp.swapaxes(hs, 0, 1),
+            page_table=page_table, lengths=lengths, n_new=n_new,
+            page_size=page_size)
     new_conv, new_h = constrain_pools(new_conv, new_h)
     return out, new_conv, new_h
 

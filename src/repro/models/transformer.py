@@ -28,7 +28,7 @@ from repro.core.lp import LPStatic, lp_forward, pad_depth
 from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models.blocks import (block_kind, block_step, init_block,
-                                 paged_attn_block)
+                                 paged_attn_block, paged_attn_view_block)
 from repro.models.layers import (embed_tokens, init_embedding, init_norm,
                                  norm_apply, rope_freqs, unembed)
 from repro.parallel.sharding import logical_constraint
@@ -448,10 +448,15 @@ def _paged_all_logits(params, z, cfg: ModelConfig):
 
 
 def _paged_attn_forward(params, pages, tokens, lengths, n_new, page_table,
-                        rcfg: RunConfig):
+                        rcfg: RunConfig, *, fused: bool = False):
     """Shared trunk of the attention paged step/verify: embeds, runs the
     full stacked layer scan against the KV page pool, returns (z (B,S,D),
-    new_pages)."""
+    new_pages). ``fused`` routes each layer's attention core through the
+    flash-decode paged kernel; in ref mode (CPU) it additionally keeps the
+    pools OUT of the layer scan — pre-gathered per-slot views go in, only
+    the new K/V rows come out, and one donated scatter commits them
+    (see ``attention.paged_kv_commit``) — instead of paying two full-pool
+    copies per step to scan input slicing / output stacking."""
     cfg = rcfg.model
     kind = block_kind(cfg)
     if kind not in ("attn_mlp", "attn_moe"):
@@ -463,11 +468,30 @@ def _paged_attn_forward(params, pages, tokens, lengths, n_new, page_table,
     z = embed_tokens(params["embed"], tokens, cfg)
     z = logical_constraint(z, ("batch", "seq", "embed"))
 
+    if fused:
+        from repro.kernels import ops as kops
+        if kops.kernel_mode() == "ref":
+            kd_all = attn_mod.paged_view_gather(pages["k"], page_table)
+            vd_all = attn_mod.paged_view_gather(pages["v"], page_table)
+
+            def vstep(z, xs):
+                p, gate, (kd, vd) = xs
+                z2, k_new, v_new = paged_attn_view_block(
+                    p, z, cfg, kind=kind, rope=rope, kd=kd, vd=vd,
+                    lengths=lengths, n_new=n_new, gate=gate)
+                return z2, (k_new, v_new)
+
+            z, (k_rows, v_rows) = jax.lax.scan(
+                vstep, z, (stacked, gates, (kd_all, vd_all)))
+            return z, attn_mod.paged_kv_commit(pages, k_rows, v_rows,
+                                               page_table, lengths, n_new)
+
     def step(z, xs):
         p, gate, (pk, pv) = xs
         z2, npk, npv = paged_attn_block(
             p, z, cfg, kind=kind, rope=rope, pk=pk, pv=pv,
-            page_table=page_table, lengths=lengths, n_new=n_new, gate=gate)
+            page_table=page_table, lengths=lengths, n_new=n_new, gate=gate,
+            fused=fused)
         return z2, (npk, npv)
 
     z, (nk, nv) = jax.lax.scan(step, z, (stacked, gates,
@@ -476,7 +500,8 @@ def _paged_attn_forward(params, pages, tokens, lengths, n_new, page_table,
 
 
 def paged_decode_step(params, pages, tokens, lengths, n_new, page_table,
-                      rcfg: RunConfig, *, page_size: int = 0):
+                      rcfg: RunConfig, *, page_size: int = 0,
+                      fused: bool = False):
     """Batched step against the shared KV page pool — static shapes,
     dynamic occupancy.
 
@@ -488,12 +513,13 @@ def paged_decode_step(params, pages, tokens, lengths, n_new, page_table,
     slot's final real token, new_pages).
     """
     z, new_pages = _paged_attn_forward(params, pages, tokens, lengths,
-                                       n_new, page_table, rcfg)
+                                       n_new, page_table, rcfg, fused=fused)
     return _paged_last_logits(params, z, n_new, rcfg.model), new_pages
 
 
 def paged_verify_step(params, pages, tokens, lengths, n_new, page_table,
-                      rcfg: RunConfig, *, page_size: int = 0):
+                      rcfg: RunConfig, *, page_size: int = 0,
+                      fused: bool = False):
     """Speculative-verify forward for the attention family: one call over
     the pending token + k drafted tokens, logits at EVERY position.
     Returns (logits (B, S, V), new_pages, None).
@@ -503,21 +529,33 @@ def paged_verify_step(params, pages, tokens, lengths, n_new, page_table,
     (``kpos > qpos``) until the next wave overwrites it — so the host
     rolls back by truncating ``lengths``. The trailing ``None`` mirrors
     the deferred-commit artifact slot the snapshot families return.
+    ``fused`` enables the same kernel/view-path restructuring as decode —
+    the k+1-wide verify wave is just a small prefill chunk to it.
     """
     z, new_pages = _paged_attn_forward(params, pages, tokens, lengths,
-                                       n_new, page_table, rcfg)
+                                       n_new, page_table, rcfg, fused=fused)
     return _paged_all_logits(params, z, rcfg.model), new_pages, None
 
 
 def _ssm_paged_forward(params, pools, tokens, lengths, n_new, page_table,
-                       rcfg: RunConfig, *, page_size: int, commit: bool):
+                       rcfg: RunConfig, *, page_size: int, commit: bool,
+                       fused: bool = False):
     """Shared trunk of the SSM paged step/verify. ``commit=True`` writes
     the state-snapshot pages in-line (normal decode/prefill) and returns
     (z, new_pools, None); ``commit=False`` leaves the pools untouched and
     returns (z, pools, artifacts) where artifacts hold every layer's
     per-step snapshot candidates for a later
     :func:`ssm_paged_commit_step` (speculative verification commits only
-    the accepted prefix)."""
+    the accepted prefix).
+
+    With ``fused=True`` under ref kernel mode the pools stay OUT of the
+    layer scan entirely: incoming state for every layer is pre-gathered
+    once (``paged_state_read_stacked``), the mixers run in deferred mode
+    (``state_in`` + ``commit=False``), and one compact scatter per pool
+    publishes all layers' snapshots after the scan
+    (``paged_pools_commit_compact``). Scan xs/ys slicing copies the full
+    pool per layer step otherwise — the dominant decode cost on CPU —
+    while outputs and non-scratch pages stay bitwise identical."""
     cfg = rcfg.model
     kind = block_kind(cfg)
     if kind not in ("mamba1", "mamba2"):
@@ -528,12 +566,42 @@ def _ssm_paged_forward(params, pools, tokens, lengths, n_new, page_table,
     z = embed_tokens(params["embed"], tokens, cfg)
     z = logical_constraint(z, ("batch", "seq", "embed"))
 
+    if fused:
+        from repro.kernels import ops as kops
+        if kops.kernel_mode() == "ref":
+            win0_all = ssm_mod.paged_state_read_stacked(
+                pools["conv"], page_table, lengths, page_size)
+            h0_all = ssm_mod.paged_state_read_stacked(
+                pools["h"], page_table, lengths, page_size)
+
+            def vstep(z, xs):
+                p, gate, (w0, h0) = xs
+                f, xp, hs_b = mixer(
+                    p["mixer"], norm_apply(p["norm"], z, cfg), cfg,
+                    conv_pool=None, h_pool=None, page_table=page_table,
+                    lengths=lengths, n_new=n_new, page_size=page_size,
+                    commit=False, state_in=(w0, h0))
+                return z + gate.astype(z.dtype) * f, (xp, hs_b)
+
+            z, (xp_all, hs_all) = jax.lax.scan(
+                vstep, z, (stacked, gates, (win0_all, h0_all)))
+            if not commit:
+                # verify wave: same deferred mixers, but the snapshot
+                # candidates go back to the caller instead of the pools
+                # (ssm_paged_commit_step publishes the accepted prefix)
+                return z, pools, {"xp": xp_all, "hs": hs_all}
+            new_pools = ssm_mod.paged_pools_commit_compact(
+                pools, xp_all, hs_all, page_table=page_table,
+                lengths=lengths, n_new=n_new, page_size=page_size)
+            return z, new_pools, None
+
     def step(z, xs):
         p, gate, (cpool, hpool) = xs
         f, a, b = mixer(p["mixer"], norm_apply(p["norm"], z, cfg), cfg,
                         conv_pool=cpool, h_pool=hpool,
                         page_table=page_table, lengths=lengths,
-                        n_new=n_new, page_size=page_size, commit=commit)
+                        n_new=n_new, page_size=page_size, commit=commit,
+                        fused=fused)
         return z + gate.astype(z.dtype) * f, (a, b)
 
     z, (a, b) = jax.lax.scan(step, z, (stacked, gates,
@@ -544,7 +612,8 @@ def _ssm_paged_forward(params, pools, tokens, lengths, n_new, page_table,
 
 
 def ssm_paged_decode_step(params, pools, tokens, lengths, n_new, page_table,
-                          rcfg: RunConfig, *, page_size: int):
+                          rcfg: RunConfig, *, page_size: int,
+                          fused: bool = False):
     """Paged twin of the dense SSM decode: same step contract as
     :func:`paged_decode_step`, with KV pages replaced by state-snapshot
     pages. Unlike the dense cache, chunked prefill works here: padded
@@ -552,22 +621,26 @@ def ssm_paged_decode_step(params, pools, tokens, lengths, n_new, page_table,
     a whole prompt chunk."""
     z, new_pools, _ = _ssm_paged_forward(
         params, pools, tokens, lengths, n_new, page_table, rcfg,
-        page_size=page_size, commit=True)
+        page_size=page_size, commit=True, fused=fused)
     return _paged_last_logits(params, z, n_new, rcfg.model), new_pools
 
 
 def ssm_paged_verify_step(params, pools, tokens, lengths, n_new, page_table,
-                          rcfg: RunConfig, *, page_size: int):
+                          rcfg: RunConfig, *, page_size: int,
+                          fused: bool = False):
     """Speculative-verify forward for the SSM family: advances the masked
     recurrence over the pending + k drafted tokens WITHOUT touching the
     snapshot pools; returns (logits (B, S, V), pools, artifacts). After
     acceptance is known, :func:`ssm_paged_commit_step` publishes only the
     accepted prefix's snapshots — the recurrent-state analogue of
     truncating KV lengths (PR-3's snapshot-page design is what makes the
-    rollback exact: every local step's state is a snapshot candidate)."""
+    rollback exact: every local step's state is a snapshot candidate).
+    ``fused`` pre-gathers every layer's incoming state outside the scan
+    (the scan-carry pool copies dominate the verify wave exactly as they
+    did decode); the artifacts are bitwise those of the gathered path."""
     z, pools, art = _ssm_paged_forward(
         params, pools, tokens, lengths, n_new, page_table, rcfg,
-        page_size=page_size, commit=False)
+        page_size=page_size, commit=False, fused=fused)
     return _paged_all_logits(params, z, rcfg.model), pools, art
 
 
@@ -587,7 +660,8 @@ def ssm_paged_commit_step(pools, art, page_table, lengths, n_write,
 
 
 def _hybrid_paged_forward(params, state, tokens, lengths, n_new, page_table,
-                          rcfg: RunConfig, *, page_size: int, commit: bool):
+                          rcfg: RunConfig, *, page_size: int, commit: bool,
+                          fused: bool = False):
     """Shared trunk of the hybrid paged step/verify. The interleaved
     shared-attention block always writes its KV pages in-line (truncation
     rollback, like the attention family); ``commit=False`` defers only
@@ -612,7 +686,7 @@ def _hybrid_paged_forward(params, state, tokens, lengths, n_new, page_table,
                 conv_pool=state["mamba"]["conv"][li],
                 h_pool=state["mamba"]["h"][li], page_table=page_table,
                 lengths=lengths, n_new=n_new, page_size=page_size,
-                commit=commit)
+                commit=commit, fused=fused)
             z = z + f
             new_conv.append(a)
             new_h.append(b)
@@ -621,7 +695,8 @@ def _hybrid_paged_forward(params, state, tokens, lengths, n_new, page_table,
             z, npk, npv = paged_attn_block(
                 params["shared_attn"], z, cfg, kind="attn_mlp", rope=rope,
                 pk=state["attn"]["k"][s_i], pv=state["attn"]["v"][s_i],
-                page_table=page_table, lengths=lengths, n_new=n_new)
+                page_table=page_table, lengths=lengths, n_new=n_new,
+                fused=fused)
             new_k.append(npk)
             new_v.append(npv)
     attn = {"k": jnp.stack(new_k), "v": jnp.stack(new_v)}
@@ -635,27 +710,31 @@ def _hybrid_paged_forward(params, state, tokens, lengths, n_new, page_table,
 
 
 def hybrid_paged_decode_step(params, state, tokens, lengths, n_new,
-                             page_table, rcfg: RunConfig, *, page_size: int):
+                             page_table, rcfg: RunConfig, *, page_size: int,
+                             fused: bool = False):
     """Paged decode for the hybrid family: per-block composition keyed by
     block kind — mamba2 backbone layers advance state-snapshot pages,
     the interleaved shared-attention block reads/writes its KV pages —
     all against one page table / one physical page id space."""
     z, state2, _ = _hybrid_paged_forward(
         params, state, tokens, lengths, n_new, page_table, rcfg,
-        page_size=page_size, commit=True)
+        page_size=page_size, commit=True, fused=fused)
     return _paged_last_logits(params, z, n_new, rcfg.model), state2
 
 
 def hybrid_paged_verify_step(params, state, tokens, lengths, n_new,
-                             page_table, rcfg: RunConfig, *, page_size: int):
+                             page_table, rcfg: RunConfig, *, page_size: int,
+                             fused: bool = False):
     """Speculative-verify forward for the hybrid family: shared-attention
     KV is written in-line (length-truncation rollback), backbone
     snapshot-page writes are deferred to
     :func:`hybrid_paged_commit_step`. Returns (logits (B,S,V), state',
-    artifacts)."""
+    artifacts). ``fused`` routes the shared-attention segments through
+    the paged kernels (the backbone's Python loop has no scan-carry cost
+    to defer; its verify mixers already run commit-free)."""
     z, state2, art = _hybrid_paged_forward(
         params, state, tokens, lengths, n_new, page_table, rcfg,
-        page_size=page_size, commit=False)
+        page_size=page_size, commit=False, fused=fused)
     return _paged_all_logits(params, z, rcfg.model), state2, art
 
 

@@ -131,6 +131,15 @@ class CacheBackend:
             to :func:`repro.configs.registry.serve_sharding` when a mesh
             is given (TP weights + 'data'-sharded page pools) and to
             ``rcfg.sharding`` otherwise.
+        fused: route decode/prefill through the fused paged kernels
+            (``repro.kernels.ops``): page-walking attention / compact-
+            commit SSM cores plus the sort-free sampling epilogue, with
+            the page table sliced host-side to the live-page bucket
+            (power-of-two widths, so at most log2(P)+1 step traces).
+            Temperature-0 output is bitwise-identical either way. The
+            speculative ``verify`` wave gets the same treatment — fused
+            forwards and a sliced table — so spec decode keeps its edge
+            over the (equally fused) plain decode it races.
     """
 
     #: pages are state snapshots (SSM/hybrid): no intra-wave sharing, no
@@ -138,7 +147,7 @@ class CacheBackend:
     snapshot_state = False
 
     def __init__(self, rcfg: RunConfig, params, mesh=None,
-                 page_size: int = 16, sharding=None):
+                 page_size: int = 16, sharding=None, fused: bool = True):
         if mesh is not None:
             rcfg = rcfg.replace(sharding=sharding or serve_sharding())
             params = jax.device_put(
@@ -149,9 +158,11 @@ class CacheBackend:
         self.params = params
         self.mesh = mesh
         self.page_size = page_size
+        self.fused = fused
         self.alloc: Optional[PageAllocator] = None
         self._step_fn = jax.jit(
-            steps_mod.make_paged_serve_fn(rcfg, mesh, self._decode_fn()),
+            steps_mod.make_paged_serve_fn(rcfg, mesh, self._decode_fn(),
+                                          fused=fused),
             donate_argnums=(1,))
         self._verify_fn = None          # built lazily (spec decode only)
 
@@ -199,10 +210,28 @@ class CacheBackend:
         self.alloc = PageAllocator(n_pages)
         return self.shard_state(self.init_state(n_pages))
 
+    def _table_view(self, slots: SlotBatch):
+        """The page-table columns this call actually needs. Unfused
+        backends keep the full width (the dense gather re-materializes
+        every column anyway); fused backends slice to the power-of-two
+        bucket covering ``max(lengths + n_new)`` — masked-out key slots
+        contribute exactly-zero softmax mass and unwritten snapshot
+        pages are outside every slot's write window, so truncating dead
+        columns leaves all outputs bitwise-unchanged while the kernels
+        (and the ref gather on CPU) only touch live pages. Bucketing
+        keeps the jitted step at <= log2(P)+1 shape variants."""
+        table = slots.page_table
+        if not self.fused:
+            return table
+        P = table.shape[1]
+        need = int(np.max(slots.lengths + slots.n_new, initial=1))
+        p_eff = 1 << (max(-(-need // self.page_size), 1) - 1).bit_length()
+        return table[:, :min(P, p_eff)]
+
     def _apply(self, state, slots: SlotBatch, tokens):
         nxt, state = self._step_fn(
             self.params, state, np.asarray(tokens, np.int32), slots.lengths,
-            slots.n_new, slots.page_table, slots.temps, slots.top_ks,
+            slots.n_new, self._table_view(slots), slots.temps, slots.top_ks,
             slots.top_ps, slots.seeds, slots.counters)
         return state, nxt
 
@@ -246,8 +275,8 @@ class CacheBackend:
                 donate_argnums=(1,))
         acc, nxt, state = self._verify_fn(
             self.params, state, tokens, slots.lengths, slots.n_new,
-            slots.page_table, slots.temps, slots.top_ks, slots.top_ps,
-            slots.seeds, slots.counters, draft_probs)
+            self._table_view(slots), slots.temps, slots.top_ks,
+            slots.top_ps, slots.seeds, slots.counters, draft_probs)
         return state, acc, nxt
 
     def coarse_draft(self, cf: int):
@@ -305,7 +334,8 @@ class PagedKVBackend(CacheBackend):
     snapshot_state = False
 
     def _decode_fn(self):
-        return transformer.paged_decode_step
+        return functools.partial(transformer.paged_decode_step,
+                                 fused=self.fused)
 
     def init_state(self, n_pages: int):
         return transformer.init_paged_cache(self.rcfg, n_pages,
@@ -313,7 +343,9 @@ class PagedKVBackend(CacheBackend):
 
     def _verify_fns(self):
         # rollback = truncate lengths: stale KV beyond len is masked
-        return transformer.paged_verify_step, None
+        return (functools.partial(transformer.paged_verify_step,
+                                  fused=self.fused),
+                None)
 
     def init_draft_state(self, draft_rcfg: RunConfig, n_layers: int,
                          n_pages: int):
@@ -328,7 +360,8 @@ class SSMStateBackend(CacheBackend):
 
     def _decode_fn(self):
         return functools.partial(transformer.ssm_paged_decode_step,
-                                 page_size=self.page_size)
+                                 page_size=self.page_size,
+                                 fused=self.fused)
 
     def init_state(self, n_pages: int):
         return transformer.init_paged_ssm_cache(self.rcfg, n_pages)
@@ -337,7 +370,8 @@ class SSMStateBackend(CacheBackend):
         # rollback = snapshot-page restore: the verify forward defers all
         # pool writes, the fused commit publishes the accepted prefix only
         return (functools.partial(transformer.ssm_paged_verify_step,
-                                  page_size=self.page_size),
+                                  page_size=self.page_size,
+                                  fused=self.fused),
                 functools.partial(transformer.ssm_paged_commit_step,
                                   page_size=self.page_size))
 
@@ -356,7 +390,8 @@ class HybridBackend(CacheBackend):
 
     def _decode_fn(self):
         return functools.partial(transformer.hybrid_paged_decode_step,
-                                 page_size=self.page_size)
+                                 page_size=self.page_size,
+                                 fused=self.fused)
 
     def init_state(self, n_pages: int):
         return transformer.init_paged_hybrid_cache(self.rcfg, n_pages,
@@ -364,7 +399,8 @@ class HybridBackend(CacheBackend):
 
     def _verify_fns(self):
         return (functools.partial(transformer.hybrid_paged_verify_step,
-                                  page_size=self.page_size),
+                                  page_size=self.page_size,
+                                  fused=self.fused),
                 functools.partial(transformer.hybrid_paged_commit_step,
                                   page_size=self.page_size))
 
@@ -376,18 +412,21 @@ class HybridBackend(CacheBackend):
 
 
 def make_backend(rcfg: RunConfig, params, mesh=None,
-                 page_size: int = 16, sharding=None) -> CacheBackend:
+                 page_size: int = 16, sharding=None,
+                 fused: bool = True) -> CacheBackend:
     """The only family dispatch in the serve stack: everything downstream
     (scheduler, engine) speaks the CacheBackend protocol. ``mesh`` /
-    ``sharding`` make the backend SPMD (see :class:`CacheBackend`)."""
+    ``sharding`` make the backend SPMD (see :class:`CacheBackend`);
+    ``fused`` selects the fused paged-decode kernels (bitwise-identical
+    at temperature 0 — see :class:`CacheBackend`)."""
     cfg = rcfg.model
     kind = block_kind(cfg)
     if cfg.family == "decoder" and kind in ("attn_mlp", "attn_moe"):
-        return PagedKVBackend(rcfg, params, mesh, page_size, sharding)
+        return PagedKVBackend(rcfg, params, mesh, page_size, sharding, fused)
     if cfg.family == "ssm" and kind in ("mamba1", "mamba2"):
-        return SSMStateBackend(rcfg, params, mesh, page_size, sharding)
+        return SSMStateBackend(rcfg, params, mesh, page_size, sharding, fused)
     if cfg.family == "hybrid":
-        return HybridBackend(rcfg, params, mesh, page_size, sharding)
+        return HybridBackend(rcfg, params, mesh, page_size, sharding, fused)
     raise NotImplementedError(
         f"no CacheBackend for family={cfg.family!r} (kind={kind!r}): "
         "encoder models have no autoregressive decode, and encdec needs "

@@ -90,7 +90,8 @@ class ServeEngine:
                  share_prefix: bool = True, sharding=None,
                  detokenize: Optional[Callable] = None,
                  spec: Optional[SpecConfig] = None,
-                 prefix_cache_path: Optional[str] = None):
+                 prefix_cache_path: Optional[str] = None,
+                 fused: bool = True):
         """Args:
             rcfg / params: model config and weights.
             mesh: optional ('data', 'model') ``jax.sharding.Mesh`` —
@@ -105,6 +106,10 @@ class ServeEngine:
                 rendering each id as ``⟨id⟩``).
             spec: SpecConfig enabling speculative decoding.
             prefix_cache_path: restore a persisted prefix cache npz.
+            fused: fused paged-decode kernels (default; bitwise-identical
+                greedy output) vs the gathered dense-view decode path —
+                the benchmarks build one engine of each for the
+                ``decode_*_fused`` speedup rows.
         """
         self.rcfg = rcfg
         self.params = params
@@ -114,7 +119,7 @@ class ServeEngine:
         self.scheduler = Scheduler(
             rcfg, params, max_batch=max_batch, page_size=page_size,
             max_len=self.max_len, mesh=mesh, sharding=sharding,
-            share_prefix=share_prefix, spec=spec)
+            share_prefix=share_prefix, spec=spec, fused=fused)
         self.backend = self.scheduler.backend
         # dense-cache decode fn: the serial-forward oracle and the
         # apples-to-apples comparison probe (throughput_probe(paged=False));
@@ -256,12 +261,17 @@ class ServeEngine:
     # -- probes -------------------------------------------------------------
 
     def throughput_probe(self, batch: int, steps: int = 8,
-                         paged: bool = True) -> float:
+                         paged: bool = True,
+                         table_pages: int = 0) -> float:
         """tokens/sec of steady-state decode at the given batch.
         ``paged=False`` measures the dense-cache decode step instead (the
-        seed design) for apples-to-apples comparison."""
+        seed design) for apples-to-apples comparison. ``table_pages``
+        widens each slot's page table to the given production width and
+        starts decode at a quarter of that context depth, so
+        fused-vs-gathered probes measure realistic mid-sequence decode
+        rather than an empty-table best case."""
         if paged:
-            return self._paged_probe(batch, steps)
+            return self._paged_probe(batch, steps, table_pages)
         cache = transformer.init_cache(self.rcfg, batch, self.max_len)
         tok = jnp.ones((batch, 1), jnp.int32)
         tok, cache = self._decode(self.params, cache, tok)  # compile
@@ -272,21 +282,26 @@ class ServeEngine:
         jax.block_until_ready(tok)
         return batch * steps / (time.time() - t0)
 
-    def _scratch_table(self, batch: int, n_tokens: int) -> np.ndarray:
+    def _scratch_table(self, batch: int, n_tokens: int,
+                       min_pages: int = 0) -> np.ndarray:
         """Page table giving every slot n_tokens of capacity (host-only;
         page 0 stays the scratch page)."""
-        per = max(1, -(-n_tokens // self.scheduler.page_size))
+        per = max(min_pages, 1, -(-n_tokens // self.scheduler.page_size))
         return np.asarray(
             1 + np.arange(batch * per).reshape(batch, per), np.int32)
 
-    def _paged_probe(self, batch: int, steps: int) -> float:
+    def _paged_probe(self, batch: int, steps: int,
+                     table_pages: int = 0) -> float:
         """Steady-state paged decode at full occupancy on a probe-local
         scratch state (reuses the backend's compiled step; under a mesh
         the scratch pools are placed like the engine's own)."""
-        table = self._scratch_table(batch, steps + 1)
+        ps = self.scheduler.page_size
+        start = (table_pages * ps) // 4 if table_pages else 0
+        table = self._scratch_table(batch, start + steps + 1, table_pages)
         state = self.backend.shard_state(self.backend.init_state(
             self.backend.pool_pages(1 + table.size)))
-        slots = SlotBatch.greedy(batch, table)
+        slots = SlotBatch.greedy(
+            batch, table, lengths=np.full((batch,), start, np.int32))
         tok = np.ones((batch, 1), np.int32)
         state, tok = self.backend.step(state, slots, tok)   # compile
         jax.block_until_ready(tok)

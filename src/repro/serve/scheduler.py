@@ -112,7 +112,7 @@ class Scheduler:
                  page_size: int = 16, max_len: int = 0, n_pages: int = 0,
                  mesh=None, sharding=None, share_prefix: bool = True,
                  backend: Optional[CacheBackend] = None,
-                 spec: Optional[SpecConfig] = None):
+                 spec: Optional[SpecConfig] = None, fused: bool = True):
         """Args:
             rcfg / params: model config and weights (under a mesh the
                 backend re-places the weights tensor-parallel).
@@ -130,6 +130,8 @@ class Scheduler:
                 ``make_backend``.
             spec: SpecConfig to enable coarse-propagator speculative
                 decoding.
+            fused: forwarded to ``make_backend`` — fused paged-decode
+                kernels (default) vs the gathered dense-view path.
         """
         self.rcfg, self.params = rcfg, params
         self.max_len = max_len or min(rcfg.model.max_seq_len, 4096)
@@ -137,7 +139,7 @@ class Scheduler:
         self.max_batch = max_batch
         self.backend = backend if backend is not None else \
             make_backend(rcfg, params, mesh=mesh, page_size=page_size,
-                         sharding=sharding)
+                         sharding=sharding, fused=fused)
         assert self.backend.page_size == page_size
         self.pages_per_slot = pages_needed(self.max_len, page_size)
         # default pool: every slot can hold a max_len sequence, + scratch;

@@ -81,6 +81,32 @@ _MESH_SCRIPT = textwrap.dedent("""
                 out[f"{name}_pool_dp_sharded"] = any(
                     len(s) > 1 and s[1] == "data" for s in specs)
 
+    # fused paged-decode path under the 2-device mesh (ISSUE 6): the
+    # engines above already run fused by default and match the oracle;
+    # here an explicit fused/gathered pair under both splits pins the
+    # flag itself, so a silent fused=False regression can't hide behind
+    # oracle equality
+    out["fused_flag"] = []
+    out["fused_mesh_mismatch"] = []
+    for dp, tp in ((2, 1), (1, 2)):
+        mesh = jax.make_mesh((dp, tp), ("data", "model"))
+        for name in ("decoder", "ssm_mamba1"):
+            rcfg = family_rcfg(name)
+            params = transformer.init_model(
+                jax.random.PRNGKey(sum(map(ord, name)) % 1000), rcfg)
+            kw = dict(max_len=MAX_LEN, max_batch=2, page_size=4)
+            ef = ServeEngine(rcfg, params, mesh=mesh, **kw)
+            eg = ServeEngine(rcfg, params, mesh=mesh, fused=False, **kw)
+            out["fused_flag"].append(
+                [bool(ef.scheduler.backend.fused),
+                 bool(eg.scheduler.backend.fused)])
+            for i, (a, b) in enumerate(zip(ef.generate(reqs()),
+                                           eg.generate(reqs()))):
+                if not np.array_equal(a.output, b.output):
+                    out["fused_mesh_mismatch"].append(
+                        [name, f"dp{dp}xtp{tp}", i,
+                         list(map(int, a.output)), list(map(int, b.output))])
+
     # spec decode under tp: greedy spec == greedy plain, bitwise — ssm
     # covers the stacked snapshot-pool commit constraints
     # (ssm_paged_commit_step) inside the SPMD verify call, hybrid the
@@ -131,6 +157,8 @@ def test_mesh_sharded_decode_matches_dense_oracle():
     out = _run_mesh_subprocess()
     assert out["devices"] == 2
     assert out["mismatch"] == [], out["mismatch"]
+    assert out["fused_mesh_mismatch"] == [], out["fused_mesh_mismatch"]
+    assert all(f == [True, False] for f in out["fused_flag"])
     assert out["spec_drafted"] > 0          # spec decode actually drafted
     for name in ("decoder", "ssm_mamba1", "hybrid"):
         assert out[f"{name}_dp2tp1"] == [2, 1]
