@@ -1,0 +1,162 @@
+"""Poisson-arrival traffic benchmark: goodput under offered-load sweeps.
+
+The other serve benchmarks measure closed-loop capacity (drain a queue as
+fast as possible); this one measures the *open-loop* overload behavior
+ISSUE 7 added — requests arrive on a Poisson clock the engine does not
+control, carry priorities and TTFT/TPOT targets, and the scheduler must
+degrade gracefully when the offered load exceeds capacity (skip-ahead
+admission, preemption, per-request failure) instead of crashing.
+
+Reports one gated row:
+
+  serve/traffic_goodput   us_per_call = p50 TTFT (microseconds) of the
+                          under-capacity leg. Derived counters:
+                            goodput_lo / goodput_hi  fraction of arrivals
+                              that finished AND met their targets at
+                              ~0.5x and ~3x measured capacity
+                            p50_ttft_ms / p99_ttft_ms / p50_tpot_ms /
+                              p99_tpot_ms  latency tails (lo leg)
+                            cap_rps / rate_lo / rate_hi  measured
+                              capacity + offered rates (requests/s)
+                            rejected / preempted  overload-machinery
+                              activity across both legs
+                            lost  requests neither finished nor failed
+                              (MUST be 0: nothing vanishes)
+
+The run itself raises when lost != 0 or when the under-capacity leg's
+goodput drops below 0.9 — a lightly loaded engine that misses generous
+SLOs is a scheduling regression, not noise.
+``benchmarks.check_regression`` re-asserts both from the emitted JSON
+(check_traffic_goodput) so a stale CI artifact cannot pass the gate.
+"""
+from __future__ import annotations
+
+import time
+
+import jax
+import numpy as np
+
+from benchmarks.common import CSV
+from repro.models import transformer
+from repro.serve.engine import Request, ServeEngine
+from benchmarks.bench_serve import serve_rcfg
+
+MAX_LEN = 64
+BATCH = 4
+PAGE = 8
+NEW_TOKENS = 8
+N_REQS = 24               # arrivals per leg
+TTFT_TARGET = 2.0         # generous targets: a healthy engine at 0.5x
+TPOT_TARGET = 0.25        # capacity clears them easily on any CI host
+GOODPUT_FLOOR = 0.9
+
+
+N_POOL_PAGES = 7          # < pages_needed(MAX_LEN): a max_len request is
+                          # rejected at submit; ~2-3 normal requests
+                          # co-reside, so the hi leg hits page pressure
+
+
+def _mk_engine(rcfg, params) -> ServeEngine:
+    return ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=BATCH,
+                       page_size=PAGE, n_pages=1 + N_POOL_PAGES)
+
+
+def _requests(rng, n: int, oversized: bool = False):
+    reqs = []
+    for i in range(n):
+        prompt = rng.integers(0, 256, size=int(rng.integers(8, 17))).astype(
+            np.int32)
+        reqs.append(Request(prompt=prompt, max_new_tokens=NEW_TOKENS,
+                            priority=i % 2, ttft_target_s=TTFT_TARGET,
+                            tpot_target_s=TPOT_TARGET))
+    if oversized:
+        # can never fit the pool: must be rejected alone, not crash the leg
+        reqs[n // 2] = Request(
+            prompt=rng.integers(0, 256, size=MAX_LEN - 1).astype(np.int32),
+            max_new_tokens=MAX_LEN, priority=0,
+            ttft_target_s=TTFT_TARGET, tpot_target_s=TPOT_TARGET)
+    return reqs
+
+
+def _measure_capacity(eng: ServeEngine, rng) -> float:
+    """Closed-loop requests/s on warm traces: drain a full-batch queue
+    back-to-back — the denominator the offered-load sweep scales."""
+    reqs = _requests(rng, 2 * BATCH)
+    t0 = time.perf_counter()
+    eng.generate(reqs)
+    return len(reqs) / (time.perf_counter() - t0)
+
+
+def _run_leg(eng: ServeEngine, reqs, rate: float, rng):
+    """Open-loop: submit each request at its Poisson arrival time while
+    the scheduler steps in between; returns the finished
+    ScheduledRequests paired with their arrival-order index."""
+    sched = eng.scheduler
+    eng._validate(reqs)
+    gaps = rng.exponential(1.0 / rate, size=len(reqs))
+    arrivals = np.cumsum(gaps)
+    handles = [None] * len(reqs)
+    i = 0
+    t0 = time.perf_counter()
+    while i < len(reqs) or sched.queue or sched.n_active:
+        now = time.perf_counter() - t0
+        while i < len(reqs) and arrivals[i] <= now:
+            handles[i] = eng._submit_one(reqs[i])
+            i += 1
+        if not sched.step() and i < len(reqs):
+            # idle engine, next arrival still in the future
+            time.sleep(max(arrivals[i] - (time.perf_counter() - t0), 0.0))
+    return handles
+
+
+def run(csv: CSV):
+    rcfg = serve_rcfg()
+    params = transformer.init_model(jax.random.PRNGKey(0), rcfg)
+    rng = np.random.default_rng(0)
+
+    eng = _mk_engine(rcfg, params)
+    eng.generate(_requests(rng, BATCH))          # compile the hot traces
+    cap = _measure_capacity(eng, rng)
+
+    stats = {"rejected": 0, "preempted": 0}
+    legs = {}
+    for leg, mult in (("lo", 0.5), ("hi", 3.0)):
+        leg_eng = _mk_engine(rcfg, params)       # fresh pool per leg
+        leg_eng.generate(_requests(rng, BATCH))  # warm (shares jit cache)
+        sched = leg_eng.scheduler
+        for k in sched.stats:
+            sched.stats[k] = type(sched.stats[k])(0)
+        reqs = _requests(rng, N_REQS, oversized=(leg == "hi"))
+        done = _run_leg(leg_eng, reqs, mult * cap, rng)
+        lost = sum(1 for h in done if not h.done)
+        goodput = sum(h.slo_met for h in done) / len(done)
+        legs[leg] = dict(goodput=goodput, lost=lost, done=done)
+        stats["rejected"] += sched.stats["requests_rejected"]
+        stats["preempted"] += sched.stats["preemptions"]
+        if lost:
+            raise RuntimeError(
+                f"traffic leg {leg}: {lost} requests neither finished nor "
+                f"failed — the scheduler dropped them on the floor")
+
+    if legs["lo"]["goodput"] < GOODPUT_FLOOR:
+        raise RuntimeError(
+            f"under-capacity goodput {legs['lo']['goodput']:.2f} below "
+            f"{GOODPUT_FLOOR} — a lightly loaded engine must meet "
+            f"generous SLOs")
+
+    ttfts = np.asarray([h.ttft for h in legs["lo"]["done"]
+                        if h.ttft is not None])
+    tpots = np.asarray([h.tpot for h in legs["lo"]["done"]
+                        if h.tpot is not None])
+    csv.add(
+        "serve/traffic_goodput", float(np.percentile(ttfts, 50)) * 1e6,
+        f"goodput_lo={legs['lo']['goodput']:.3f};"
+        f"goodput_hi={legs['hi']['goodput']:.3f};"
+        f"p50_ttft_ms={np.percentile(ttfts, 50) * 1e3:.1f};"
+        f"p99_ttft_ms={np.percentile(ttfts, 99) * 1e3:.1f};"
+        f"p50_tpot_ms={np.percentile(tpots, 50) * 1e3:.2f};"
+        f"p99_tpot_ms={np.percentile(tpots, 99) * 1e3:.2f};"
+        f"cap_rps={cap:.1f};rate_lo={0.5 * cap:.1f};"
+        f"rate_hi={3.0 * cap:.1f};rejected={stats['rejected']};"
+        f"preempted={stats['preempted']};"
+        f"lost={legs['lo']['lost'] + legs['hi']['lost']}")

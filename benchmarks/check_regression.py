@@ -58,6 +58,11 @@ REQUIRED_ROWS = (
     "serve/decode_attn_fused",
     "serve/decode_ssm_fused",
     "serve/decode_hybrid_fused",
+    # overload-safe scheduling (PR-7): Poisson-arrival goodput. Losing
+    # this row means the SLO/preemption machinery stopped being measured
+    # under open-loop load (check_traffic_goodput re-asserts the floor
+    # and that no request was silently dropped).
+    "serve/traffic_goodput",
 )
 
 
@@ -160,6 +165,40 @@ def check_fused_speedup(cur: dict) -> list:
     return failures
 
 
+def check_traffic_goodput(cur: dict, floor: float = 0.5) -> list:
+    """The Poisson-traffic row must show (a) zero lost requests — under
+    overload every arrival either finishes or fails with an error, none
+    may silently vanish — and (b) under-capacity goodput above a floor.
+    bench_traffic raises in-run at 0.9; the JSON gate re-asserts a looser
+    0.5 so a stale artifact or a pathological host still fails."""
+    rec = cur.get("serve/traffic_goodput")
+    if rec is None:
+        return []  # absence is check_required_rows' problem
+    c = _counters(rec)
+    failures = []
+    if c.get("lost") != 0:
+        failures.append(
+            f"serve/traffic_goodput: lost={c.get('lost')} requests "
+            f"neither finished nor failed (must be 0)")
+    else:
+        print("ok    serve/traffic_goodput: lost=0 (every arrival "
+              "accounted for)")
+    lo = c.get("goodput_lo")
+    if lo is None:
+        failures.append(
+            "serve/traffic_goodput: derived field lacks goodput_lo=")
+    elif lo < floor:
+        failures.append(
+            f"serve/traffic_goodput: under-capacity goodput {lo} below "
+            f"floor {floor}")
+    else:
+        print(f"ok    serve/traffic_goodput: goodput_lo {lo} >= {floor} "
+              f"(goodput_hi {c.get('goodput_hi')}, "
+              f"rejected {c.get('rejected')}, "
+              f"preempted {c.get('preempted')})")
+    return failures
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -188,6 +227,7 @@ def main(argv=None) -> int:
     failures += check_prefix_sharing(cur)
     failures += check_fused_speedup(cur)
     failures += check_spec_accept(cur)
+    failures += check_traffic_goodput(cur)
     failures += check_required_rows(
         cur, prefixes if args.required == "gated" else None)
     for name, brec in sorted(base.items()):

@@ -9,6 +9,7 @@
   bench_kernels        (ours)     Pallas kernels vs oracles
   bench_roofline       (ours)     dry-run roofline aggregation
   bench_serve          (ours)     continuous-batching serve engine
+  bench_traffic        (ours)     Poisson-arrival goodput under overload
   bench_spec           (ours)     coarse-propagator speculative decoding
 
 Prints ``name,us_per_call,derived`` CSV; ``--emit-json PATH`` also writes
@@ -29,10 +30,11 @@ sys.path.insert(0, "src")
 from benchmarks.common import CSV  # noqa: E402
 
 ALL = ("kernels", "roofline", "perf_report", "scaling", "dp_lp", "serve",
-       "spec", "convergence", "indicator", "buffer", "finetune_delta")
+       "traffic", "spec", "convergence", "indicator", "buffer",
+       "finetune_delta")
 
 FAST = ("kernels", "roofline", "perf_report", "scaling", "dp_lp", "serve",
-        "spec")
+        "traffic", "spec")
 
 
 def main(argv=None) -> None:

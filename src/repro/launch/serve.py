@@ -2,8 +2,10 @@
 
   PYTHONPATH=src python -m repro.launch.serve --arch qwen3_1p7b \
       [--reduced] [--requests 12] [--new-tokens 8] \
-      [--max-batch 4] [--page-size 16] [--max-len 256] \
+      [--max-batch 4] [--page-size 16] [--max-len 256] [--n-pages 0] \
       [--temperature 0.8] [--top-k 40] [--top-p 0.95] \
+      [--priority 0,1] [--ttft-slo 0.5] [--tpot-slo 0.1] \
+      [--preempt-policy auto] \
       [--shared-prefix-len 0] [--no-share-prefix] [--stream] \
       [--spec-cf 4 --spec-k 4] [--stats] [--mesh 1,2]
 
@@ -16,7 +18,15 @@ behind the CacheBackend protocol (repro.serve.cache). ``--spec-cf``
 turns on coarse-propagator speculative decoding (repro.serve.spec): the
 paper's coarse grid — every cf-th layer, ODE step rescaled — drafts
 ``--spec-k`` tokens per wave and the full model verifies them in one
-call (greedy output is bitwise identical to plain decode). ``--mesh
+call (greedy output is bitwise identical to plain decode). The
+scheduler is overload-safe and SLO-aware (docs/scheduling.md):
+``--priority`` cycles requests through a priority list (smaller = more
+urgent; urgent requests skip ahead and may preempt under pool
+pressure), ``--ttft-slo`` / ``--tpot-slo`` attach latency targets
+(reported as SLO attainment, never enforced by dropping), and
+``--n-pages`` shrinks the page pool to provoke the overload machinery —
+an unservable request prints its ``error`` instead of crashing the
+run. ``--mesh
 dp,tp`` serves mesh-sharded (docs/sharding.md): weights Megatron-TP over
 'model', page pools over 'data' (registry.serve_sharding), one jitted
 SPMD call per wave — temp-0 output stays token-for-token identical to
@@ -43,6 +53,22 @@ def main(argv=None):
     ap.add_argument("--page-size", type=int, default=16,
                     help="state-page size (tokens)")
     ap.add_argument("--max-len", type=int, default=64)
+    ap.add_argument("--n-pages", type=int, default=0,
+                    help="page-pool size incl. scratch (0 = every slot "
+                         "fits max_len; small pools exercise rejection/"
+                         "skip-ahead/preemption)")
+    ap.add_argument("--priority", default="0",
+                    help="comma list cycled over requests, smaller = more "
+                         "urgent (e.g. 0,2 alternates urgent/background)")
+    ap.add_argument("--ttft-slo", type=float, default=0.0,
+                    help="> 0 attaches a time-to-first-token target (s) "
+                         "to every request; reported, never enforced")
+    ap.add_argument("--tpot-slo", type=float, default=0.0,
+                    help="> 0 attaches a per-output-token target (s)")
+    ap.add_argument("--preempt-policy", default="auto",
+                    choices=["auto", "spill", "recompute", "off"],
+                    help="how urgent requests take pages from running "
+                         "ones under pressure (docs/scheduling.md)")
     ap.add_argument("--seed", type=int, default=0)
     ap.add_argument("--ckpt", default="", help="restore params from here")
     ap.add_argument("--temperature", type=float, default=0.0,
@@ -111,9 +137,9 @@ def main(argv=None):
         if args.spec_cf > 0 else None
     engine = ServeEngine(rcfg, params, mesh=mesh, max_len=args.max_len,
                          max_batch=args.max_batch,
-                         page_size=args.page_size,
+                         page_size=args.page_size, n_pages=args.n_pages,
                          share_prefix=not args.no_share_prefix,
-                         spec=spec)
+                         spec=spec, preempt_policy=args.preempt_policy)
     print(f"engine: paged continuous-batching via "
           f"{type(engine.backend).__name__}"
           + (f" + spec decode (cf={spec.cf}, k={spec.k}, "
@@ -124,13 +150,17 @@ def main(argv=None):
     rng = np.random.default_rng(args.seed)
     common = rng.integers(0, rcfg.model.vocab_size,
                           size=args.shared_prefix_len).astype(np.int32)
+    priorities = [int(p) for p in args.priority.split(",")]
     reqs = [Request(prompt=np.concatenate([common, rng.integers(
                 0, rcfg.model.vocab_size,
                 size=int(rng.integers(4, 12))).astype(np.int32)]),
                     max_new_tokens=args.new_tokens,
                     temperature=args.temperature, top_k=args.top_k,
-                    top_p=args.top_p, seed=int(rng.integers(0, 2**31)))
-            for _ in range(args.requests)]
+                    top_p=args.top_p, seed=int(rng.integers(0, 2**31)),
+                    priority=priorities[i % len(priorities)],
+                    ttft_target_s=args.ttft_slo or None,
+                    tpot_target_s=args.tpot_slo or None)
+            for i in range(args.requests)]
     if args.stream:
         first, rest = reqs[0], reqs[1:]
         stream = engine.submit(first, stream=True)
@@ -146,10 +176,14 @@ def main(argv=None):
     else:
         out = engine.generate(reqs)
     for i, r in enumerate(out):
+        if r.error is not None:
+            print(f"request {i}: prompt[{len(r.prompt)}] FAILED: {r.error}")
+            continue
         lat = f" ttft={r.ttft_s*1e3:.0f}ms lat={r.latency_s*1e3:.0f}ms" \
             if r.ttft_s is not None else ""
+        prio = f" prio={r.priority}" if len(priorities) > 1 else ""
         print(f"request {i}: prompt[{len(r.prompt)}] -> "
-              f"{list(map(int, r.output))}{lat}")
+              f"{list(map(int, r.output))}{lat}{prio}")
     thr = engine.scheduler.throughput()
     st = engine.scheduler.stats
     print(f"aggregate: prefill {thr['prefill_tok_s']:.1f} tok/s, "
@@ -159,6 +193,18 @@ def main(argv=None):
     print(f"prefix sharing: {st['shared_tokens']} prompt tokens "
           f"reused, {st['pages_shared']} pages shared, "
           f"{st['pages_allocated']} pages allocated")
+    if st["requests_failed"] or st["preemptions"]:
+        print(f"overload: {st['requests_rejected']} rejected, "
+              f"{st['requests_failed']} failed, "
+              f"{st['preemptions']} preemptions "
+              f"({st['pages_spilled']} pages spilled, "
+              f"{st['pages_restored']} restored, "
+              f"{st['preempt_recomputes']} recompute resumes)")
+    if args.ttft_slo or args.tpot_slo:
+        ok = sum(r.slo_met for r in out)
+        print(f"SLO attainment: {ok}/{len(out)} requests met "
+              f"ttft<={args.ttft_slo or float('inf'):g}s "
+              f"tpot<={args.tpot_slo or float('inf'):g}s")
     if spec:
         es = engine.stats
         print(f"spec decode: {es['tokens_accepted']}/"

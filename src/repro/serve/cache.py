@@ -327,6 +327,43 @@ class CacheBackend:
             return state, dst
         return copy_state_page(state, page, dst), dst
 
+    # -- preemption: spill / restore ----------------------------------------
+    # The device half of scheduler preemption (docs/scheduling.md): a
+    # victim slot's live pages are gathered to host memory, its refcounts
+    # released, and the contents scattered back into freshly allocated
+    # pages when the request resumes — the same per-page gather/scatter
+    # PrefixCache.save/load run for trie persistence, so sharded pools
+    # spill and restore unchanged (page ids are global, jax moves the
+    # bytes).
+
+    def spill(self, state, pages):
+        """Read the given physical pages out of every pool leaf (page
+        axis 1 by convention) into host memory. Returns the per-leaf
+        page contents in ``jax.tree`` order — the ``restore``
+        payload."""
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        return [np.asarray(leaf[:, idx]) for leaf in jax.tree.leaves(state)]
+
+    def restore(self, state, pages, leaves):
+        """Scatter previously spilled page contents into ``pages``
+        (freshly allocated ids, same order/count as the ``spill`` call)
+        and re-place the pools on the mesh. Returns the new state; the
+        restored pages are bit-identical to the spilled ones, so a
+        resumed greedy request decodes exactly what it would have
+        undisturbed."""
+        idx = jnp.asarray(np.asarray(pages, np.int32))
+        flat, treedef = jax.tree.flatten(state)
+        flat = [leaf.at[:, idx].set(jnp.asarray(d, leaf.dtype))
+                for leaf, d in zip(flat, leaves)]
+        return self.shard_state(jax.tree.unflatten(treedef, flat))
+
+    def page_nbytes(self, state) -> int:
+        """Host bytes one physical page occupies across every pool leaf
+        — the restore-cost side of the scheduler's recompute-vs-restore
+        preemption model."""
+        return sum(leaf.dtype.itemsize * leaf.size // leaf.shape[1]
+                   for leaf in jax.tree.leaves(state))
+
 
 class PagedKVBackend(CacheBackend):
     """Attention decoders (attn_mlp / attn_moe): block/paged KV cache."""

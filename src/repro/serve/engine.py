@@ -56,6 +56,16 @@ class Request:
     by ``top_k`` (0 disables) then ``top_p`` (1 disables). ``seed`` names
     the request's private RNG stream — the same (prompt, sampling params,
     seed) yields the same tokens in any slot and any batch composition.
+
+    SLO fields: ``priority`` orders admission (smaller = more urgent,
+    nice-style; urgent requests may preempt strictly-less-urgent running
+    ones under pool pressure) and ``ttft_target_s`` / ``tpot_target_s``
+    declare latency targets used for deadline-slack ordering and goodput
+    reporting (``slo_met``) — targets never cause a request to be dropped.
+    A request the engine cannot serve fails ALONE: ``error`` is set and
+    ``output`` is empty, while every other request keeps decoding
+    (failure isolation — nothing in the serve path raises engine-wide
+    for a per-request condition).
     """
     prompt: np.ndarray           # (T,) int32
     max_new_tokens: int = 16
@@ -64,9 +74,28 @@ class Request:
     top_k: int = 0
     top_p: float = 1.0
     seed: int = 0
+    priority: int = 0
+    ttft_target_s: Optional[float] = None
+    tpot_target_s: Optional[float] = None
     output: Optional[np.ndarray] = None
-    ttft_s: Optional[float] = None      # time to first token
+    ttft_s: Optional[float] = None      # None if never prefilled
     latency_s: Optional[float] = None
+    tpot_s: Optional[float] = None      # mean s/token after the first
+    error: Optional[str] = None         # set iff the request failed
+
+    @property
+    def slo_met(self) -> bool:
+        """Whether the finished request met its declared targets (absent
+        targets pass trivially; failed requests never count)."""
+        if self.error is not None:
+            return False
+        if self.ttft_target_s is not None and (
+                self.ttft_s is None or self.ttft_s > self.ttft_target_s):
+            return False
+        if self.tpot_target_s is not None and (
+                self.tpot_s is not None and self.tpot_s > self.tpot_target_s):
+            return False
+        return True
 
 
 def default_detokenize(ids) -> str:
@@ -87,11 +116,11 @@ class ServeEngine:
 
     def __init__(self, rcfg: RunConfig, params, mesh=None,
                  max_len: int = 0, max_batch: int = 8, page_size: int = 16,
-                 share_prefix: bool = True, sharding=None,
+                 n_pages: int = 0, share_prefix: bool = True, sharding=None,
                  detokenize: Optional[Callable] = None,
                  spec: Optional[SpecConfig] = None,
                  prefix_cache_path: Optional[str] = None,
-                 fused: bool = True):
+                 fused: bool = True, preempt_policy: str = "auto"):
         """Args:
             rcfg / params: model config and weights.
             mesh: optional ('data', 'model') ``jax.sharding.Mesh`` —
@@ -100,8 +129,11 @@ class ServeEngine:
                 either way (see docs/sharding.md). ``sharding``
                 optionally overrides the default
                 :func:`repro.configs.registry.serve_sharding` rules.
-            max_len / max_batch / page_size / share_prefix: forwarded to
-                the :class:`~repro.serve.scheduler.Scheduler`.
+            max_len / max_batch / page_size / n_pages / share_prefix:
+                forwarded to the :class:`~repro.serve.scheduler.Scheduler`
+                (``n_pages`` sizes the page pool; 0 = every slot can hold
+                a max_len sequence — smaller pools exercise overload
+                handling: rejection, skip-ahead, preemption).
             detokenize: ids -> text callable for streaming (defaults to
                 rendering each id as ``⟨id⟩``).
             spec: SpecConfig enabling speculative decoding.
@@ -110,6 +142,9 @@ class ServeEngine:
                 greedy output) vs the gathered dense-view decode path —
                 the benchmarks build one engine of each for the
                 ``decode_*_fused`` speedup rows.
+            preempt_policy: 'auto' (recompute-vs-restore cost model),
+                'spill' / 'recompute' (force one side), or 'off' (never
+                preempt) — see docs/scheduling.md.
         """
         self.rcfg = rcfg
         self.params = params
@@ -118,8 +153,9 @@ class ServeEngine:
         self.detokenize = detokenize or default_detokenize
         self.scheduler = Scheduler(
             rcfg, params, max_batch=max_batch, page_size=page_size,
-            max_len=self.max_len, mesh=mesh, sharding=sharding,
-            share_prefix=share_prefix, spec=spec, fused=fused)
+            max_len=self.max_len, n_pages=n_pages, mesh=mesh,
+            sharding=sharding, share_prefix=share_prefix, spec=spec,
+            fused=fused, preempt_policy=preempt_policy)
         self.backend = self.scheduler.backend
         # dense-cache decode fn: the serial-forward oracle and the
         # apples-to-apples comparison probe (throughput_probe(paged=False));
@@ -190,17 +226,24 @@ class ServeEngine:
                     or not 0.0 < r.top_p <= 1.0:
                 raise ValueError("bad sampling params: need temperature "
                                  ">= 0, top_k >= 0, top_p in (0, 1]")
+            for target in (r.ttft_target_s, r.tpot_target_s):
+                if target is not None and target <= 0:
+                    raise ValueError("SLO targets must be > 0 (None "
+                                     "disables)")
 
     def _submit_one(self, r: Request):
         return self.scheduler.submit_request(
             r.prompt, r.max_new_tokens, r.eos_id, temperature=r.temperature,
-            top_k=r.top_k, top_p=r.top_p, seed=r.seed)
+            top_k=r.top_k, top_p=r.top_p, seed=r.seed, priority=r.priority,
+            ttft_target_s=r.ttft_target_s, tpot_target_s=r.tpot_target_s)
 
     @staticmethod
     def _finalize(r: Request, fin) -> Request:
         r.output = np.asarray(fin.out, np.int32)
         r.ttft_s = fin.ttft
         r.latency_s = fin.latency
+        r.tpot_s = fin.tpot
+        r.error = fin.error
         return r
 
     def generate(self, requests: List[Request]) -> List[Request]:
@@ -252,7 +295,8 @@ class ServeEngine:
                     yield int(tok), piece
                 if req.done:
                     break
-                sched.step()     # raises if the pool can never serve rid
+                sched.step()     # never raises for pool pressure: an
+                # unservable request finishes with req.error set instead
         finally:
             if not req.done:
                 sched.cancel(req)
@@ -276,11 +320,13 @@ class ServeEngine:
         tok = jnp.ones((batch, 1), jnp.int32)
         tok, cache = self._decode(self.params, cache, tok)  # compile
         jax.block_until_ready(tok)
-        t0 = time.time()
+        # perf_counter, matching the scheduler's clock: time.time() can
+        # jump under NTP adjustments and mis-measure short probes
+        t0 = time.perf_counter()
         for _ in range(steps):
             tok, cache = self._decode(self.params, cache, tok)
         jax.block_until_ready(tok)
-        return batch * steps / (time.time() - t0)
+        return batch * steps / (time.perf_counter() - t0)
 
     def _scratch_table(self, batch: int, n_tokens: int,
                        min_pages: int = 0) -> np.ndarray:
@@ -305,12 +351,12 @@ class ServeEngine:
         tok = np.ones((batch, 1), np.int32)
         state, tok = self.backend.step(state, slots, tok)   # compile
         jax.block_until_ready(tok)
-        t0 = time.time()
+        t0 = time.perf_counter()
         for _ in range(steps):
             slots.lengths = slots.lengths + 1
             state, tok = self.backend.step(state, slots, tok)
         jax.block_until_ready(tok)
-        return batch * steps / (time.time() - t0)
+        return batch * steps / (time.perf_counter() - t0)
 
     def prefill_probe(self, prompt_len: int, batch: int = 1,
                       iters: int = 3) -> float:

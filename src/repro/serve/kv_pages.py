@@ -38,6 +38,7 @@ work on sharded pools unchanged.
 """
 from __future__ import annotations
 
+import dataclasses
 from typing import Dict, List, Optional, Tuple
 
 SCRATCH_PAGE = 0
@@ -46,6 +47,21 @@ SCRATCH_PAGE = 0
 def pages_needed(n_tokens: int, page_size: int) -> int:
     """Physical pages required to hold n_tokens."""
     return -(-max(int(n_tokens), 0) // page_size)
+
+
+@dataclasses.dataclass
+class SpilledPages:
+    """Host-memory copy of a preempted slot's live pages.
+
+    The device half is ``CacheBackend.spill`` / ``restore`` (the same
+    page gather/scatter machinery :meth:`PrefixCache.save` / ``load``
+    use for trie pages). ``length`` is the token count the pages cover
+    — the slot's ``lengths`` entry at preemption time; ``leaves`` holds
+    each pool leaf's page contents in ``jax.tree`` order, exactly what
+    ``restore`` scatters back into freshly allocated pages. Host-side
+    and placement-blind like everything else in this module."""
+    length: int
+    leaves: List["np.ndarray"]
 
 
 class PageAllocator:

@@ -9,11 +9,15 @@ The decode step always runs with a static (max_batch, 1) shape; which slots
 are alive is the ``n_new`` occupancy mask, so admitting or evicting a
 request never recompiles. One scheduler iteration:
 
-  1. admit — pop queued requests into free slots while the page pool has
-     room, then **batched chunked prefill**: every request admitted this
-     wave shares ONE jitted (max_batch, bucket) call that writes all their
-     prompts into the pages and yields each one's first token (prompt
-     remainder padded to a power-of-two bucket, so compile count is
+  1. admit — order the queue by (priority, deadline slack, arrival), pop
+     requests into free slots while the page pool has room — scanning a
+     bounded distance past an unservable head so small requests are not
+     blocked behind a big one (skip-ahead; aging promotes a starving
+     head, see docs/scheduling.md) — then **batched chunked prefill**:
+     every request admitted this wave shares ONE jitted
+     (max_batch, bucket) call that writes all their prompts into the
+     pages and yields each one's first token (prompt remainder padded to
+     a power-of-two bucket clamped at max_len, so compile count is
      O(log max_len), not O(T) and not O(queue)).
   2. decode — one lock-step call over all occupied slots; with
      ``spec=SpecConfig(cf, k)`` this becomes a **speculative wave**
@@ -23,6 +27,24 @@ request never recompiles. One scheduler iteration:
      per iteration (greedy output stays bitwise-plain-decode).
   3. reap — finished sequences (max_new reached or EOS) release their
      pages and slot immediately; the next iteration refills them.
+
+**Failure isolation**: no per-request condition is engine-fatal. A request
+that can never fit the pool is rejected at :meth:`Scheduler.submit_request`
+(``ScheduledRequest.error`` set, surfaced on the engine's ``Request``);
+a runtime admission failure on an otherwise idle engine fails that one
+request the same way. Every other queued and in-flight request keeps
+serving either way — overload degrades service, it never crashes the
+engine.
+
+**Preemption**: when a more urgent request (smaller ``priority``) cannot
+get a slot or pages, least-recently-matched trie leaves are evicted
+first, then a strictly-less-urgent running request is preempted: its
+live pages are spilled to host memory (``CacheBackend.spill``) or
+dropped for recompute — whichever the recompute-vs-restore cost model
+predicts is cheaper — its refcounts released, and the request re-enters
+the queue to resume later (``CacheBackend.restore`` scatters spilled
+pages back bit-identically, so a resumed greedy request emits exactly
+the tokens it would have undisturbed).
 
 **Prefix sharing / copy-on-write**: full prompt pages are published in a
 trie (``kv_pages.PrefixCache``); a later request whose prompt starts with a
@@ -47,6 +69,7 @@ from __future__ import annotations
 
 import collections
 import dataclasses
+import os
 import time
 from typing import Deque, Dict, List, Optional, Set, Tuple
 
@@ -55,17 +78,35 @@ import numpy as np
 
 from repro.configs.base import RunConfig
 from repro.serve.cache import CacheBackend, SlotBatch, make_backend
-from repro.serve.kv_pages import (SCRATCH_PAGE, PrefixCache, pages_needed)
+from repro.serve.kv_pages import (SCRATCH_PAGE, PrefixCache, SpilledPages,
+                                  pages_needed)
 from repro.serve.spec import CoarseDraft, SpecConfig
+
+#: assumed host->device replay bandwidth (bytes/s) for the preemption
+#: cost model's restore side when no better estimate exists — only the
+#: *ratio* against the measured prefill rate matters, so a conservative
+#: constant is fine (docs/scheduling.md).
+HOST_RESTORE_BYTES_S = 4e9
+
+
+class COWViolationError(RuntimeError):
+    """A decode slot was about to write into a page other readers can
+    still see — an internal copy-on-write invariant violation (a
+    scheduler bug), not a per-request failure. Raised by the
+    debug-gated check in ``Scheduler._decode_once`` (``REPRO_SERVE_DEBUG=0``
+    disables it); unlike the bare ``assert`` it replaced, it survives
+    ``python -O`` and names the slot/page/refcount."""
 
 
 @dataclasses.dataclass
 class ScheduledRequest:
     """Scheduler-internal view of one request: prompt + sampling params
-    + the growing ``out`` token list (the streaming path watches it) +
-    submit/first-token/done timestamps. Produced by
-    :meth:`Scheduler.submit_request`; the engine converts finished ones
-    back into :class:`repro.serve.engine.Request` results."""
+    + SLO fields (priority, TTFT/TPOT targets) + the growing ``out``
+    token list (the streaming path watches it) + submit/first-token/done
+    timestamps. Produced by :meth:`Scheduler.submit_request`; the engine
+    converts finished ones back into :class:`repro.serve.engine.Request`
+    results. ``error`` is set — instead of anything raising — when the
+    request is rejected or fails admission (failure isolation)."""
     rid: int
     prompt: np.ndarray               # (T,) int32
     max_new_tokens: int
@@ -74,45 +115,104 @@ class ScheduledRequest:
     top_k: int = 0                   # 0 = disabled
     top_p: float = 1.0               # 1 = disabled
     seed: int = 0                    # per-request sampling stream
+    priority: int = 0                # smaller = more urgent (nice-style)
+    ttft_target_s: Optional[float] = None   # SLO: time to first token
+    tpot_target_s: Optional[float] = None   # SLO: seconds per output token
     out: List[int] = dataclasses.field(default_factory=list)
     t_submit: float = 0.0
     t_first: float = 0.0             # first token produced (end of prefill)
     t_done: float = 0.0
+    error: Optional[str] = None      # set iff the request failed
+    skips: int = 0                   # admission waves this request waited
+    preemptions: int = 0
+    spill: Optional[SpilledPages] = None   # host copy of preempted state
 
     @property
     def done(self) -> bool:
         return self.t_done > 0.0
 
     @property
-    def ttft(self) -> float:
+    def failed(self) -> bool:
+        return self.error is not None
+
+    @property
+    def ttft(self) -> Optional[float]:
+        """Time to first token — None when the request never reached
+        prefill (rejected, or cancelled while queued), instead of the
+        negative ``0 - t_submit`` it used to report."""
+        if self.t_first <= 0.0:
+            return None
         return self.t_first - self.t_submit
 
     @property
-    def latency(self) -> float:
+    def latency(self) -> Optional[float]:
+        """Submit-to-done wall time (None while still in flight)."""
+        if self.t_done <= 0.0:
+            return None
         return self.t_done - self.t_submit
 
+    @property
+    def tpot(self) -> Optional[float]:
+        """Mean seconds per output token after the first; None before
+        completion or when fewer than two tokens were emitted."""
+        if self.t_done <= 0.0 or self.t_first <= 0.0 or len(self.out) < 2:
+            return None
+        return (self.t_done - self.t_first) / (len(self.out) - 1)
 
-def bucket_len(n: int, lo: int = 8) -> int:
-    """Next power-of-two prompt bucket (bounds distinct prefill traces)."""
+    @property
+    def slo_met(self) -> bool:
+        """Whether a finished request met its declared targets (absent
+        targets pass trivially; failed requests never count)."""
+        if self.error is not None:
+            return False
+        if self.ttft_target_s is not None and (
+                self.ttft is None or self.ttft > self.ttft_target_s):
+            return False
+        if self.tpot_target_s is not None and (
+                self.tpot is not None and self.tpot > self.tpot_target_s):
+            return False
+        return True
+
+    @property
+    def resume_seq(self) -> np.ndarray:
+        """The token sequence whose state must be in the cache before
+        the pending token is fed: the prompt for a fresh request; prompt
+        + emitted tokens except the last (which decode feeds next) for a
+        request resuming after preemption."""
+        if not self.out:
+            return self.prompt
+        return np.concatenate(
+            [self.prompt, np.asarray(self.out[:-1], np.int32)])
+
+
+def bucket_len(n: int, lo: int = 8, hi: int = 0) -> int:
+    """Next power-of-two prompt bucket (bounds distinct prefill traces).
+    ``hi`` > 0 clamps the bucket: a prompt just under the cap would
+    otherwise round up PAST it (e.g. 191 tokens under max_len 192
+    tracing a 256-wide prefill) — the clamped bucket adds at most one
+    extra trace at exactly ``hi``."""
     b = lo
     while b < n:
         b *= 2
-    return b
+    return min(b, max(n, hi)) if hi else b
 
 
 class Scheduler:
     """Continuous-batching slot scheduler (see module docstring): admits
-    queued requests into ``max_batch`` decode slots, plans/maps pages
-    host-side, and drives the backend's jitted calls — one batched
-    prefill per admission wave, one decode (or draft+verify) call per
-    iteration, reaping finished slots in between. Family- and
+    queued requests into ``max_batch`` decode slots in SLO order, plans/
+    maps pages host-side, and drives the backend's jitted calls — one
+    batched prefill per admission wave, one decode (or draft+verify)
+    call per iteration, reaping finished slots in between. Family- and
     mesh-blind: everything device-shaped lives behind ``self.backend``."""
 
     def __init__(self, rcfg: RunConfig, params, *, max_batch: int = 8,
                  page_size: int = 16, max_len: int = 0, n_pages: int = 0,
                  mesh=None, sharding=None, share_prefix: bool = True,
                  backend: Optional[CacheBackend] = None,
-                 spec: Optional[SpecConfig] = None, fused: bool = True):
+                 spec: Optional[SpecConfig] = None, fused: bool = True,
+                 admit_lookahead: int = 8, starvation_limit: int = 16,
+                 age_every: int = 4, preempt_policy: str = "auto",
+                 debug_checks: Optional[bool] = None):
         """Args:
             rcfg / params: model config and weights (under a mesh the
                 backend re-places the weights tensor-parallel).
@@ -132,11 +232,34 @@ class Scheduler:
                 decoding.
             fused: forwarded to ``make_backend`` — fused paged-decode
                 kernels (default) vs the gathered dense-view path.
+            admit_lookahead: how many unservable queue entries one admit
+                wave may scan past (bounded skip-ahead).
+            starvation_limit: admission waves an unservable head may be
+                skipped before it blocks all skip-ahead (aging — the
+                head then drains the pool and admits; no starvation).
+            age_every: every this many skipped waves a queued request's
+                *effective* priority (queue ordering only) improves by
+                one level.
+            preempt_policy: 'auto' (recompute-vs-restore cost model),
+                'spill' / 'recompute' (force one side), or 'off'
+                (never preempt).
+            debug_checks: run the host-side copy-on-write invariant
+                check each decode wave; defaults to on unless
+                ``REPRO_SERVE_DEBUG=0`` (cheap — O(max_batch) refcount
+                lookups — and survives ``python -O``).
         """
         self.rcfg, self.params = rcfg, params
         self.max_len = max_len or min(rcfg.model.max_seq_len, 4096)
         self.page_size = page_size
         self.max_batch = max_batch
+        if preempt_policy not in ("auto", "spill", "recompute", "off"):
+            raise ValueError(f"bad preempt_policy {preempt_policy!r}")
+        self.admit_lookahead = admit_lookahead
+        self.starvation_limit = starvation_limit
+        self.age_every = max(int(age_every), 1)
+        self.preempt_policy = preempt_policy
+        self._debug_checks = debug_checks if debug_checks is not None \
+            else os.environ.get("REPRO_SERVE_DEBUG", "1") != "0"
         self.backend = backend if backend is not None else \
             make_backend(rcfg, params, mesh=mesh, page_size=page_size,
                          sharding=sharding, fused=fused)
@@ -150,9 +273,11 @@ class Scheduler:
             n_pages or 1 + max_batch * self.pages_per_slot)
         self.state = self.backend.init(max_batch, n_pages)
         self.alloc = self.backend.alloc
+        self._page_nbytes = 0            # filled lazily (preempt cost model)
         self.prefix: Optional[PrefixCache] = \
             PrefixCache(self.alloc, page_size) if share_prefix else None
         self._pending: Set[int] = set()   # pages this admit wave will write
+        self._wave_preempted: Set[int] = set()   # rids preempted this wave
         self.spec: Optional[CoarseDraft] = None
         if spec is not None:
             # the draft derives its mesh from the backend, so a prebuilt
@@ -179,26 +304,40 @@ class Scheduler:
                       "shared_tokens": 0, "pages_allocated": 0,
                       "pages_shared": 0, "draft_calls": 0,
                       "verify_calls": 0, "tokens_drafted": 0,
-                      "tokens_accepted": 0}
+                      "tokens_accepted": 0, "requests_rejected": 0,
+                      "requests_failed": 0, "preemptions": 0,
+                      "pages_spilled": 0, "pages_restored": 0,
+                      "preempt_recomputes": 0}
 
     # -- submission ---------------------------------------------------------
 
     def submit(self, prompt: np.ndarray, max_new_tokens: int,
                eos_id: Optional[int] = None, *, temperature: float = 0.0,
-               top_k: int = 0, top_p: float = 1.0, seed: int = 0) -> int:
+               top_k: int = 0, top_p: float = 1.0, seed: int = 0,
+               priority: int = 0, ttft_target_s: Optional[float] = None,
+               tpot_target_s: Optional[float] = None) -> int:
         """Queue a request; returns its rid. max_new_tokens is capped so
         prompt + output fits max_len (the engine-wide Request contract)."""
         return self.submit_request(
             prompt, max_new_tokens, eos_id, temperature=temperature,
-            top_k=top_k, top_p=top_p, seed=seed).rid
+            top_k=top_k, top_p=top_p, seed=seed, priority=priority,
+            ttft_target_s=ttft_target_s, tpot_target_s=tpot_target_s).rid
 
     def submit_request(self, prompt: np.ndarray, max_new_tokens: int,
                        eos_id: Optional[int] = None, *,
                        temperature: float = 0.0, top_k: int = 0,
-                       top_p: float = 1.0, seed: int = 0) \
+                       top_p: float = 1.0, seed: int = 0, priority: int = 0,
+                       ttft_target_s: Optional[float] = None,
+                       tpot_target_s: Optional[float] = None) \
             -> ScheduledRequest:
         """Like :meth:`submit` but returns the live ScheduledRequest (the
-        streaming path watches its ``out`` list grow)."""
+        streaming path watches its ``out`` list grow).
+
+        Malformed parameters raise ``ValueError`` (a caller contract
+        bug). A well-formed request the pool can *never* hold is instead
+        rejected — returned already finished with ``error`` set — so one
+        oversized request can't take down anything else (failure
+        isolation; the old engine-wide ``RuntimeError`` is gone)."""
         prompt = np.asarray(prompt, np.int32).reshape(-1)
         if len(prompt) >= self.max_len:
             raise ValueError(f"prompt ({len(prompt)}) >= max_len "
@@ -212,15 +351,39 @@ class Scheduler:
             raise ValueError("top_k must be >= 0 (0 disables)")
         if not 0.0 < top_p <= 1.0:
             raise ValueError("top_p must be in (0, 1]")
+        if ttft_target_s is not None and ttft_target_s <= 0:
+            raise ValueError("ttft_target_s must be > 0 (None disables)")
+        if tpot_target_s is not None and tpot_target_s <= 0:
+            raise ValueError("tpot_target_s must be > 0 (None disables)")
         max_new = min(int(max_new_tokens), self.max_len - len(prompt))
         req = ScheduledRequest(self._next_rid, prompt, max_new, eos_id,
                                temperature=float(temperature),
                                top_k=int(top_k), top_p=float(top_p),
                                seed=int(seed) & 0x7FFFFFFF,
+                               priority=int(priority),
+                               ttft_target_s=ttft_target_s,
+                               tpot_target_s=tpot_target_s,
                                t_submit=time.perf_counter())
         self._next_rid += 1
+        total = pages_needed(len(prompt) + max_new, self.page_size)
+        limit = self.alloc.n_pages - 1
+        if total > limit:
+            self.stats["requests_rejected"] += 1
+            self._fail(req, f"unservable: needs {total} pages "
+                            f"({len(prompt)} prompt + {max_new} new tokens "
+                            f"at page_size {self.page_size}) but the pool "
+                            f"holds {limit}")
+            return req
         self.queue.append(req)
         return req
+
+    def _fail(self, req: ScheduledRequest, msg: str) -> None:
+        """Per-request failure isolation: mark THIS request failed and
+        finished; the engine and every other request keep serving."""
+        req.error = msg
+        req.t_done = time.perf_counter()
+        self.finished[req.rid] = req
+        self.stats["requests_failed"] += 1
 
     # -- scheduler iteration ------------------------------------------------
 
@@ -228,6 +391,35 @@ class Scheduler:
     def n_active(self) -> int:
         """Occupied decode slots (in-flight requests, excluding queue)."""
         return sum(r is not None for r in self.slot_req)
+
+    def effective_priority(self, req: ScheduledRequest) -> int:
+        """Queue-ordering priority with aging applied: every
+        ``age_every`` skipped admission waves promote the request one
+        level, so low-priority work cannot starve behind a steady stream
+        of later, nominally-higher-priority arrivals. Preemption
+        compares *base* priorities only — aging orders the queue, it
+        never evicts running work."""
+        return req.priority - req.skips // self.age_every
+
+    def _queue_key(self, req: ScheduledRequest, now: float):
+        """(effective priority, deadline slack, arrival). Slack is how
+        much of the TTFT budget remains (requests without a target sort
+        last within their priority class); a preempted request resuming
+        mid-generation sorts first — it holds spilled state and its
+        tokens are already owed."""
+        if req.out:
+            slack = float("-inf")
+        elif req.ttft_target_s is not None:
+            slack = req.t_submit + req.ttft_target_s - now
+        else:
+            slack = float("inf")
+        return (self.effective_priority(req), slack, req.rid)
+
+    def _order_queue(self) -> None:
+        if len(self.queue) > 1:
+            now = time.perf_counter()
+            self.queue = collections.deque(
+                sorted(self.queue, key=lambda r: self._queue_key(r, now)))
 
     def _match_prefix(self, req: ScheduledRequest) -> List[int]:
         """Longest usable trie match for this prompt, with backend-capability
@@ -258,11 +450,11 @@ class Scheduler:
 
     def _plan_admit(self, req: ScheduledRequest) \
             -> Optional[Tuple[List[int], int]]:
-        """Map pages for one request: the longest trie-cached prompt
-        prefix is shared read-only, fresh pages cover the rest, and a COW
-        fork detaches the last shared page when the recomputed tail must
-        write into it. Returns (pages, shared_len) or None when the pool
-        cannot serve the request right now."""
+        """Map pages for one fresh request: the longest trie-cached
+        prompt prefix is shared read-only, fresh pages cover the rest,
+        and a COW fork detaches the last shared page when the recomputed
+        tail must write into it. Returns (pages, cached_len) or None
+        when the pool cannot serve the request right now."""
         ps = self.page_size
         T = len(req.prompt)
         total = pages_needed(T + req.max_new_tokens, ps)
@@ -301,35 +493,181 @@ class Scheduler:
         self.stats["shared_tokens"] += shared_len
         return shared + fresh, shared_len
 
-    def _admit(self) -> int:
-        """Fill free slots from the queue, then prefill every admitted
-        request in ONE batched jitted call. Returns how many were admitted
-        (a request may finish during its own prefill, so admitted > 0 with
-        n_active == 0 afterwards is normal — the caller re-admits)."""
-        plans = []
-        for slot in range(self.max_batch):
-            if self.slot_req[slot] is not None or not self.queue:
+    def _plan_resume(self, req: ScheduledRequest) \
+            -> Optional[Tuple[List[int], int]]:
+        """Map pages for a preempted request re-entering a slot: its
+        full capacity is allocated fresh (resumes never touch the trie —
+        their sequence mixes prompt and generated tokens), the spilled
+        pages are scattered back if it spilled, and the remainder — the
+        whole sequence for a recompute resume — is re-prefilled."""
+        total = pages_needed(len(req.prompt) + req.max_new_tokens,
+                             self.page_size)
+        fresh = self.backend.alloc_view(total)
+        if fresh is None and self.prefix is not None:
+            self.prefix.evict(total - self.alloc.n_free)
+            fresh = self.backend.alloc_view(total)
+        if fresh is None:
+            return None
+        self.stats["pages_allocated"] += total
+        cached = req.spill.length if req.spill is not None else 0
+        return fresh, cached
+
+    def _plan(self, req: ScheduledRequest) \
+            -> Optional[Tuple[List[int], int]]:
+        if req.out:
+            return self._plan_resume(req)
+        return self._plan_admit(req)
+
+    # -- preemption ---------------------------------------------------------
+
+    def _pick_victim(self, priority: int, protected: Set[int]) \
+            -> Optional[int]:
+        """Least-urgent, latest-arrival running slot whose *base*
+        priority is strictly less urgent than ``priority`` — or None
+        (nothing may be preempted for an equal-or-less-urgent request).
+        Slots filled this same wave are protected: their prefill hasn't
+        run yet."""
+        best = None
+        for slot, r in enumerate(self.slot_req):
+            if r is None or slot in protected or r.priority <= priority:
                 continue
-            plan = self._plan_admit(self.queue[0])
-            if plan is None:           # pool full: wait for running reqs
-                break
-            pages, shared_len = plan
-            req = self.queue.popleft()
-            self.slot_req[slot] = req
-            self.slot_pages[slot] = pages
-            self.page_table[slot, :] = SCRATCH_PAGE
-            self.page_table[slot, :len(pages)] = pages
-            self.lengths[slot] = shared_len
-            self.temps[slot] = req.temperature
-            self.top_ks[slot] = req.top_k
-            self.top_ps[slot] = req.top_p
-            self.seeds[slot] = req.seed
-            if self.prefix is not None:
-                n_full = len(req.prompt) // self.page_size
-                self.prefix.insert(req.prompt, pages[:n_full])
-                self._pending.update(pages[shared_len // self.page_size:
-                                           n_full])
-            plans.append((slot, req, shared_len))
+            key = (r.priority, r.rid)
+            if best is None or key > best[0]:
+                best = (key, slot)
+        return None if best is None else best[1]
+
+    def _restore_beats_recompute(self, n_pages: int, n_tokens: int) -> bool:
+        """The preemption cost model: restoring spilled pages costs a
+        host->device copy of their bytes; recomputing costs re-prefilling
+        ``n_tokens`` at the measured batched-prefill rate. 'spill' /
+        'recompute' policies force one side (tests pin paths with them;
+        both resume bit-identically)."""
+        if self.preempt_policy == "spill":
+            return True
+        if self.preempt_policy == "recompute":
+            return False
+        s = self.stats
+        prefill_rate = s["prefill_tokens"] / s["prefill_s"] \
+            if s["prefill_s"] > 0 else 1e4
+        if not self._page_nbytes:
+            self._page_nbytes = self.backend.page_nbytes(self.state)
+        t_restore = n_pages * self._page_nbytes / HOST_RESTORE_BYTES_S
+        return t_restore < n_tokens / prefill_rate
+
+    def _preempt(self, slot: int) -> None:
+        """Evict the running request in ``slot``: spill (or drop, per
+        the cost model) its live pages, release its refcounts, and put
+        it back on the queue to resume later. No timestamps are touched
+        — the request is still in flight, just not resident."""
+        req = self.slot_req[slot]
+        L = int(self.lengths[slot])
+        live = pages_needed(L, self.page_size)
+        pages = self.slot_pages[slot]
+        if self._restore_beats_recompute(live, L):
+            req.spill = SpilledPages(
+                length=L, leaves=self.backend.spill(self.state,
+                                                    pages[:live]))
+            self.stats["pages_spilled"] += live
+        else:
+            req.spill = None
+            self.stats["preempt_recomputes"] += 1
+        req.preemptions += 1
+        self.stats["preemptions"] += 1
+        self.backend.release(pages)
+        self._clear_slot(slot)
+        self._wave_preempted.add(req.rid)
+        self.queue.append(req)       # re-ordered at the next admit wave
+
+    def _plan_or_preempt(self, req: ScheduledRequest,
+                         protected: Set[int]) \
+            -> Optional[Tuple[List[int], int]]:
+        """Plan pages for ``req``, preempting strictly-less-urgent
+        running requests one at a time (worst first) until the plan
+        fits or no victim remains."""
+        plan = self._plan(req)
+        if self.preempt_policy == "off":
+            return plan
+        while plan is None:
+            victim = self._pick_victim(req.priority, protected)
+            if victim is None:
+                return None
+            self._preempt(victim)
+            plan = self._plan(req)
+        return plan
+
+    # -- admission ----------------------------------------------------------
+
+    def _fill_slot(self, slot: int, req: ScheduledRequest,
+                   pages: List[int], cached: int) -> None:
+        self.slot_req[slot] = req
+        self.slot_pages[slot] = pages
+        self.page_table[slot, :] = SCRATCH_PAGE
+        self.page_table[slot, :len(pages)] = pages
+        self.lengths[slot] = cached
+        self.temps[slot] = req.temperature
+        self.top_ks[slot] = req.top_k
+        self.top_ps[slot] = req.top_p
+        self.seeds[slot] = req.seed
+        if req.spill is not None:
+            # spilled resume: scatter the host copy back bit-identically
+            live = pages_needed(req.spill.length, self.page_size)
+            self.state = self.backend.restore(self.state, pages[:live],
+                                              req.spill.leaves)
+            self.stats["pages_restored"] += live
+            req.spill = None
+        elif not req.out and self.prefix is not None:
+            n_full = len(req.prompt) // self.page_size
+            self.prefix.insert(req.prompt, pages[:n_full])
+            self._pending.update(pages[cached // self.page_size:n_full])
+
+    def _admit(self) -> int:
+        """Fill free slots from the queue in (priority, slack, arrival)
+        order, then prefill every admitted request in ONE batched jitted
+        call. An unservable candidate is scanned past (bounded
+        skip-ahead) so smaller requests behind it still admit — unless
+        it has aged past ``starvation_limit``, which blocks skip-ahead
+        until the pool drains for it. Returns how many were admitted (a
+        request may finish during its own prefill, so admitted > 0 with
+        n_active == 0 afterwards is normal — the caller re-admits)."""
+        self._order_queue()
+        self._wave_preempted.clear()
+        plans = []
+        deferred: List[ScheduledRequest] = []
+        filled: Set[int] = set()
+        scan = self.admit_lookahead
+        while self.queue:
+            req = self.queue[0]
+            if req.rid in self._wave_preempted:
+                # preempted moments ago for someone this wave — let it
+                # re-enter next wave, not bounce straight back in
+                deferred.append(self.queue.popleft())
+                continue
+            slot = next((s for s in range(self.max_batch)
+                         if self.slot_req[s] is None), None)
+            if slot is None:
+                # every slot busy: a strictly-more-urgent head may
+                # preempt its way in; anyone else waits for a reap
+                victim = self._pick_victim(req.priority, filled) \
+                    if self.preempt_policy != "off" else None
+                if victim is None:
+                    break
+                self._preempt(victim)
+                slot = victim
+            plan = self._plan_or_preempt(req, filled)
+            if plan is None:           # pool full for this request
+                req.skips += 1
+                if scan <= 0 or req.skips > self.starvation_limit:
+                    break              # aged head: no skip-ahead past it
+                scan -= 1
+                deferred.append(self.queue.popleft())
+                continue
+            self.queue.popleft()
+            req.skips = 0
+            pages, cached = plan
+            self._fill_slot(slot, req, pages, cached)
+            filled.add(slot)
+            plans.append((slot, req, cached))
+        self.queue.extendleft(reversed(deferred))
         if plans:
             if self.spec is not None:
                 self._draft_prefill(plans)
@@ -339,15 +677,18 @@ class Scheduler:
 
     def _draft_prefill(self, plans) -> None:
         """Mirror an admission wave into the coarse draft: ONE jitted
-        coarse-model call writes every admitted slot's FULL prompt into
-        the draft's private pages (the draft has no prefix trie, so its
-        bucket is the whole prompt, not the unshared remainder)."""
-        S = bucket_len(max(len(r.prompt) for _, r, _ in plans))
+        coarse-model call writes every admitted slot's FULL sequence into
+        the draft's private pages (the draft has no prefix trie and no
+        spill state, so its bucket is the whole prompt — or, for a
+        resumed request, prompt + committed output — not the unshared
+        remainder)."""
+        seqs = [(slot, req.resume_seq) for slot, req, _ in plans]
+        S = bucket_len(max(len(s) for _, s in seqs), hi=self.max_len)
         toks = np.zeros((self.max_batch, S), np.int32)
         n_new = np.zeros((self.max_batch,), np.int32)
-        for slot, req, _ in plans:
-            toks[slot, :len(req.prompt)] = req.prompt
-            n_new[slot] = len(req.prompt)
+        for slot, seq in seqs:
+            toks[slot, :len(seq)] = seq
+            n_new[slot] = len(seq)
         self.spec.prefill(toks, n_new)
         self.stats["draft_calls"] += 1
 
@@ -358,17 +699,27 @@ class Scheduler:
 
     def _batched_prefill(self, plans) -> None:
         """One jitted (max_batch, bucket) call writes every admitted
-        prompt's non-shared remainder into its pages and samples each
+        sequence's non-cached remainder into its pages and samples each
         first token. Slots mid-decode ride along masked out (n_new == 0),
-        so the call count per wave is 1 regardless of queue depth."""
-        S = bucket_len(max(len(r.prompt) - sl for _, r, sl in plans))
+        so the call count per wave is 1 regardless of queue depth.
+        Restored-resume slots (already fully cached) skip the call;
+        recompute-resume slots re-ingest their sequence but discard the
+        sampled token — their pending token was already emitted."""
+        work = [(slot, req, req.resume_seq, cached)
+                for slot, req, cached in plans
+                if len(req.resume_seq) - cached > 0]
+        if not work:
+            return
+        S = bucket_len(max(len(seq) - c for _, _, seq, c in work),
+                       hi=self.max_len)
         toks = np.zeros((self.max_batch, S), np.int32)
         n_new = np.zeros((self.max_batch,), np.int32)
         counters = np.zeros((self.max_batch,), np.int32)
-        for slot, req, sl in plans:
-            n = len(req.prompt) - sl
-            toks[slot, :n] = req.prompt[sl:]
+        for slot, req, seq, c in work:
+            n = len(seq) - c
+            toks[slot, :n] = seq[c:]
             n_new[slot] = n
+            counters[slot] = len(req.out)
         t0 = time.perf_counter()
         self.state, nxt = self.backend.prefill(
             self.state, self._slot_batch(n_new, counters), toks)
@@ -377,13 +728,29 @@ class Scheduler:
         self.stats["prefill_tokens"] += int(n_new.sum())
         self.stats["prefill_s"] += now - t0
         self.stats["prefill_calls"] += 1
-        for slot, req, _ in plans:
-            self.lengths[slot] = len(req.prompt)
+        for slot, req, seq, _ in work:
+            self.lengths[slot] = len(seq)
+            if req.out:                # recompute resume: state only
+                continue
             req.t_first = now
             tok = int(nxt[slot, 0])
             req.out.append(tok)
             if self._is_done(req, tok):
                 self._reap(slot)
+
+    def _check_cow(self, slot: int, req: ScheduledRequest) -> None:
+        """COW invariant: the page this slot is about to write must be
+        private. Replaces the bare ``assert`` (stripped under
+        ``python -O``) with a debug-gated diagnostic raise."""
+        page = int(self.page_table[slot,
+                                   self.lengths[slot] // self.page_size])
+        rc = self.alloc.refcount(page)
+        if rc != 1:
+            raise COWViolationError(
+                f"slot {slot} (rid {req.rid}) is about to write page "
+                f"{page} with refcount {rc}; pages in a slot's write "
+                f"range must be private (refcount 1) when the decode "
+                f"call launches")
 
     def _decode_once(self) -> None:
         toks = np.zeros((self.max_batch, 1), np.int32)
@@ -394,11 +761,8 @@ class Scheduler:
                 toks[slot, 0] = req.out[-1]
                 n_new[slot] = 1
                 counters[slot] = len(req.out)
-                # COW invariant: the page this slot writes is private
-                assert self.alloc.refcount(
-                    int(self.page_table[slot,
-                                        self.lengths[slot]
-                                        // self.page_size])) == 1
+                if self._debug_checks:
+                    self._check_cow(slot, req)
         t0 = time.perf_counter()
         self.state, nxt = self.backend.step(
             self.state, self._slot_batch(n_new, counters), toks)
@@ -480,11 +844,9 @@ class Scheduler:
         return (len(req.out) >= req.max_new_tokens
                 or (req.eos_id is not None and tok == req.eos_id))
 
-    def _reap(self, slot: int) -> None:
-        req = self.slot_req[slot]
-        req.t_done = time.perf_counter()
-        self.finished[req.rid] = req
-        self.backend.release(self.slot_pages[slot])
+    def _clear_slot(self, slot: int) -> None:
+        """Reset one slot's host bookkeeping (shared by reap/preempt/
+        cancel; page refcounts are the caller's business)."""
         self.slot_pages[slot] = []
         self.slot_req[slot] = None
         self.page_table[slot, :] = SCRATCH_PAGE
@@ -496,14 +858,24 @@ class Scheduler:
         if self.spec is not None:
             self.spec.reset_slot(slot)
 
+    def _reap(self, slot: int) -> None:
+        req = self.slot_req[slot]
+        req.t_done = time.perf_counter()
+        self.finished[req.rid] = req
+        self.backend.release(self.slot_pages[slot])
+        self._clear_slot(slot)
+
     def cancel(self, req: ScheduledRequest) -> None:
         """Abort a queued or in-flight request: its slot and pages return
         to the pool immediately and nothing more is generated (streaming
-        early termination). Finished/unknown requests are a no-op."""
+        early termination). Finished/unknown requests are a no-op; a
+        never-prefilled cancel reports ``ttft``/``tpot`` of None, not a
+        negative time."""
         if req.done:
             return
         try:
             self.queue.remove(req)
+            req.spill = None             # drop any preempted host copy
             req.t_done = time.perf_counter()
             self.finished[req.rid] = req
             return
@@ -523,8 +895,10 @@ class Scheduler:
 
     def step(self) -> bool:
         """One scheduler iteration (admit wave + one decode). Returns
-        False when idle (nothing queued or running); raises when the head
-        request can never be served by this pool."""
+        False when idle (nothing queued or running). Never raises for a
+        per-request condition: a request the pool cannot serve even on
+        an idle engine fails alone (``ScheduledRequest.error``) while
+        everything else keeps decoding."""
         if not self.queue and not self.n_active:
             return False
         admitted = self._admit()
@@ -534,16 +908,20 @@ class Scheduler:
             else:
                 self._decode_once()
         elif self.queue and admitted == 0:
-            # nothing running, nothing admitted: the head request can
-            # never get pages (admitted > 0 with everything already
-            # finished in prefill just loops back to admit more)
-            raise RuntimeError(
-                f"request {self.queue[0].rid} needs more pages than the "
-                f"pool holds ({self.alloc.n_pages - 1})")
+            # nothing running and nothing admissible: the ordered head
+            # cannot get pages even with the machine to itself (e.g.
+            # pages pinned outside the scheduler). Fail it alone and
+            # keep draining the rest — never kill the engine.
+            req = self.queue.popleft()
+            self._fail(req, f"admission failed on an idle engine: needs "
+                            f"{pages_needed(len(req.prompt) + req.max_new_tokens, self.page_size)} "
+                            f"pages, pool holds {self.alloc.n_pages - 1} "
+                            f"({self.alloc.n_free} free)")
         return True
 
     def run(self) -> Dict[int, ScheduledRequest]:
-        """Drain the queue; returns {rid: finished request}."""
+        """Drain the queue; returns {rid: finished request} (failed
+        requests included, with ``error`` set)."""
         while self.step():
             pass
         return self.finished

@@ -143,20 +143,24 @@ def test_backend_conformance_fuzz_seeded(fam, seed):
     assert eng.scheduler.n_active == 0
 
 
-def test_scheduler_run_raises_when_pool_too_small(setup):
-    """Regression for the `run()` error path: a request that can never get
-    enough pages must raise, not spin forever."""
+def test_pool_too_small_fails_request_not_engine(setup):
+    """Failure isolation (the old behavior raised RuntimeError out of
+    `run()`, killing every in-flight request): a request that can never
+    get enough pages finishes alone with ``error`` set, never spins, and
+    the engine keeps serving feasible requests on the same pool."""
     rcfg, params = setup
     sched = Scheduler(rcfg, params, max_batch=2, page_size=4,
                       max_len=MAX_LEN, n_pages=1 + 2)   # 2 pages = 8 tokens
-    sched.submit(np.arange(12, dtype=np.int32) % VOCAB, max_new_tokens=4)
-    with pytest.raises(RuntimeError, match="needs more pages"):
-        sched.run()
-    # a feasible request still succeeds afterwards on the same pool
-    sched.queue.clear()
+    big = sched.submit_request(np.arange(12, dtype=np.int32) % VOCAB,
+                               max_new_tokens=4)
+    assert big.failed and big.done and "pool" in big.error
+    assert big.ttft is None and big.out == []
+    assert sched.stats["requests_rejected"] == 1
+    # a feasible request still succeeds on the same pool, same scheduler
     rid = sched.submit(np.array([1, 2, 3], np.int32), max_new_tokens=2)
     done = sched.run()
     assert len(done[rid].out) == 2
+    assert done[big.rid] is big and big.failed
 
 
 def test_allocator_fuzz_seeded():

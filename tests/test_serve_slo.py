@@ -1,0 +1,294 @@
+"""Overload-path coverage for the SLO-aware scheduler (ISSUE 7).
+
+Tier-1: failure isolation (an unservable request fails alone — at
+submit time or on an idle engine — while everything else keeps
+serving), bounded skip-ahead admission with the aging starvation guard,
+preempt/spill/restore reproducing undisturbed greedy output bitwise on
+all three backend families, the recompute resume path, cancel-while-
+queued metric sanity (no negative TTFT), the debug-gated COW invariant
+check, and the bucket_len clamp.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import (MGRITConfig, ModelConfig, OptimizerConfig,
+                                RunConfig, ShapeConfig, SSMConfig)
+from repro.models import transformer
+from repro.serve.scheduler import COWViolationError, Scheduler, bucket_len
+
+pytestmark = pytest.mark.serve
+
+VOCAB = 32
+MAX_LEN = 24
+
+
+def make_setup(fam: str, seed: int = 0):
+    kw = dict(name=f"slo_{fam}", family="decoder", n_layers=4, d_model=16,
+              n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=VOCAB,
+              act="gelu", norm="layernorm", dtype="float32")
+    if fam == "ssm_mamba1":
+        kw.update(family="ssm", ssm=SSMConfig(version=1, d_state=8,
+                                              d_conv=3))
+    elif fam == "hybrid":
+        kw.update(family="hybrid", n_layers=5, hybrid_attn_every=2,
+                  ssm=SSMConfig(version=2, d_state=8, d_conv=3,
+                                headdim=16))
+    rcfg = RunConfig(
+        model=ModelConfig(**kw),
+        mgrit=MGRITConfig(enabled=True, cf=2, levels=2, fwd_iters=1,
+                          bwd_iters=1, n_open=1, n_close=1, pad_to=2),
+        optimizer=OptimizerConfig(),
+        shape=ShapeConfig(fam, "train", 16, 4))
+    params = transformer.init_model(jax.random.PRNGKey(seed), rcfg)
+    return rcfg, params
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return make_setup("decoder")
+
+
+# -- failure isolation -------------------------------------------------------
+
+def test_oversized_rejection_leaves_inflight_untouched(setup):
+    """An unservable request must fail at submit WITHOUT perturbing a
+    request already decoding — its output stays bitwise what an
+    undisturbed engine produces."""
+    rcfg, params = setup
+    prompt = np.arange(1, 8, dtype=np.int32)
+    ref = Scheduler(rcfg, params, max_batch=2, page_size=4,
+                    max_len=MAX_LEN, n_pages=1 + 4)
+    rid = ref.submit(prompt, 6)
+    want = ref.run()[rid].out
+
+    sched = Scheduler(rcfg, params, max_batch=2, page_size=4,
+                      max_len=MAX_LEN, n_pages=1 + 4)
+    live = sched.submit_request(prompt, 6)
+    sched.step()                      # admit + first decode: in flight
+    assert sched.n_active == 1
+    big = sched.submit_request(np.arange(20, dtype=np.int32) % VOCAB,
+                               max_new_tokens=4)   # needs 6 pages > 4
+    assert big.failed and big.done and big.out == []
+    assert big.ttft is None and big.tpot is None and big.latency >= 0.0
+    assert not big.slo_met
+    assert sched.n_active == 1        # in-flight slot untouched
+    done = sched.run()
+    assert done[live.rid].out == want
+    assert sched.stats["requests_rejected"] == 1
+    assert sched.stats["requests_failed"] == 1
+
+
+def test_idle_engine_admission_failure_fails_request_alone(setup):
+    """Runtime safety net: a request that passes the submit-time check
+    but cannot get pages even on an otherwise idle engine (pages pinned
+    outside the scheduler) fails alone; later requests still serve."""
+    rcfg, params = setup
+    sched = Scheduler(rcfg, params, max_batch=2, page_size=4,
+                      max_len=MAX_LEN, n_pages=1 + 6, share_prefix=False)
+    pinned = sched.alloc.alloc(4)     # external pin: only 2 pages free
+    stuck = sched.submit_request(np.arange(8, dtype=np.int32),
+                                 max_new_tokens=4)   # needs 3 pages
+    ok = sched.submit_request(np.array([1, 2, 3], np.int32),
+                              max_new_tokens=2)      # needs 2 pages: fits
+    done = sched.run()
+    assert stuck.failed and "idle engine" in stuck.error
+    assert done[ok.rid].out is not None and len(done[ok.rid].out) == 2
+    assert not done[ok.rid].failed
+    sched.alloc.free(pinned)
+    assert sched.alloc.n_free == sched.alloc.n_pages - 1
+
+
+# -- admission order ---------------------------------------------------------
+
+def test_skip_ahead_admits_small_request_past_blocked_head(setup):
+    """A small request behind an unservable head must admit (bounded
+    skip-ahead) instead of head-of-line blocking; the head admits once
+    the pool drains."""
+    rcfg, params = setup
+    sched = Scheduler(rcfg, params, max_batch=2, page_size=4,
+                      max_len=MAX_LEN, n_pages=1 + 7, share_prefix=False,
+                      preempt_policy="off")
+    hog = sched.submit_request(np.arange(8, dtype=np.int32),
+                               max_new_tokens=8)     # 4 pages
+    sched.step()                                     # hog in flight
+    big = sched.submit_request(np.arange(12, dtype=np.int32) % VOCAB,
+                               max_new_tokens=4)     # 4 pages > 3 free
+    small = sched.submit_request(np.array([9, 8, 7], np.int32),
+                                 max_new_tokens=2)   # 2 pages: fits now
+    sched.step()
+    assert small.t_first > 0.0        # admitted past the blocked head
+    assert big.t_first == 0.0 and big.skips > 0
+    done = sched.run()
+    assert all(not done[r.rid].failed for r in (hog, big, small))
+    assert small.t_done < big.t_done
+
+
+def test_starvation_limit_blocks_skip_ahead(setup):
+    """Once the head has been skipped past starvation_limit waves, the
+    queue stops skipping ahead: later small requests wait behind it
+    until it admits (aging -> drain-for-the-head)."""
+    rcfg, params = setup
+    sched = Scheduler(rcfg, params, max_batch=2, page_size=4,
+                      max_len=MAX_LEN, n_pages=1 + 7, share_prefix=False,
+                      preempt_policy="off", starvation_limit=0)
+    hog = sched.submit_request(np.arange(8, dtype=np.int32),
+                               max_new_tokens=6)
+    sched.step()
+    big = sched.submit_request(np.arange(12, dtype=np.int32) % VOCAB,
+                               max_new_tokens=4)
+    small = sched.submit_request(np.array([9, 8, 7], np.int32),
+                                 max_new_tokens=2)
+    sched.step()                      # head blocked, limit 0: no skip
+    assert small.t_first == 0.0 and big.t_first == 0.0
+    done = sched.run()
+    assert all(not done[r.rid].failed for r in (hog, big, small))
+    assert big.t_first <= small.t_first   # queue order held
+
+
+# -- preemption: spill/restore and recompute resumes -------------------------
+
+@pytest.mark.parametrize("fam,policy", [("decoder", "spill"),
+                                        ("ssm_mamba1", "spill"),
+                                        ("hybrid", "spill"),
+                                        ("decoder", "recompute")])
+def test_preempt_resume_bitwise_identical(fam, policy):
+    """A greedy request preempted mid-decode by a more urgent one and
+    later resumed (restore from spilled pages, or recompute) must emit
+    exactly the tokens it would have undisturbed — on every backend
+    family."""
+    rcfg, params = make_setup(fam)
+    kw = dict(max_batch=1, page_size=4, max_len=MAX_LEN,
+              share_prefix=False)
+    p_a = np.arange(2, 9, dtype=np.int32)            # 7 tokens
+    p_b = np.array([5, 4, 3, 2, 1], np.int32)
+
+    ref = Scheduler(rcfg, params, **kw)
+    ref_a = ref.submit_request(p_a, 8, priority=5)
+    ref.run()
+    ref_b = ref.submit_request(p_b, 4, priority=0)
+    ref.run()
+
+    sched = Scheduler(rcfg, params, preempt_policy=policy, **kw)
+    a = sched.submit_request(p_a, 8, priority=5)
+    for _ in range(3):                # prefill+decode, then 2 decodes
+        sched.step()
+    assert len(a.out) == 4 and sched.n_active == 1
+    b = sched.submit_request(p_b, 4, priority=0)
+    sched.step()                      # slot exhaustion -> preempt a
+    assert a.preemptions == 1 and b.t_first > 0.0
+    if policy == "spill":
+        assert sched.stats["pages_spilled"] > 0
+    else:
+        assert sched.stats["preempt_recomputes"] == 1
+    done = sched.run()
+    assert done[b.rid].out == ref_b.out
+    assert done[a.rid].out == ref_a.out      # bitwise, across preemption
+    if policy == "spill":
+        assert sched.stats["pages_restored"] > 0
+    assert sched.stats["preemptions"] == 1
+    assert sched.alloc.n_free == sched.alloc.n_pages - 1
+
+
+def test_preemption_requires_strictly_less_urgent_victim(setup):
+    """Equal-priority requests never preempt each other: the later one
+    waits for a slot instead (no thrash)."""
+    rcfg, params = setup
+    sched = Scheduler(rcfg, params, max_batch=1, page_size=4,
+                      max_len=MAX_LEN, share_prefix=False)
+    a = sched.submit_request(np.arange(6, dtype=np.int32), 6, priority=1)
+    sched.step()
+    b = sched.submit_request(np.array([3, 2, 1], np.int32), 3, priority=1)
+    sched.step()
+    assert a.preemptions == 0 and b.t_first == 0.0
+    done = sched.run()
+    assert sched.stats["preemptions"] == 0
+    assert not done[a.rid].failed and not done[b.rid].failed
+
+
+# -- satellite fixes ---------------------------------------------------------
+
+def test_cancel_while_queued_reports_sane_metrics(setup):
+    """Cancelling a request that never reached prefill used to report a
+    negative TTFT (t_done set, t_first never); now ttft/tpot are None
+    and latency is non-negative."""
+    rcfg, params = setup
+    sched = Scheduler(rcfg, params, max_batch=1, page_size=4,
+                      max_len=MAX_LEN)
+    running = sched.submit_request(np.arange(5, dtype=np.int32), 4)
+    sched.step()
+    queued = sched.submit_request(np.array([7, 6], np.int32), 4)
+    sched.cancel(queued)
+    assert queued.done and not queued.failed
+    assert queued.ttft is None and queued.tpot is None
+    assert queued.latency is not None and queued.latency >= 0.0
+    done = sched.run()
+    assert len(done[running.rid].out) == 4    # unaffected by the cancel
+
+
+def test_cow_violation_raises_diagnostic(setup):
+    """The COW invariant is an explicit debug-gated check (not a bare
+    assert stripped under python -O): a shared page in a slot's write
+    range raises COWViolationError naming slot, page, and refcount."""
+    rcfg, params = setup
+    sched = Scheduler(rcfg, params, max_batch=1, page_size=4,
+                      max_len=MAX_LEN, debug_checks=True)
+    sched.submit_request(np.arange(5, dtype=np.int32), 6)
+    sched.step()
+    page = int(sched.page_table[0, int(sched.lengths[0]) // 4])
+    sched.alloc.share([page])         # simulate a bookkeeping bug
+    with pytest.raises(COWViolationError, match=f"page {page} with "
+                                                f"refcount 2"):
+        sched.step()
+    sched.alloc.free([page])
+
+
+def test_bucket_len_clamped_to_hi():
+    """bucket_len must not trace a wider-than-max_len prefill for
+    prompts just under the cap."""
+    assert bucket_len(5) == 8
+    assert bucket_len(100) == 128
+    assert bucket_len(100, hi=192) == 128
+    assert bucket_len(130, hi=192) == 192      # clamped, not 256
+    assert bucket_len(191, hi=192) == 192
+    assert bucket_len(192, hi=192) == 192
+    assert bucket_len(24, hi=24) == 24         # MAX_LEN-sized resume
+
+
+# -- end-to-end acceptance ---------------------------------------------------
+
+def test_mixed_priority_overload_drains_to_completion(setup):
+    """ISSUE 7 acceptance: a concurrent mixed-priority workload with an
+    unservable request in it drains to completion — the unservable one
+    fails alone (visible via Request.error), everything else finishes,
+    and the pool is fully free afterwards."""
+    from repro.serve.engine import Request, ServeEngine
+
+    rcfg, params = setup
+    eng = ServeEngine(rcfg, params, max_batch=2, page_size=4,
+                      max_len=MAX_LEN, n_pages=1 + 5)
+    rng = np.random.default_rng(3)
+    reqs = [Request(prompt=rng.integers(0, VOCAB, size=int(
+                rng.integers(3, 10))).astype(np.int32),
+                    max_new_tokens=int(rng.integers(2, 6)),
+                    priority=i % 3, ttft_target_s=30.0,
+                    tpot_target_s=30.0)
+            for i in range(8)]
+    # 20 prompt + 4 new tokens = 6 pages: can never fit the 5-page pool
+    reqs[3] = Request(prompt=rng.integers(0, VOCAB, size=20).astype(
+        np.int32), max_new_tokens=8, priority=0)
+    out = eng.generate(reqs)
+    assert out[3].error is not None and len(out[3].output) == 0
+    for i, r in enumerate(out):
+        if i == 3:
+            continue
+        assert r.error is None
+        assert 1 <= len(r.output) <= r.max_new_tokens
+        assert r.ttft_s is not None and r.ttft_s >= 0.0
+        assert r.slo_met
+    st = eng.stats
+    assert st["requests_failed"] == 1 and st["requests_rejected"] == 1
+    sched = eng.scheduler
+    sched.drop_prefix_cache()
+    assert sched.n_active == 0
+    assert sched.alloc.n_free == sched.alloc.n_pages - 1
