@@ -111,7 +111,7 @@ def mesh_probe(dp: int = 1, tp: int = 2) -> dict:
                         for r in reqs])
     ref = solo.generate(reqs)
     if any(not np.array_equal(a.output, b.output)
-           for a, b in zip(got, ref)):
+           for a, b in zip(got, ref, strict=True)):
         raise RuntimeError("mesh decode diverged from single-device")
     tok_s = eng.throughput_probe(BATCH, steps=16)
     return {"tok_s": tok_s, "mesh": f"dp{dp}xtp{tp}",

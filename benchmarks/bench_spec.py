@@ -124,7 +124,7 @@ def run(csv: CSV):
             s_tok_s, got = _decode_tok_s(spec, _requests(rcfg))
             best_p = max(best_p, p_tok_s)        # shared CI hosts; compare
             best_s = max(best_s, s_tok_s)        # best-of-3 each
-        for a, b in zip(ref, got):
+        for a, b in zip(ref, got, strict=True):
             if not np.array_equal(a.output, b.output):
                 failures.append(f"{row}: greedy outputs diverged")
                 break

@@ -1,0 +1,16 @@
+"""repro.analysis.staticcheck — repo-native AST linter.
+
+Stdlib-only.  Importing the package registers every rule module; the
+registry (``RULES``) is the single source of truth for rule ids — the
+doc-lint test (tests/test_docs.py) checks docs/static-analysis.md
+against it.
+
+Usage::
+
+    PYTHONPATH=src python -m repro.analysis.staticcheck src/repro
+"""
+from .core import RULES, Finding, Project, Rule, rule, run_rules
+from . import (rules_donate, rules_jit, rules_pages,  # noqa: F401
+               rules_pallas, rules_serve, rules_sharding)
+
+__all__ = ["RULES", "Finding", "Project", "Rule", "rule", "run_rules"]

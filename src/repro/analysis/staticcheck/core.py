@@ -1,0 +1,374 @@
+"""Core of the repo-native static checker.
+
+Stdlib-only (``ast`` + ``os``) so it runs in the jax-free CI lint job.
+The pieces:
+
+- ``Finding`` — one diagnostic, rendered ``file:line · RULE_ID · message
+  · fix: hint``.
+- ``rule(...)`` / ``RULES`` — the registry.  A rule is a generator over a
+  ``Project`` yielding ``Finding``s.
+- ``ModuleInfo`` — one parsed file with its import-alias maps and a
+  parent map (ast has no uplinks).
+- ``Project`` — the scanned file set plus the *jit-region resolver*: the
+  set of functions reachable from ``jax.jit`` / ``pl.pallas_call`` /
+  the lazily-jitted ``make_*`` factories (serve/cache.py, serve/spec.py,
+  launch/steps.py), closed transitively over cross-module references.
+
+Rules import nothing outside this package, so fixture tests can build a
+``Project`` over a temp directory and assert exact findings.
+"""
+from __future__ import annotations
+
+import ast
+import dataclasses
+import os
+from typing import Callable, Dict, Iterable, Iterator, List, Optional, Set, Tuple
+
+# --------------------------------------------------------------------------
+# findings + registry
+
+
+@dataclasses.dataclass(frozen=True)
+class Finding:
+    path: str          # as scanned (repo-relative when invoked from root)
+    line: int
+    rule: str
+    message: str
+    hint: str = ""
+
+    def render(self) -> str:
+        out = f"{self.path}:{self.line} · {self.rule} · {self.message}"
+        if self.hint:
+            out += f" · fix: {self.hint}"
+        return out
+
+    def sort_key(self) -> Tuple[str, int, str]:
+        return (self.path, self.line, self.rule)
+
+
+@dataclasses.dataclass(frozen=True)
+class Rule:
+    rule_id: str
+    summary: str
+    check: Callable[["Project"], Iterable[Finding]]
+
+
+RULES: Dict[str, Rule] = {}
+
+
+def rule(rule_id: str, summary: str):
+    """Register ``fn`` as the checker for ``rule_id``."""
+    def deco(fn):
+        if rule_id in RULES:
+            raise ValueError(f"duplicate rule id {rule_id}")
+        RULES[rule_id] = Rule(rule_id, summary, fn)
+        return fn
+    return deco
+
+
+# --------------------------------------------------------------------------
+# per-module model
+
+
+class ModuleInfo:
+    def __init__(self, path: str, relpath: str, source: str):
+        self.path = path
+        self.relpath = relpath
+        self.source = source
+        self.lines = source.splitlines()
+        self.tree = ast.parse(source, filename=path)
+        # local alias -> dotted module ("jnp" -> "jax.numpy",
+        # "steps_mod" -> "repro.launch.steps", and from-imports of
+        # modules: "transformer" -> "repro.models.transformer")
+        self.module_aliases: Dict[str, str] = {}
+        # local name -> (module, original name) for `from m import n`
+        self.from_imports: Dict[str, Tuple[str, str]] = {}
+        # function name -> all defs with that name (any nesting depth)
+        self.defs_by_name: Dict[str, List[ast.FunctionDef]] = {}
+        # module-level defs only (cross-module resolution target)
+        self.toplevel_funcs: Dict[str, ast.FunctionDef] = {}
+        self.parents: Dict[ast.AST, ast.AST] = {}
+        self.dotted = _dotted_name(relpath)
+        self._index()
+
+    def _index(self) -> None:
+        for node in ast.walk(self.tree):
+            for child in ast.iter_child_nodes(node):
+                self.parents[child] = node
+            if isinstance(node, ast.Import):
+                for alias in node.names:
+                    local = alias.asname or alias.name.split(".")[0]
+                    self.module_aliases[local] = (
+                        alias.name if alias.asname else alias.name.split(".")[0])
+                    if alias.asname:
+                        self.module_aliases[alias.asname] = alias.name
+            elif isinstance(node, ast.ImportFrom) and node.module:
+                for alias in node.names:
+                    local = alias.asname or alias.name
+                    self.from_imports[local] = (node.module, alias.name)
+                    # `from repro.models import transformer` also binds a
+                    # module object; record both interpretations.
+                    self.module_aliases.setdefault(
+                        local, f"{node.module}.{alias.name}")
+            elif isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.defs_by_name.setdefault(node.name, []).append(node)
+        for node in self.tree.body:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                self.toplevel_funcs[node.name] = node
+
+    # -- expression helpers -------------------------------------------------
+
+    def raw_chain(self, expr: ast.AST) -> Optional[str]:
+        """Literal dotted text of a Name/Attribute chain, else None."""
+        parts: List[str] = []
+        while isinstance(expr, ast.Attribute):
+            parts.append(expr.attr)
+            expr = expr.value
+        if isinstance(expr, ast.Name):
+            parts.append(expr.id)
+            return ".".join(reversed(parts))
+        return None
+
+    def resolved_chain(self, expr: ast.AST) -> Optional[str]:
+        """Import-resolved dotted name ("jnp.any" -> "jax.numpy.any")."""
+        raw = self.raw_chain(expr)
+        if raw is None:
+            return None
+        root, _, rest = raw.partition(".")
+        if root in self.module_aliases:
+            base = self.module_aliases[root]
+            return f"{base}.{rest}" if rest else base
+        if root in self.from_imports and not rest:
+            mod, orig = self.from_imports[root]
+            return f"{mod}.{orig}"
+        if root in self.from_imports and rest:
+            mod, orig = self.from_imports[root]
+            return f"{mod}.{orig}.{rest}"
+        return raw
+
+    def enclosing_stmt(self, node: ast.AST) -> Optional[ast.stmt]:
+        while node is not None and not isinstance(node, ast.stmt):
+            node = self.parents.get(node)
+        return node
+
+    def enclosing_function(self, node: ast.AST) -> Optional[ast.FunctionDef]:
+        node = self.parents.get(node)
+        while node is not None:
+            if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                return node
+            node = self.parents.get(node)
+        return None
+
+    def loop_ancestor(self, node: ast.AST,
+                      stop: ast.AST) -> Optional[ast.stmt]:
+        """Innermost For/While between ``node`` and ``stop`` (exclusive)."""
+        cur = self.parents.get(node)
+        while cur is not None and cur is not stop:
+            if isinstance(cur, (ast.For, ast.While, ast.AsyncFor)):
+                return cur
+            cur = self.parents.get(cur)
+        return None
+
+
+def _dotted_name(relpath: str) -> str:
+    parts = relpath.replace("\\", "/").split("/")
+    if parts[-1].endswith(".py"):
+        parts[-1] = parts[-1][:-3]
+    if parts[-1] == "__init__":
+        parts = parts[:-1]
+    if "repro" in parts:
+        parts = parts[parts.index("repro"):]
+    else:
+        # fixture/temp trees: the stem is the import name
+        parts = parts[-1:]
+    return ".".join(parts) if parts else relpath
+
+
+# --------------------------------------------------------------------------
+# project + jit-region resolver
+
+_JIT_WRAPPERS = {"jax.jit", "jax.pmap", "jax.vmap", "jax.grad",
+                 "jax.value_and_grad", "jax.checkpoint", "jax.remat"}
+
+
+class Project:
+    def __init__(self, paths: Iterable[str],
+                 known_axes: Optional[Set[str]] = None):
+        self.known_axes = known_axes  # SH001 override for fixture tests
+        self.modules: List[ModuleInfo] = []
+        for path in paths:
+            for fpath, rel in _collect(path):
+                with open(fpath, encoding="utf-8") as fh:
+                    src = fh.read()
+                self.modules.append(ModuleInfo(fpath, rel, src))
+        self.by_dotted: Dict[str, ModuleInfo] = {
+            m.dotted: m for m in self.modules}
+        # (module dotted, func name) -> (mod, node), module-level defs
+        self.func_index: Dict[Tuple[str, str],
+                              Tuple[ModuleInfo, ast.FunctionDef]] = {}
+        for m in self.modules:
+            for name, node in m.toplevel_funcs.items():
+                self.func_index[(m.dotted, name)] = (m, node)
+        self._jit: Dict[int, Tuple[ModuleInfo, ast.FunctionDef]] = {}
+        self._resolve_jit_regions()
+
+    # -- scanning helpers ---------------------------------------------------
+
+    def iter_modules(self) -> Iterator[ModuleInfo]:
+        return iter(self.modules)
+
+    def find_module(self, suffix: str) -> Optional[ModuleInfo]:
+        suffix = suffix.replace("\\", "/")
+        for m in self.modules:
+            if m.relpath.replace("\\", "/").endswith(suffix):
+                return m
+        return None
+
+    def jit_functions(self) -> List[Tuple[ModuleInfo, ast.FunctionDef]]:
+        return list(self._jit.values())
+
+    def is_jit(self, node: ast.AST) -> bool:
+        return id(node) in self._jit
+
+    # -- cross-module function resolution ----------------------------------
+
+    def resolve_func(self, mod: ModuleInfo, expr: ast.AST
+                     ) -> List[Tuple[ModuleInfo, ast.FunctionDef]]:
+        out: List[Tuple[ModuleInfo, ast.FunctionDef]] = []
+        if isinstance(expr, ast.Name):
+            for node in mod.defs_by_name.get(expr.id, ()):
+                out.append((mod, node))
+            if not out and expr.id in mod.from_imports:
+                m, orig = mod.from_imports[expr.id]
+                hit = self.func_index.get((_canon(m), orig))
+                if hit:
+                    out.append(hit)
+        elif isinstance(expr, ast.Attribute) and isinstance(expr.value,
+                                                            ast.Name):
+            base = expr.value.id
+            dotted = mod.module_aliases.get(base)
+            if dotted:
+                hit = self.func_index.get((_canon(dotted), expr.attr))
+                if hit:
+                    out.append(hit)
+        return out
+
+    # -- jit-region computation --------------------------------------------
+
+    def _resolve_jit_regions(self) -> None:
+        work: List[Tuple[ModuleInfo, ast.FunctionDef]] = []
+
+        def mark(mod: ModuleInfo, fn: ast.AST) -> None:
+            if isinstance(fn, (ast.FunctionDef, ast.AsyncFunctionDef)) \
+                    and id(fn) not in self._jit:
+                self._jit[id(fn)] = (mod, fn)
+                work.append((mod, fn))
+
+        for mod in self.modules:
+            for node in ast.walk(mod.tree):
+                if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
+                    # seed 1: decorated with jax.jit / partial(jax.jit, ...)
+                    for dec in node.decorator_list:
+                        if self._is_jit_expr(mod, dec):
+                            mark(mod, node)
+                    # seed 2: every inner def of a make_* factory — the
+                    # repo convention for lazily-jitted step builders
+                    # (launch/steps.py consumed by serve/cache.py,
+                    # serve/spec.py).  Over-approximates: inner helpers
+                    # are traced too when the returned fn calls them.
+                    if node.name.startswith("make_"):
+                        for sub in ast.walk(node):
+                            if sub is not node and isinstance(
+                                    sub, ast.FunctionDef):
+                                mark(mod, sub)
+                elif isinstance(node, ast.Call):
+                    target = self._wrapped_fn_arg(mod, node)
+                    if target is not None:
+                        for tmod, tfn in self.resolve_func(mod, target):
+                            mark(tmod, tfn)
+        # transitive closure: anything a traced function references is
+        # itself traced when called.
+        while work:
+            mod, fn = work.pop()
+            for node in ast.walk(fn):
+                if isinstance(node, (ast.Name, ast.Attribute)):
+                    for tmod, tfn in self.resolve_func(mod, node):
+                        mark(tmod, tfn)
+
+    def _is_jit_expr(self, mod: ModuleInfo, expr: ast.AST) -> bool:
+        """Is ``expr`` jax.jit or functools.partial(jax.jit, ...)?"""
+        d = mod.resolved_chain(expr)
+        if d in _JIT_WRAPPERS:
+            return True
+        if isinstance(expr, ast.Call):
+            fd = mod.resolved_chain(expr.func)
+            if fd in _JIT_WRAPPERS:
+                return True
+            if fd in ("functools.partial", "partial") and expr.args:
+                return self._is_jit_expr(mod, expr.args[0])
+        return False
+
+    def _wrapped_fn_arg(self, mod: ModuleInfo,
+                        call: ast.Call) -> Optional[ast.AST]:
+        """First function-valued operand of a tracing wrapper call:
+        jax.jit(f) / pl.pallas_call(kernel, ...) / functools.partial(f)."""
+        d = mod.resolved_chain(call.func) or ""
+        raw = mod.raw_chain(call.func) or ""
+        if not call.args:
+            return None
+        arg0: ast.AST = call.args[0]
+        if isinstance(arg0, ast.Call):
+            fd = mod.resolved_chain(arg0.func)
+            if fd in ("functools.partial", "partial") and arg0.args:
+                arg0 = arg0.args[0]
+        if d in _JIT_WRAPPERS:
+            return arg0
+        if raw.endswith("pallas_call") or d.endswith("pallas_call"):
+            return arg0
+        if d in ("functools.partial", "partial"):
+            # partial(project_fn, ...) — the serve backends hand these
+            # straight to jitted factories (cache.py _decode_fn).
+            return arg0
+        return None
+
+
+def _canon(dotted: str) -> str:
+    parts = dotted.split(".")
+    if "repro" in parts:
+        parts = parts[parts.index("repro"):]
+    return ".".join(parts)
+
+
+def _collect(path: str) -> Iterator[Tuple[str, str]]:
+    """Yield (path-as-walked, same) — display paths stay exactly as the
+    caller spelled the root, so baselines written from the repo root are
+    stable ("src/repro/...")."""
+    if os.path.isfile(path):
+        yield path, path
+        return
+    for root, dirs, files in os.walk(path):
+        dirs[:] = sorted(d for d in dirs
+                         if d not in ("__pycache__", ".git"))
+        for name in sorted(files):
+            if name.endswith(".py"):
+                full = os.path.join(root, name)
+                yield full, full
+
+
+def run_rules(project: Project,
+              select: Optional[Set[str]] = None,
+              ignore: Optional[Set[str]] = None) -> List[Finding]:
+    findings: List[Finding] = []
+    seen: Set[Tuple[str, int, str, str]] = set()
+    for rid in sorted(RULES):
+        if select and rid not in select:
+            continue
+        if ignore and rid in ignore:
+            continue
+        for f in RULES[rid].check(project):
+            key = (f.path, f.line, f.rule, f.message)
+            if key not in seen:
+                seen.add(key)
+                findings.append(f)
+    findings.sort(key=Finding.sort_key)
+    return findings

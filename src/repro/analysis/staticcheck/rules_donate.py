@@ -1,0 +1,178 @@
+"""DN001 — donated operands read after the donating call.
+
+`jax.jit(..., donate_argnums=...)` and Pallas `input_output_aliases`
+hand the operand's buffer to the callee; the caller's reference is
+invalidated the moment dispatch happens.  Reading it afterwards is a
+use-after-free that jax only sometimes catches (a copy on CPU hides
+it; on TPU it is garbage).  The serve stack's convention — rebind the
+donated name in the same assignment (`nxt, state = step_fn(p, state)`)
+— is recognized and never flagged.
+
+Tracked operand shapes: a bare name (`state`) or a dotted attribute
+(`self.state`).  Anything else (subscripts, call results) is untracked.
+Loops get the stricter treatment: a donating call inside a loop body
+flags any non-rebound read of the operand anywhere in that body, since
+iteration 2 reads what iteration 1 donated.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Dict, FrozenSet, Iterator, List, Optional, Tuple
+
+from .core import Finding, ModuleInfo, Project, rule
+
+
+def _donation_registry(project: Project) -> Dict[str, FrozenSet[int]]:
+    """Map callable tail-name -> donated positional indices, from
+    `x = jax.jit(f, donate_argnums=...)` assignments and
+    `@partial(jax.jit, donate_argnums=...)` decorated defs."""
+    reg: Dict[str, FrozenSet[int]] = {}
+
+    def positions(call: ast.Call) -> FrozenSet[int]:
+        for kw in call.keywords:
+            if kw.arg == "donate_argnums":
+                vals = [s.value for s in ast.walk(kw.value)
+                        if isinstance(s, ast.Constant)
+                        and isinstance(s.value, int)]
+                return frozenset(vals)
+        return frozenset()
+
+    def jit_call(mod: ModuleInfo, expr: ast.AST) -> Optional[ast.Call]:
+        if not isinstance(expr, ast.Call):
+            return None
+        d = mod.resolved_chain(expr.func)
+        if d == "jax.jit":
+            return expr
+        if d in ("functools.partial", "partial") and expr.args and \
+                mod.resolved_chain(expr.args[0]) == "jax.jit":
+            return expr
+        return None
+
+    for mod in project.iter_modules():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.Assign):
+                call = jit_call(mod, node.value)
+                if call is None:
+                    continue
+                pos = positions(call)
+                if not pos:
+                    continue
+                for tgt in node.targets:
+                    raw = mod.raw_chain(tgt)
+                    if raw:
+                        reg[raw.rsplit(".", 1)[-1]] = pos
+            elif isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    call = jit_call(mod, dec)
+                    if call is not None:
+                        pos = positions(call)
+                        if pos:
+                            reg[node.name] = pos
+    return reg
+
+
+def _operand_key(mod: ModuleInfo, expr: ast.AST) -> Optional[str]:
+    raw = mod.raw_chain(expr)
+    if raw and all(p.isidentifier() for p in raw.split(".")):
+        return raw
+    return None
+
+
+def _loads_of(mod: ModuleInfo, scope: ast.AST, key: str,
+              exclude: ast.AST) -> List[ast.AST]:
+    skip = {id(n) for n in ast.walk(exclude)}
+    out = []
+    for node in ast.walk(scope):
+        if id(node) in skip:
+            continue
+        if mod.raw_chain(node) == key and isinstance(
+                getattr(node, "ctx", None), ast.Load):
+            out.append(node)
+    return sorted(out, key=lambda n: n.lineno)
+
+
+def _rebinds(stmt: ast.stmt, key: str, mod: ModuleInfo) -> bool:
+    targets: List[ast.AST] = []
+    if isinstance(stmt, ast.Assign):
+        targets = stmt.targets
+    elif isinstance(stmt, (ast.AugAssign, ast.AnnAssign)):
+        targets = [stmt.target]
+    for t in targets:
+        for sub in ast.walk(t):
+            if mod.raw_chain(sub) == key:
+                return True
+    return False
+
+
+def _stores_between(mod: ModuleInfo, fn: ast.AST, key: str,
+                    lo: int, hi: int) -> bool:
+    for node in ast.walk(fn):
+        if isinstance(node, (ast.Assign, ast.AugAssign, ast.AnnAssign)) and \
+                lo <= node.lineno <= hi and _rebinds(node, key, mod):
+            return True
+    return False
+
+
+def _donated_call_sites(project: Project, mod: ModuleInfo
+                        ) -> Iterator[Tuple[ast.Call, int, str]]:
+    """(call node, donated position, callee label) pairs in ``mod``."""
+    reg = project._dn_registry  # computed once per run in check_dn001
+    for node in ast.walk(mod.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        raw = mod.raw_chain(node.func)
+        if raw is not None:
+            tail = raw.rsplit(".", 1)[-1]
+            for pos in reg.get(tail, ()):
+                yield node, pos, tail
+        # pl.pallas_call(..., input_output_aliases={i: j})(operands...)
+        if isinstance(node.func, ast.Call):
+            inner = node.func
+            d = mod.resolved_chain(inner.func) or ""
+            if d.endswith("pallas_call"):
+                for kw in inner.keywords:
+                    if kw.arg == "input_output_aliases" and isinstance(
+                            kw.value, ast.Dict):
+                        for k in kw.value.keys:
+                            if isinstance(k, ast.Constant) and isinstance(
+                                    k.value, int):
+                                yield node, k.value, "pallas_call"
+
+
+@rule("DN001", "donated operand read after the donating call")
+def check_dn001(project: Project) -> Iterator[Finding]:
+    project._dn_registry = _donation_registry(project)
+    for mod in project.iter_modules():
+        for call, pos, label in _donated_call_sites(project, mod):
+            if pos >= len(call.args):
+                continue
+            key = _operand_key(mod, call.args[pos])
+            if key is None:
+                continue
+            fn = mod.enclosing_function(call)
+            if fn is None:
+                continue
+            stmt = mod.enclosing_stmt(call)
+            if stmt is None:
+                continue
+            if _rebinds(stmt, key, mod):
+                continue        # `nxt, state = step_fn(p, state)` idiom
+            loop = mod.loop_ancestor(stmt, fn)
+            if loop is not None:
+                scope, lo = loop, loop.lineno
+            else:
+                scope, lo = fn, (stmt.end_lineno or stmt.lineno)
+            for load in _loads_of(mod, scope, key, exclude=call):
+                if loop is None and load.lineno <= lo:
+                    continue
+                if loop is None and _stores_between(
+                        mod, fn, key, lo, load.lineno):
+                    break       # rebound before the read: later loads fine
+                yield Finding(
+                    mod.relpath, load.lineno, "DN001",
+                    f"`{key}` was donated to `{label}` (operand {pos}, "
+                    f"line {call.lineno}) and is read afterwards — its "
+                    "buffer belongs to the callee",
+                    "rebind the result over the operand in the same "
+                    "assignment, or pass a copy")
+                break           # one finding per donated call site

@@ -1,0 +1,207 @@
+"""RC001 (recompile hazards) and RC002 (host sync) inside jit regions.
+
+Both rules only look *inside* the jit-region set computed by
+``Project`` — host-side scheduler/engine code may branch on numpy
+values freely; the hazard is doing it under trace, where a Python
+branch bakes one arm into the compiled graph (silent wrong results or
+a retrace per distinct value) and a host pull blocks the dispatch
+pipeline every decode wave.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator
+
+from .core import Finding, ModuleInfo, Project, rule
+
+_TRACED_PREFIXES = ("jax.numpy.", "jax.lax.", "jax.nn.", "jax.scipy.")
+_SYNC_METHODS = (".any", ".all", ".item")
+_NP_PULLS = {"numpy.asarray", "numpy.array"}
+_NP_REDUCTIONS = {"numpy.max", "numpy.min", "numpy.sum", "numpy.mean",
+                  "numpy.argmax", "numpy.argmin", "numpy.any", "numpy.all"}
+
+
+def _is_traced_call(mod: ModuleInfo, call: ast.Call) -> bool:
+    d = mod.resolved_chain(call.func) or ""
+    if d.startswith(_TRACED_PREFIXES):
+        return True
+    raw = mod.raw_chain(call.func) or ""
+    return raw.endswith(_SYNC_METHODS)
+
+
+def _looks_computed(mod: ModuleInfo, expr: ast.AST) -> bool:
+    """Conservative "clearly a traced value": contains a jnp/jax call,
+    a subscript, or arithmetic over one.  Plain names are NOT flagged —
+    closure-captured static ints (page_size, n_heads) are idiomatic."""
+    for sub in ast.walk(expr):
+        if isinstance(sub, ast.Call) and _is_traced_call(mod, sub):
+            return True
+        if isinstance(sub, ast.Subscript):
+            # x.shape[0] / x.strides[1] are static metadata, not tracers
+            if isinstance(sub.value, ast.Attribute) and sub.value.attr in (
+                    "shape", "strides", "dims"):
+                continue
+            return True
+    return False
+
+
+@rule("RC001", "recompile hazard inside a jit region")
+def check_rc001(project: Project) -> Iterator[Finding]:
+    for mod, fn in project.jit_functions():
+        for node in ast.walk(fn):
+            # (a) Python control flow on a traced value
+            if isinstance(node, (ast.If, ast.While, ast.IfExp, ast.Assert)):
+                test = node.test
+                for sub in ast.walk(test):
+                    if isinstance(sub, ast.Call) and _is_traced_call(mod, sub):
+                        kind = type(node).__name__
+                        yield Finding(
+                            mod.relpath, sub.lineno, "RC001",
+                            f"Python {kind} on a traced value inside jit "
+                            f"region `{fn.name}` — concretizes the tracer "
+                            "(TracerBoolConversionError or a retrace per "
+                            "value)",
+                            "use jax.lax.cond / jnp.where, or hoist the "
+                            "decision to the host caller")
+                        break
+            # (b) container display materialized under trace
+            if isinstance(node, ast.Call):
+                d = mod.resolved_chain(node.func) or ""
+                if d in ("jax.numpy.asarray", "jax.numpy.array") and node.args:
+                    a0 = node.args[0]
+                    if isinstance(a0, (ast.List, ast.Dict, ast.Set,
+                                       ast.ListComp)):
+                        yield Finding(
+                            mod.relpath, node.lineno, "RC001",
+                            f"jnp.{d.rsplit('.', 1)[1]} of a Python "
+                            f"container inside jit region `{fn.name}` — "
+                            "rebuilt (and re-hashed) every trace; tracer "
+                            "elements silently devolve to concretization",
+                            "hoist to a module-level np constant, or "
+                            "jnp.stack for traced elements")
+    yield from _static_arg_hazards(project)
+
+
+def _static_arg_hazards(project: Project) -> Iterator[Finding]:
+    """(c) unhashable values passed to declared static jit args.
+
+    Collects `static_argnames` specs from jit-wrapped defs and
+    `g = jax.jit(f, static_argnames=...)` assignments, then flags call
+    sites handing a list/dict/set (or a call producing one) to a static
+    parameter — jax hashes statics per call, so an unhashable raises
+    and a fresh-per-call hashable (tuple rebuilt from a list) retraces.
+    """
+    static_names = {}   # callable name -> set of static kwarg names
+    for mod in project.iter_modules():
+        for node in ast.walk(mod.tree):
+            if isinstance(node, ast.FunctionDef):
+                for dec in node.decorator_list:
+                    names = _static_spec(mod, dec)
+                    if names:
+                        static_names.setdefault(node.name, set()).update(names)
+            elif isinstance(node, ast.Assign) and isinstance(node.value,
+                                                             ast.Call):
+                names = _static_spec(mod, node.value)
+                if not names:
+                    continue
+                for tgt in node.targets:
+                    raw = mod.raw_chain(tgt)
+                    if raw:
+                        static_names.setdefault(
+                            raw.rsplit(".", 1)[-1], set()).update(names)
+    if not static_names:
+        return
+    for mod in project.iter_modules():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            raw = mod.raw_chain(node.func) or ""
+            tail = raw.rsplit(".", 1)[-1]
+            spec = static_names.get(tail)
+            if not spec:
+                continue
+            for kw in node.keywords:
+                if kw.arg in spec and _unhashable(mod, kw.value):
+                    yield Finding(
+                        mod.relpath, node.lineno, "RC001",
+                        f"unhashable value for static arg `{kw.arg}` of "
+                        f"jitted `{tail}`",
+                        "pass a tuple/str/int — statics are hashed into "
+                        "the compilation-cache key")
+
+
+def _static_spec(mod: ModuleInfo, expr: ast.AST):
+    """static_argnames declared by a jax.jit(...) / partial(jax.jit, ...)
+    expression, as a set of strings (argnums handled by name lookup at
+    the def, so only names are collected)."""
+    if not isinstance(expr, ast.Call):
+        return set()
+    d = mod.resolved_chain(expr.func)
+    if d in ("functools.partial", "partial") and expr.args and \
+            (mod.resolved_chain(expr.args[0]) == "jax.jit"):
+        call = expr
+    elif d == "jax.jit":
+        call = expr
+    else:
+        return set()
+    out = set()
+    for kw in call.keywords:
+        if kw.arg == "static_argnames":
+            for sub in ast.walk(kw.value):
+                if isinstance(sub, ast.Constant) and isinstance(sub.value,
+                                                                str):
+                    out.add(sub.value)
+    return out
+
+
+def _unhashable(mod: ModuleInfo, expr: ast.AST) -> bool:
+    if isinstance(expr, (ast.List, ast.Dict, ast.Set, ast.ListComp,
+                         ast.DictComp, ast.SetComp)):
+        return True
+    if isinstance(expr, ast.Call):
+        d = mod.resolved_chain(expr.func) or ""
+        if d in ("list", "dict", "set", "numpy.array", "numpy.asarray",
+                 "jax.numpy.array", "jax.numpy.asarray"):
+            return True
+    return False
+
+
+@rule("RC002", "host sync inside a jit region")
+def check_rc002(project: Project) -> Iterator[Finding]:
+    for mod, fn in project.jit_functions():
+        for node in ast.walk(fn):
+            if not isinstance(node, ast.Call):
+                continue
+            d = mod.resolved_chain(node.func) or ""
+            if isinstance(node.func, ast.Attribute) and \
+                    node.func.attr == "item" and not node.args:
+                yield Finding(
+                    mod.relpath, node.lineno, "RC002",
+                    f".item() inside jit region `{fn.name}` — forces a "
+                    "device→host sync under trace",
+                    "keep the value on-device; pull it after the jitted "
+                    "call returns")
+            elif d in _NP_PULLS and node.args and not isinstance(
+                    node.args[0], (ast.Constant, ast.List, ast.Tuple)):
+                yield Finding(
+                    mod.relpath, node.lineno, "RC002",
+                    f"np.{d.rsplit('.', 1)[1]} on a traced value inside "
+                    f"jit region `{fn.name}` — concretizes (host pull or "
+                    "TracerArrayConversionError)",
+                    "use jnp.asarray, or move the conversion host-side")
+            elif d in _NP_REDUCTIONS and node.args and _looks_computed(
+                    mod, node.args[0]):
+                yield Finding(
+                    mod.relpath, node.lineno, "RC002",
+                    f"numpy reduction `{d}` over a traced value inside "
+                    f"jit region `{fn.name}`",
+                    f"use jnp.{d.rsplit('.', 1)[1]}")
+            elif isinstance(node.func, ast.Name) and \
+                    node.func.id in ("int", "float", "bool") and \
+                    node.args and _looks_computed(mod, node.args[0]):
+                yield Finding(
+                    mod.relpath, node.lineno, "RC002",
+                    f"{node.func.id}() of a computed value inside jit "
+                    f"region `{fn.name}` — concretizes the tracer",
+                    "keep it as a jnp scalar; cast host-side after the "
+                    "call")

@@ -1,0 +1,95 @@
+"""PL001 — Pallas BlockSpec index maps must stay pure.
+
+An index map runs at *trace* time, once per grid position, and must be
+a pure function of its parameters: the grid indices plus (with
+``PrefetchScalarGridSpec``) the scalar-prefetch refs threaded in front
+of them.  Three things break that contract:
+
+- calling anything (``jnp.floor_divide(h, g)`` materializes an op into
+  the index computation — the lowering wants plain index arithmetic);
+- subscripting a *captured* array (only prefetch-ref params may be
+  indexed — a closed-over table silently bakes trace-time contents in);
+- touching jnp/np/jax attributes at all.
+
+Closure capture of plain scalars is explicitly allowed: the repo's GQA
+maps (`kernels/paged_attention.py`) capture the static int ``g = H //
+Hkv`` and index with ``h // g`` — that is idiomatic and must not flag.
+"""
+from __future__ import annotations
+
+import ast
+from typing import Iterator, Optional, Set
+
+from .core import Finding, ModuleInfo, Project, rule
+
+_MODULE_ROOTS = ("jax", "jax.numpy", "numpy")
+
+
+def _index_map_expr(call: ast.Call) -> Optional[ast.AST]:
+    """The index_map operand of a BlockSpec(...) call, if any."""
+    for kw in call.keywords:
+        if kw.arg == "index_map":
+            return kw.value
+    if len(call.args) >= 2:
+        return call.args[1]
+    return None
+
+
+def _check_body(mod: ModuleInfo, body: ast.AST, params: Set[str],
+                where: int) -> Iterator[Finding]:
+    for node in ast.walk(body):
+        if isinstance(node, ast.Call):
+            yield Finding(
+                mod.relpath, node.lineno, "PL001",
+                "index_map calls/materializes an op — index maps must be "
+                "plain arithmetic over grid indices and prefetch refs",
+                "precompute outside the BlockSpec, or pass the value via "
+                "scalar prefetch")
+            return
+        if isinstance(node, ast.Subscript):
+            root = node.value
+            while isinstance(root, ast.Attribute):
+                root = root.value
+            if isinstance(root, ast.Name) and root.id not in params:
+                yield Finding(
+                    mod.relpath, node.lineno, "PL001",
+                    f"index_map subscripts closed-over `{root.id}` — only "
+                    "grid indices and scalar-prefetch ref parameters may "
+                    "be indexed",
+                    "thread the table through PrefetchScalarGridSpec "
+                    "scalar prefetch instead of the closure")
+                return
+        if isinstance(node, ast.Attribute):
+            d = mod.resolved_chain(node)
+            if d and any(d == r or d.startswith(r + ".")
+                         for r in _MODULE_ROOTS):
+                yield Finding(
+                    mod.relpath, node.lineno, "PL001",
+                    f"index_map references `{mod.raw_chain(node)}` — "
+                    "module state inside an index map runs per grid "
+                    "position at trace time",
+                    "keep index maps to arithmetic over their parameters")
+                return
+
+
+@rule("PL001", "impure Pallas index_map")
+def check_pl001(project: Project) -> Iterator[Finding]:
+    for mod in project.iter_modules():
+        for node in ast.walk(mod.tree):
+            if not isinstance(node, ast.Call):
+                continue
+            raw = mod.raw_chain(node.func) or ""
+            if raw.rsplit(".", 1)[-1] != "BlockSpec":
+                continue
+            imap = _index_map_expr(node)
+            if imap is None:
+                continue
+            if isinstance(imap, ast.Lambda):
+                params = {a.arg for a in imap.args.args}
+                yield from _check_body(mod, imap.body, params, imap.lineno)
+            elif isinstance(imap, ast.Name):
+                for dmod, dfn in project.resolve_func(mod, imap):
+                    params = {a.arg for a in dfn.args.args}
+                    for stmt in dfn.body:
+                        yield from _check_body(dmod, stmt, params,
+                                               dfn.lineno)

@@ -170,7 +170,7 @@ def main(argv=None):
             print(piece, end="", flush=True)
         print()
         done = engine.scheduler.run()
-        for r, rid in zip(rest, rest_rids):
+        for r, rid in zip(rest, rest_rids, strict=True):
             ServeEngine._finalize(r, done.pop(rid))
         out = [first] + rest
     else:

@@ -183,7 +183,7 @@ def forward(params, batch, rcfg: RunConfig, mode: str = "lp"):
         k = cfg.hybrid_attn_every
         n_seg, rem = divmod(cfg.n_layers, k)
         for s in range(n_seg):
-            seg = jax.tree.map(lambda a: a[s * k:(s + 1) * k],
+            seg = jax.tree.map(lambda a, s=s: a[s * k:(s + 1) * k],
                                params["backbone"])
             z = _serial_buffer(seg, z, cfg, kind="mamba2", causal=True,
                                rope=None)
@@ -347,8 +347,8 @@ def _decode_hybrid(params, cache, z, rcfg: RunConfig):
     li = 0
     for s in range(n_seg + (1 if rem else 0)):
         span = k if s < n_seg else rem
-        for i in range(span):
-            p = jax.tree.map(lambda a: a[li], params["backbone"])
+        for _ in range(span):
+            p = jax.tree.map(lambda a, li=li: a[li], params["backbone"])
             lc = {"conv": cache["mamba"]["conv"][li],
                   "h": cache["mamba"]["h"][li]}
             z, nlc = block_step(p, z, cfg, kind="mamba2", causal=True,

@@ -92,7 +92,7 @@ def build_spec(logical: Tuple[Optional[str], ...], shape,
     per-tensor axis dedupe, and an FSDP fallback for large leaves."""
     used = set()
     phys = []
-    for dim, name in zip(shape, logical):
+    for dim, name in zip(shape, logical, strict=True):
         ax = resolve_axis(name, cfg, mesh)
         if ax is not None:
             axs = ax if isinstance(ax, tuple) else (ax,)
@@ -105,7 +105,7 @@ def build_spec(logical: Tuple[Optional[str], ...], shape,
     if cfg.fsdp and cfg.fsdp in mesh.axis_names and cfg.fsdp not in used \
             and int(np.prod(shape)) >= _FSDP_MIN_SIZE:
         fs = mesh.shape[cfg.fsdp]
-        cands = [(d, i) for i, (d, ax) in enumerate(zip(shape, phys))
+        cands = [(d, i) for i, (d, ax) in enumerate(zip(shape, phys, strict=True))
                  if ax is None and d % fs == 0]
         if cands:
             _, i = max(cands)

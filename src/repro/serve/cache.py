@@ -354,7 +354,7 @@ class CacheBackend:
         idx = jnp.asarray(np.asarray(pages, np.int32))
         flat, treedef = jax.tree.flatten(state)
         flat = [leaf.at[:, idx].set(jnp.asarray(d, leaf.dtype))
-                for leaf, d in zip(flat, leaves)]
+                for leaf, d in zip(flat, leaves, strict=True)]
         return self.shard_state(jax.tree.unflatten(treedef, flat))
 
     def page_nbytes(self, state) -> int:

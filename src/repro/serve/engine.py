@@ -256,7 +256,7 @@ class ServeEngine:
         rids = [self._submit_one(r).rid for r in requests]
         done = sched.run()
         return [self._finalize(r, done.pop(rid))
-                for r, rid in zip(requests, rids)]
+                for r, rid in zip(requests, rids, strict=True)]
 
     def submit(self, request: Request, *, stream: bool = False,
                detokenize: Optional[Callable] = None):

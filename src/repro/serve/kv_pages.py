@@ -204,7 +204,7 @@ class PrefixCache:
         page (concurrent prefills of the same prefix are harmless)."""
         self._tick += 1
         children = self.children
-        for key, page in zip(self._chunks(prompt), pages):
+        for key, page in zip(self._chunks(prompt), pages, strict=False):
             node = children.get(key)
             if node is None:
                 self.alloc.share([page])

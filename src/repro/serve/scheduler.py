@@ -263,7 +263,11 @@ class Scheduler:
         self.backend = backend if backend is not None else \
             make_backend(rcfg, params, mesh=mesh, page_size=page_size,
                          sharding=sharding, fused=fused)
-        assert self.backend.page_size == page_size
+        if self.backend.page_size != page_size:
+            raise ValueError(
+                f"backend page_size {self.backend.page_size} != scheduler "
+                f"page_size {page_size}: page-table indices would not "
+                "agree across the allocator and the backend pools")
         self.pages_per_slot = pages_needed(self.max_len, page_size)
         # default pool: every slot can hold a max_len sequence, + scratch;
         # under a mesh the size is rounded up so the page axis divides
@@ -803,7 +807,12 @@ class Scheduler:
             # token (position L); the catch-up is <= last wave's accepted
             # count, so k+1 columns always suffice
             row = req.out[int(sp.lengths[b]) - len(req.prompt):]
-            assert 1 <= len(row) <= k + 1
+            if not 1 <= len(row) <= k + 1:
+                raise COWViolationError(
+                    f"spec ingest row for slot {b} has {len(row)} tokens "
+                    f"(want 1..{k + 1}): draft cache length "
+                    f"{int(sp.lengths[b])} drifted from the canonical "
+                    "output — a previous wave committed the wrong count")
             ingest[b, :len(row)] = row
             n_in[b] = len(row)
             counters[b] = len(req.out)

@@ -98,7 +98,7 @@ def restore(ckpt_dir: str, params_template, opt_template,
             specs = jax.tree.flatten(param_specs(template, rcfg, mesh))[0] \
                 if template is not None else None
         out = []
-        for i, (a, t) in enumerate(zip(loaded, leaves)):
+        for a, t in zip(loaded, leaves, strict=True):
             a = a.astype(t.dtype) if hasattr(t, "dtype") else a
             out.append(jax.device_put(a))
         return jax.tree.unflatten(treedef, out)

@@ -97,3 +97,31 @@ def test_cache_backends_doc_methods_exist():
     assert not missing, (
         f"docs/cache-backends.md names CacheBackend methods that do not "
         f"exist: {missing}")
+
+
+def _registry_rule_ids():
+    """Rule ids from the staticcheck registry — the package is
+    stdlib-only, so importing it keeps this job jax-free."""
+    import sys
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.analysis.staticcheck import RULES
+    return set(RULES)
+
+
+def test_static_analysis_doc_matches_registry():
+    """Every rule id named in docs/static-analysis.md exists in the
+    staticcheck registry, and every registered rule is documented in
+    the catalog table — the doc and the gate cannot drift apart."""
+    body = open(os.path.join(REPO, "docs", "static-analysis.md"),
+                encoding="utf-8").read()
+    named = set(re.findall(r"\b([A-Z]{2}\d{3})\b", body))
+    rules = _registry_rule_ids()
+    assert named, "no rule ids found in docs/static-analysis.md"
+    ghosts = sorted(named - rules)
+    assert not ghosts, (
+        f"docs/static-analysis.md names rules not in the registry: "
+        f"{ghosts}")
+    undocumented = sorted(rules - named)
+    assert not undocumented, (
+        f"registered rules missing from docs/static-analysis.md: "
+        f"{undocumented}")

@@ -217,7 +217,7 @@ def test_fused_greedy_bitwise_equals_gathered(name):
     kw = dict(max_len=MAX_LEN, max_batch=2, page_size=4)
     _, ref = engine_outputs(rcfg, params, GREEDY_REQS, fused=False, **kw)
     _, got = engine_outputs(rcfg, params, GREEDY_REQS, **kw)
-    for a, b in zip(ref, got):
+    for a, b in zip(ref, got, strict=True):
         np.testing.assert_array_equal(a, b)
 
 
@@ -230,7 +230,7 @@ def test_fused_sampled_stream_equals_gathered(name):
     kw = dict(max_len=MAX_LEN, max_batch=2, page_size=4)
     _, ref = engine_outputs(rcfg, params, SAMPLED_REQS, fused=False, **kw)
     _, got = engine_outputs(rcfg, params, SAMPLED_REQS, **kw)
-    for a, b in zip(ref, got):
+    for a, b in zip(ref, got, strict=True):
         np.testing.assert_array_equal(a, b)
 
 
@@ -245,7 +245,7 @@ def test_spec_decode_unchanged_by_fused_step(name):
     _, ref = engine_outputs(rcfg, params, GREEDY_REQS, **kw)
     eng, got = engine_outputs(rcfg, params, GREEDY_REQS,
                               spec=SpecConfig(cf=2, k=3), **kw)
-    for a, b in zip(ref, got):
+    for a, b in zip(ref, got, strict=True):
         np.testing.assert_array_equal(a, b)
     assert eng.stats["tokens_drafted"] > 0
 

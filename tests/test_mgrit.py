@@ -76,7 +76,7 @@ def test_serial_solve_matches_manual_loop():
     z = z0
     for n in range(8):
         assert np.allclose(states[n], z, atol=1e-6)
-        z = toy_step({"params": jax.tree.map(lambda a: a[n], stacked["params"]),
+        z = toy_step({"params": jax.tree.map(lambda a, n=n: a[n], stacked["params"]),
                       "gate": stacked["gate"][n]}, z, h)
     np.testing.assert_allclose(np.asarray(zT), np.asarray(z), rtol=1e-6)
 

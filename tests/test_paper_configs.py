@@ -38,7 +38,8 @@ def test_paper_arch_forward_and_grad(arch):
     batch = make_batch(rcfg, jax.random.fold_in(key, 1))
     for mode in ("serial", "lp"):
         val, grads = jax.jit(jax.value_and_grad(
-            lambda p: transformer.loss_fn(p, batch, rcfg, mode=mode)[0]))(
+            lambda p, mode=mode: transformer.loss_fn(
+                p, batch, rcfg, mode=mode)[0]))(
             params)
         assert np.isfinite(float(val)), f"{arch}/{mode}"
         assert all(np.all(np.isfinite(np.asarray(g, np.float32)))

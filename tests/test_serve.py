@@ -242,7 +242,7 @@ def test_prefix_sharing_skips_prefill_and_matches_no_sharing(setup):
     shared = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
                          page_size=4, share_prefix=True)
     out_shared = shared.generate(reqs())
-    for a, b in zip(out_base, out_shared):
+    for a, b in zip(out_base, out_shared, strict=True):
         np.testing.assert_array_equal(a.output, b.output)
     sb, ss = base.scheduler.stats, shared.scheduler.stats
     assert ss["prefill_tokens"] < sb["prefill_tokens"]

@@ -101,7 +101,8 @@ def test_every_family_samples_and_temp0_is_greedy(name):
                       top_p=0.9, seed=7)
     out = eng.generate([greedy, sampled])
     for r, ref in zip(out, (dense_oracle(rcfg, params, step, greedy),
-                            dense_oracle(rcfg, params, step, sampled))):
+                            dense_oracle(rcfg, params, step, sampled)),
+                        strict=True):
         np.testing.assert_array_equal(r.output, ref)
 
 
@@ -123,7 +124,7 @@ def test_prefix_sharing_matches_no_sharing(name):
     shared = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
                          page_size=4, share_prefix=True)
     out_shared = shared.generate(reqs())
-    for a, b in zip(out_base, out_shared):
+    for a, b in zip(out_base, out_shared, strict=True):
         np.testing.assert_array_equal(a.output, b.output)
     sb, ss = base.scheduler.stats, shared.scheduler.stats
     assert ss["prefill_tokens"] < sb["prefill_tokens"]

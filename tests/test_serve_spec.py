@@ -85,7 +85,7 @@ def test_spec_greedy_bitwise_equals_plain(name):
     _, ref = engine_outputs(rcfg, params, MIXED_REQS, **kw)
     eng, got = engine_outputs(rcfg, params, MIXED_REQS,
                               spec=SpecConfig(cf=2, k=3), **kw)
-    for a, b in zip(ref, got):
+    for a, b in zip(ref, got, strict=True):
         np.testing.assert_array_equal(a, b)
     st = eng.stats
     assert st["verify_calls"] > 0 and st["tokens_drafted"] > 0
@@ -102,7 +102,7 @@ def test_spec_cf_k_grid_stays_bitwise(cf, k):
     _, ref = engine_outputs(rcfg, params, MIXED_REQS, **kw)
     eng, got = engine_outputs(rcfg, params, MIXED_REQS,
                               spec=SpecConfig(cf=cf, k=k), **kw)
-    for a, b in zip(ref, got):
+    for a, b in zip(ref, got, strict=True):
         np.testing.assert_array_equal(a, b)
     if cf == 1:
         assert eng.stats["accept_rate"] == 1.0
@@ -136,7 +136,7 @@ def test_spec_topk1_sampling_collapses_to_greedy():
     _, ref = engine_outputs(rcfg, params, greedy_reqs, **kw)
     _, got = engine_outputs(rcfg, params, hot_reqs,
                             spec=SpecConfig(cf=2, k=3), **kw)
-    for a, b in zip(ref, got):
+    for a, b in zip(ref, got, strict=True):
         np.testing.assert_array_equal(a, b)
 
 
@@ -156,9 +156,9 @@ def test_spec_sampled_is_deterministic_and_placement_free():
                           spec=SpecConfig(cf=2, k=3), **kw)
     _, c = engine_outputs(rcfg, params, reqs[::-1],
                           spec=SpecConfig(cf=2, k=3), **kw)
-    for x, y in zip(a, b):
+    for x, y in zip(a, b, strict=True):
         np.testing.assert_array_equal(x, y)
-    for x, y in zip(a, c[::-1]):
+    for x, y in zip(a, c[::-1], strict=True):
         np.testing.assert_array_equal(x, y)
 
 
@@ -286,7 +286,7 @@ def test_prefix_cache_persists_across_engine_restart(name, tmp_path):
     assert eng2.scheduler.prefix.n_cached_pages == n_saved
     out = eng2.generate([Request(prompt=p, max_new_tokens=n)
                          for p, n in reqs])
-    for a, b in zip(ref, out):
+    for a, b in zip(ref, out, strict=True):
         np.testing.assert_array_equal(a, b.output)
     st = eng2.scheduler.stats
     assert st["shared_tokens"] >= len(common)   # restored pages reused
@@ -332,7 +332,7 @@ def test_spec_conformance_property():
         _, ref = engine_outputs(rcfg, params, reqs, **kw)
         _, got = engine_outputs(rcfg, params, reqs,
                                 spec=SpecConfig(cf=cf, k=k), **kw)
-        for a, b in zip(ref, got):
+        for a, b in zip(ref, got, strict=True):
             np.testing.assert_array_equal(a, b)
 
     run()

@@ -1,0 +1,157 @@
+"""Runtime twin of staticcheck's RC001: the serve hot path must not
+recompile.
+
+Wraps the backend's jitted prefill/step/verify callables in a
+trace-counter (the pre-jit Python body runs exactly once per trace, so
+re-wrapping the cached factory output counts compilations directly)
+and drives a full admit→evict→refill→preempt→resume cycle, asserting
+each callable is compiled at most once per (bucket, batch) argument
+shape.  A duplicate signature in the counter means jax retraced an
+already-seen shape — the recompile-per-wave failure mode PR 1's
+occupancy-mask design exists to prevent, which no output-correctness
+test can catch (the tokens stay right; the engine just gets slow)."""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import (MGRITConfig, ModelConfig, OptimizerConfig,
+                                RunConfig, ShapeConfig)
+from repro.launch import steps as steps_mod
+from repro.models import transformer
+from repro.serve.scheduler import Scheduler
+from repro.serve.spec import SpecConfig
+
+pytestmark = pytest.mark.serve
+
+VOCAB = 32
+MAX_LEN = 24
+
+
+def make_setup(seed: int = 0):
+    rcfg = RunConfig(
+        model=ModelConfig(name="trace_decoder", family="decoder",
+                          n_layers=4, d_model=16, n_heads=2, n_kv_heads=2,
+                          d_ff=32, vocab_size=VOCAB, act="gelu",
+                          norm="layernorm", dtype="float32"),
+        mgrit=MGRITConfig(enabled=False, cf=2, fwd_iters=1,
+                          bwd_iters=1, n_open=1, n_close=1, pad_to=2),
+        optimizer=OptimizerConfig(),
+        shape=ShapeConfig("trace_decoder", "train", 16, 4))
+    params = transformer.init_model(jax.random.PRNGKey(seed), rcfg)
+    return rcfg, params
+
+
+def _sig(args):
+    leaves = jax.tree_util.tree_leaves(args)
+    return tuple((tuple(x.shape), str(x.dtype)) for x in leaves)
+
+
+def _count_step_traces(backend):
+    """Replace the backend's jitted prefill/step callable with a
+    counting twin of the same factory output; returns the signature
+    log (one entry per trace)."""
+    inner = steps_mod.make_paged_serve_fn(
+        backend.rcfg, backend.mesh, backend._decode_fn(),
+        fused=backend.fused)
+    sigs = []
+
+    def counting(*args):
+        sigs.append(_sig(args))
+        return inner(*args)
+
+    backend._step_fn = jax.jit(counting, donate_argnums=(1,))
+    return sigs
+
+
+def _count_verify_traces(backend):
+    """Pre-build the (normally lazy) jitted verify callable with a
+    trace counter installed."""
+    vf, cf = backend._verify_fns()
+    inner = steps_mod.make_paged_verify_fn(backend.rcfg, backend.mesh,
+                                           vf, cf)
+    sigs = []
+
+    def counting(*args):
+        sigs.append(_sig(args))
+        return inner(*args)
+
+    backend._verify_fn = jax.jit(counting, donate_argnums=(1,))
+    return sigs
+
+
+def _assert_trace_once(sigs, label):
+    dupes = [s for s in set(sigs) if sigs.count(s) > 1]
+    assert not dupes, (
+        f"{label} retraced {len(dupes)} already-seen shape signature(s) "
+        f"across {len(sigs)} traces — the hot path recompiled")
+
+
+def test_preempt_resume_cycle_compiles_each_shape_once():
+    """admit → decode → preempt(spill) → evict → refill → resume, plus
+    a trailing fresh request: every step/prefill trace has a distinct
+    (bucket, batch) shape."""
+    rcfg, params = make_setup()
+    sched = Scheduler(rcfg, params, max_batch=1, page_size=4,
+                      max_len=MAX_LEN, share_prefix=False,
+                      preempt_policy="spill")
+    sigs = _count_step_traces(sched.backend)
+
+    a = sched.submit_request(np.arange(2, 9, dtype=np.int32), 8,
+                             priority=5)
+    for _ in range(3):
+        sched.step()                  # admit + decode waves
+    b = sched.submit_request(np.array([5, 4, 3, 2, 1], np.int32), 4,
+                             priority=0)
+    sched.step()                      # slot exhaustion -> preempt a
+    assert a.preemptions == 1
+    done = sched.run()                # b evicts, a restores + finishes
+    assert not done[a.rid].failed and not done[b.rid].failed
+    assert sched.stats["preemptions"] == 1
+
+    c = sched.submit_request(np.arange(1, 6, dtype=np.int32), 4)
+    done = sched.run()                # refill into the drained engine
+    assert not done[c.rid].failed
+    assert len(sigs) > 0
+    _assert_trace_once(sigs, "paged serve step")
+
+
+def test_batched_churn_compiles_each_shape_once():
+    """Continuous-batching churn at max_batch=2 — staggered admits,
+    evictions, and refills across mixed prompt lengths reuse the same
+    compiled step for every repeated (bucket, batch) shape."""
+    rcfg, params = make_setup()
+    sched = Scheduler(rcfg, params, max_batch=2, page_size=4,
+                      max_len=MAX_LEN, share_prefix=False)
+    sigs = _count_step_traces(sched.backend)
+    prompts = [np.arange(1, 8, dtype=np.int32),
+               np.array([3, 1, 2], np.int32),
+               np.arange(4, 10, dtype=np.int32) % VOCAB,
+               np.array([7, 7, 1, 2], np.int32),
+               np.arange(2, 5, dtype=np.int32)]
+    reqs = []
+    for i, p in enumerate(prompts):
+        reqs.append(sched.submit_request(p, 3 + (i % 3)))
+        sched.step()                  # interleave admit with decode
+    done = sched.run()
+    assert all(not done[r.rid].failed for r in reqs)
+    assert len(sigs) > 0
+    _assert_trace_once(sigs, "paged serve step")
+
+
+def test_spec_verify_compiles_each_shape_once():
+    """The speculative verify wave is shape-stable too: one compile per
+    (bucket, batch) signature across a mixed-length spec run."""
+    rcfg, params = make_setup()
+    sched = Scheduler(rcfg, params, max_batch=2, page_size=4,
+                      max_len=MAX_LEN, share_prefix=False,
+                      spec=SpecConfig(cf=2, k=3))
+    step_sigs = _count_step_traces(sched.backend)
+    verify_sigs = _count_verify_traces(sched.backend)
+    reqs = [sched.submit_request(np.arange(1, 8, dtype=np.int32), 6),
+            sched.submit_request(np.array([3, 1, 2], np.int32), 5)]
+    done = sched.run()
+    assert all(not done[r.rid].failed for r in reqs)
+    assert sched.stats["verify_calls"] > 0
+    assert len(verify_sigs) > 0
+    _assert_trace_once(step_sigs, "paged serve step")
+    _assert_trace_once(verify_sigs, "paged verify step")
