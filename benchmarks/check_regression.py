@@ -63,6 +63,11 @@ REQUIRED_ROWS = (
     # under open-loop load (check_traffic_goodput re-asserts the floor
     # and that no request was silently dropped).
     "serve/traffic_goodput",
+    # serve observability (PR-9): enabled-vs-disabled engine throughput.
+    # Losing this row means the ≤3% observability-cost contract stopped
+    # being measured (check_obs_overhead re-asserts a looser ceiling
+    # from the counters).
+    "serve/obs_overhead",
 )
 
 
@@ -199,6 +204,30 @@ def check_traffic_goodput(cur: dict, floor: float = 0.5) -> list:
     return failures
 
 
+def check_obs_overhead(cur: dict, ceil: float = 0.05) -> list:
+    """The observability stack must stay within its throughput-cost
+    contract: bench_traffic measures decode tok/s with the obs stack
+    enabled vs disabled (single engine, hot-path toggle alternated per
+    decode wave, trimmed-mean wave times) and raises in-run above 3%;
+    the JSON gate re-asserts a looser 5% so a stale artifact still
+    fails while CI timer noise does not."""
+    rec = cur.get("serve/obs_overhead")
+    if rec is None:
+        return []  # absence is check_required_rows' problem
+    c = _counters(rec)
+    overhead = c.get("overhead")
+    if overhead is None:
+        return ["serve/obs_overhead: derived field lacks overhead="]
+    if overhead > ceil:
+        return [f"serve/obs_overhead: observability costs "
+                f"{overhead:.1%} of engine throughput (ceiling "
+                f"{ceil:.0%}; {c.get('tok_s_on')} vs "
+                f"{c.get('tok_s_off')} tok/s)"]
+    print(f"ok    serve/obs_overhead: {overhead:.1%} <= {ceil:.0%} "
+          f"({c.get('tok_s_on')} tok/s on vs {c.get('tok_s_off')} off)")
+    return []
+
+
 def main(argv=None) -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("current")
@@ -228,6 +257,7 @@ def main(argv=None) -> int:
     failures += check_fused_speedup(cur)
     failures += check_spec_accept(cur)
     failures += check_traffic_goodput(cur)
+    failures += check_obs_overhead(cur)
     failures += check_required_rows(
         cur, prefixes if args.required == "gated" else None)
     for name, brec in sorted(base.items()):

@@ -7,7 +7,8 @@
       [--priority 0,1] [--ttft-slo 0.5] [--tpot-slo 0.1] \
       [--preempt-policy auto] \
       [--shared-prefix-len 0] [--no-share-prefix] [--stream] \
-      [--spec-cf 4 --spec-k 4] [--stats] [--mesh 1,2]
+      [--spec-cf 4 --spec-k 4] [--stats] [--mesh 1,2] \
+      [--metrics-json metrics.json] [--trace-out trace.json]
 
 Every decode-capable family runs the same paged continuous-batching
 engine (batched chunked prefill + refcounted paged state with prefix
@@ -90,6 +91,13 @@ def main(argv=None):
     ap.add_argument("--stats", action="store_true",
                     help="print the engine's full counter dict (spec "
                          "decode + prefix cache included)")
+    ap.add_argument("--metrics-json", default="",
+                    help="write the metrics-registry snapshot (counters, "
+                         "gauges, histogram p50/p95/p99) as JSON here")
+    ap.add_argument("--trace-out", default="",
+                    help="write the request-lifecycle trace as Chrome/"
+                         "Perfetto trace-event JSON here (open at "
+                         "https://ui.perfetto.dev)")
     ap.add_argument("--mesh", default="",
                     help="dp,tp — serve mesh-sharded on a (data, model) "
                          "mesh (e.g. --mesh 1,2 for 2-way tensor "
@@ -200,6 +208,18 @@ def main(argv=None):
               f"({st['pages_spilled']} pages spilled, "
               f"{st['pages_restored']} restored, "
               f"{st['preempt_recomputes']} recompute resumes)")
+    def _pcts(hist_name):
+        h = engine.obs.metrics.histogram(hist_name)
+        if h is None or h.count == 0:
+            return None
+        p = h.percentiles()
+        return (f"p50/p95/p99 = {p['p50']*1e3:.0f}/{p['p95']*1e3:.0f}/"
+                f"{p['p99']*1e3:.0f} ms")
+    ttft_p, tpot_p = _pcts("request.ttft_s"), _pcts("request.tpot_s")
+    if ttft_p or tpot_p:
+        print("latency percentiles (registry): "
+              + " ".join(f"{k} {v}" for k, v in
+                         (("ttft", ttft_p), ("tpot", tpot_p)) if v))
     if args.ttft_slo or args.tpot_slo:
         ok = sum(r.slo_met for r in out)
         print(f"SLO attainment: {ok}/{len(out)} requests met "
@@ -217,6 +237,16 @@ def main(argv=None):
         for key, val in sorted(engine.stats.items()):
             print(f"  {key} = {val:.4f}" if isinstance(val, float)
                   else f"  {key} = {val}")
+    if args.metrics_json:
+        import json
+        with open(args.metrics_json, "w") as f:
+            json.dump(engine.metrics_snapshot(), f, indent=2,
+                      default=float)
+        print(f"metrics snapshot -> {args.metrics_json}")
+    if args.trace_out:
+        n = engine.save_trace(args.trace_out)
+        print(f"lifecycle trace -> {args.trace_out} ({n} events; open "
+              f"at https://ui.perfetto.dev)")
     print(f"steady-state decode probe: "
           f"{engine.throughput_probe(args.max_batch):.1f} tok/s")
     return 0

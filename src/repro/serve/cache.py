@@ -62,6 +62,7 @@ from repro.models import attention as attn_mod
 from repro.models import ssm as ssm_mod
 from repro.models import transformer
 from repro.models.blocks import block_kind
+from repro.obs import profile as obs_profile
 from repro.parallel import params as pshard
 from repro.parallel.sharding import _axis_size, resolve_axis
 from repro.serve.kv_pages import PageAllocator
@@ -140,6 +141,13 @@ class CacheBackend:
             speculative ``verify`` wave gets the same treatment — fused
             forwards and a sliced table — so spec decode keeps its edge
             over the (equally fused) plain decode it races.
+        obs: optional :class:`repro.obs.Observability` bundle. Every
+            jitted callable this backend builds registers an XLA-trace
+            counter in ``obs.compile_counts`` (the
+            ``engine.compiles_per_callable`` gauge), and the host
+            dispatch sites are wrapped in opt-in profiler spans. None
+            keeps a private counts dict and no-op spans — same compiled
+            code either way.
     """
 
     #: pages are state snapshots (SSM/hybrid): no intra-wave sharing, no
@@ -147,7 +155,8 @@ class CacheBackend:
     snapshot_state = False
 
     def __init__(self, rcfg: RunConfig, params, mesh=None,
-                 page_size: int = 16, sharding=None, fused: bool = True):
+                 page_size: int = 16, sharding=None, fused: bool = True,
+                 obs=None):
         if mesh is not None:
             rcfg = rcfg.replace(sharding=sharding or serve_sharding())
             params = jax.device_put(
@@ -160,9 +169,20 @@ class CacheBackend:
         self.page_size = page_size
         self.fused = fused
         self.alloc: Optional[PageAllocator] = None
+        # compile-event counters: the pre-jit body runs once per XLA
+        # trace, so this dict counts compilations of every callable the
+        # backend (and the draft, which shares the dict) builds
+        self.compile_counts = obs.compile_counts if obs is not None \
+            else {}
+        self._span = obs.span if obs is not None \
+            else obs_profile.span_factory(False)
         self._step_fn = jax.jit(
-            steps_mod.make_paged_serve_fn(rcfg, mesh, self._decode_fn(),
-                                          fused=fused),
+            obs_profile.count_traces(
+                f"{type(self).__name__}.serve_step",
+                steps_mod.make_paged_serve_fn(rcfg, mesh,
+                                              self._decode_fn(),
+                                              fused=fused),
+                self.compile_counts),
             donate_argnums=(1,))
         self._verify_fn = None          # built lazily (spec decode only)
 
@@ -228,22 +248,25 @@ class CacheBackend:
         p_eff = 1 << (max(-(-need // self.page_size), 1) - 1).bit_length()
         return table[:, :min(P, p_eff)]
 
-    def _apply(self, state, slots: SlotBatch, tokens):
-        nxt, state = self._step_fn(
-            self.params, state, np.asarray(tokens, np.int32), slots.lengths,
-            slots.n_new, self._table_view(slots), slots.temps, slots.top_ks,
-            slots.top_ps, slots.seeds, slots.counters)
+    def _apply(self, state, slots: SlotBatch, tokens,
+               label: str = "serve.step"):
+        with self._span(label):
+            nxt, state = self._step_fn(
+                self.params, state, np.asarray(tokens, np.int32),
+                slots.lengths, slots.n_new, self._table_view(slots),
+                slots.temps, slots.top_ks, slots.top_ps, slots.seeds,
+                slots.counters)
         return state, nxt
 
     def prefill(self, state, slots: SlotBatch, tokens):
         """Chunked prefill: tokens (B, S) with per-slot occupancy in
         ``slots.n_new``; returns (state, first sampled token (B, 1))."""
-        return self._apply(state, slots, tokens)
+        return self._apply(state, slots, tokens, "serve.prefill")
 
     def step(self, state, slots: SlotBatch, tokens):
         """Steady-state decode: tokens (B, 1); returns (state, next
         (B, 1)). Same compiled fn as prefill at S == 1."""
-        return self._apply(state, slots, tokens)
+        return self._apply(state, slots, tokens, "serve.decode")
 
     # -- device half: speculative decoding ----------------------------------
 
@@ -270,13 +293,17 @@ class CacheBackend:
         if self._verify_fn is None:
             vf, cf = self._verify_fns()
             self._verify_fn = jax.jit(
-                steps_mod.make_paged_verify_fn(self.rcfg, self.mesh, vf,
-                                               cf),
+                obs_profile.count_traces(
+                    f"{type(self).__name__}.verify_step",
+                    steps_mod.make_paged_verify_fn(self.rcfg, self.mesh,
+                                                   vf, cf),
+                    self.compile_counts),
                 donate_argnums=(1,))
-        acc, nxt, state = self._verify_fn(
-            self.params, state, tokens, slots.lengths, slots.n_new,
-            self._table_view(slots), slots.temps, slots.top_ks,
-            slots.top_ps, slots.seeds, slots.counters, draft_probs)
+        with self._span("serve.verify"):
+            acc, nxt, state = self._verify_fn(
+                self.params, state, tokens, slots.lengths, slots.n_new,
+                self._table_view(slots), slots.temps, slots.top_ks,
+                slots.top_ps, slots.seeds, slots.counters, draft_probs)
         return state, acc, nxt
 
     def coarse_draft(self, cf: int):
@@ -450,20 +477,25 @@ class HybridBackend(CacheBackend):
 
 def make_backend(rcfg: RunConfig, params, mesh=None,
                  page_size: int = 16, sharding=None,
-                 fused: bool = True) -> CacheBackend:
+                 fused: bool = True, obs=None) -> CacheBackend:
     """The only family dispatch in the serve stack: everything downstream
     (scheduler, engine) speaks the CacheBackend protocol. ``mesh`` /
     ``sharding`` make the backend SPMD (see :class:`CacheBackend`);
     ``fused`` selects the fused paged-decode kernels (bitwise-identical
-    at temperature 0 — see :class:`CacheBackend`)."""
+    at temperature 0 — see :class:`CacheBackend`); ``obs`` threads the
+    engine's observability bundle into the backend's compile counters
+    and profiler spans."""
     cfg = rcfg.model
     kind = block_kind(cfg)
     if cfg.family == "decoder" and kind in ("attn_mlp", "attn_moe"):
-        return PagedKVBackend(rcfg, params, mesh, page_size, sharding, fused)
+        return PagedKVBackend(rcfg, params, mesh, page_size, sharding,
+                              fused, obs)
     if cfg.family == "ssm" and kind in ("mamba1", "mamba2"):
-        return SSMStateBackend(rcfg, params, mesh, page_size, sharding, fused)
+        return SSMStateBackend(rcfg, params, mesh, page_size, sharding,
+                               fused, obs)
     if cfg.family == "hybrid":
-        return HybridBackend(rcfg, params, mesh, page_size, sharding, fused)
+        return HybridBackend(rcfg, params, mesh, page_size, sharding,
+                             fused, obs)
     raise NotImplementedError(
         f"no CacheBackend for family={cfg.family!r} (kind={kind!r}): "
         "encoder models have no autoregressive decode, and encdec needs "

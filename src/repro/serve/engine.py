@@ -40,6 +40,8 @@ import numpy as np
 from repro.configs.base import RunConfig
 from repro.launch import steps as steps_mod
 from repro.models import transformer
+from repro.obs import Observability
+from repro.obs import profile as obs_profile
 from repro.serve.cache import SlotBatch
 from repro.serve.scheduler import Scheduler, bucket_len
 from repro.serve.spec import SpecConfig
@@ -120,7 +122,9 @@ class ServeEngine:
                  detokenize: Optional[Callable] = None,
                  spec: Optional[SpecConfig] = None,
                  prefix_cache_path: Optional[str] = None,
-                 fused: bool = True, preempt_policy: str = "auto"):
+                 fused: bool = True, preempt_policy: str = "auto",
+                 observability: bool = True,
+                 trace_capacity: int = 65536):
         """Args:
             rcfg / params: model config and weights.
             mesh: optional ('data', 'model') ``jax.sharding.Mesh`` —
@@ -145,24 +149,37 @@ class ServeEngine:
             preempt_policy: 'auto' (recompute-vs-restore cost model),
                 'spill' / 'recompute' (force one side), or 'off' (never
                 preempt) — see docs/scheduling.md.
+            observability: build the engine's :class:`repro.obs.
+                Observability` bundle (metrics registry + lifecycle
+                trace + compile counters; docs/observability.md). False
+                collapses every emission site to a no-op — the
+                ``serve/obs_overhead`` bench row holds the enabled cost
+                to ≤3% of decode throughput.
+            trace_capacity: lifecycle-trace ring size in events (oldest
+                events drop first, counted); 0 disables tracing while
+                keeping metrics.
         """
         self.rcfg = rcfg
         self.params = params
         self.mesh = mesh
         self.max_len = max_len or min(rcfg.model.max_seq_len, 4096)
         self.detokenize = detokenize or default_detokenize
+        self.obs = Observability(enabled=observability,
+                                 trace_capacity=trace_capacity)
         self.scheduler = Scheduler(
             rcfg, params, max_batch=max_batch, page_size=page_size,
             max_len=self.max_len, n_pages=n_pages, mesh=mesh,
             sharding=sharding, share_prefix=share_prefix, spec=spec,
-            fused=fused, preempt_policy=preempt_policy)
+            fused=fused, preempt_policy=preempt_policy, obs=self.obs)
         self.backend = self.scheduler.backend
         # dense-cache decode fn: the serial-forward oracle and the
         # apples-to-apples comparison probe (throughput_probe(paged=False));
         # built from the backend's rcfg so both paths share one set of
         # sharding rules under a mesh
-        self._decode = jax.jit(steps_mod.make_serve_fn(self.backend.rcfg,
-                                                       mesh))
+        self._decode = jax.jit(obs_profile.count_traces(
+            "ServeEngine.dense_decode",
+            steps_mod.make_serve_fn(self.backend.rcfg, mesh),
+            self.backend.compile_counts))
         if prefix_cache_path and os.path.exists(prefix_cache_path):
             self.load_prefix_cache(prefix_cache_path)
 
@@ -196,7 +213,11 @@ class ServeEngine:
         spec-decode: draft_calls, verify_calls, tokens_drafted/accepted)
         + prefix-trie counters (hit/miss/evictions) + the mesh shape the
         engine decodes on (``mesh_dp``/``mesh_tp``/``mesh_devices``, all
-        1 single-device)."""
+        1 single-device) + ``compiles_per_callable`` (mean XLA traces
+        per jitted serve callable — the recompile-leak canary). A
+        backwards-compatible view over the metrics registry: every
+        legacy key keeps its exact name and meaning
+        (docs/observability.md)."""
         s = dict(self.scheduler.stats)
         prefix = self.scheduler.prefix
         s["trie_hit_pages"] = prefix.stats["hit_pages"] if prefix else 0
@@ -209,7 +230,28 @@ class ServeEngine:
         s["mesh_tp"] = int(shape.get("model", 1))
         s["mesh_devices"] = int(self.mesh.devices.size) \
             if self.mesh is not None else 1
+        s["compiles_per_callable"] = obs_profile.compiles_per_callable(
+            self.backend.compile_counts)
         return s
+
+    def metrics_snapshot(self) -> Dict[str, object]:
+        """JSON-able snapshot of the metrics registry: every counter,
+        gauge (sampled now), and histogram (count/sum/p50/p95/p99).
+        Empty when the engine was built with ``observability=False``."""
+        return self.obs.metrics.snapshot()
+
+    def metrics_prometheus(self) -> str:
+        """Prometheus text exposition of the same registry."""
+        return self.obs.metrics.to_prometheus()
+
+    def save_trace(self, path: str) -> int:
+        """Write the request-lifecycle trace as Chrome/Perfetto
+        trace-event JSON (load at https://ui.perfetto.dev). Returns the
+        number of trace events written; raises when tracing is off."""
+        if self.obs.trace is None:
+            raise ValueError("engine has no trace buffer (built with "
+                             "observability=False or trace_capacity=0)")
+        return self.obs.trace.save(path)
 
     # -- generation ---------------------------------------------------------
 

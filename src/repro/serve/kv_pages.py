@@ -165,12 +165,16 @@ class PrefixCache:
     :meth:`match` + ``PageAllocator.share``.
     """
 
-    def __init__(self, alloc: PageAllocator, page_size: int):
+    def __init__(self, alloc: PageAllocator, page_size: int, stats=None):
         self.alloc = alloc
         self.page_size = page_size
         self.children: Dict[Tuple[int, ...], _PrefixNode] = {}
         self._tick = 0
-        self.stats = {"hit_pages": 0, "miss_prompts": 0, "evicted": 0}
+        # counters may be injected (the scheduler hands in a dict the
+        # metrics registry registered under the 'trie' namespace) so the
+        # registry owns them without the trie knowing about obs at all
+        self.stats = {"hit_pages": 0, "miss_prompts": 0, "evicted": 0} \
+            if stats is None else stats
 
     def _chunks(self, prompt: np.ndarray):
         ps = self.page_size

@@ -77,6 +77,8 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import RunConfig
+from repro.obs import Observability
+from repro.obs import profile as obs_profile
 from repro.serve.cache import CacheBackend, SlotBatch, make_backend
 from repro.serve.kv_pages import (SCRATCH_PAGE, PrefixCache, SpilledPages,
                                   pages_needed)
@@ -212,7 +214,8 @@ class Scheduler:
                  spec: Optional[SpecConfig] = None, fused: bool = True,
                  admit_lookahead: int = 8, starvation_limit: int = 16,
                  age_every: int = 4, preempt_policy: str = "auto",
-                 debug_checks: Optional[bool] = None):
+                 debug_checks: Optional[bool] = None,
+                 obs: Optional[Observability] = None):
         """Args:
             rcfg / params: model config and weights (under a mesh the
                 backend re-places the weights tensor-parallel).
@@ -247,6 +250,13 @@ class Scheduler:
                 check each decode wave; defaults to on unless
                 ``REPRO_SERVE_DEBUG=0`` (cheap — O(max_batch) refcount
                 lookups — and survives ``python -O``).
+            obs: :class:`repro.obs.Observability` bundle. The metrics
+                registry owns ``self.stats`` (and the trie counters),
+                the trace buffer receives every request-lifecycle event,
+                and the backend's jitted callables register compile
+                counters. Defaults to a fresh enabled bundle;
+                ``Observability(enabled=False)`` turns every emission
+                site into a no-op (docs/observability.md).
         """
         self.rcfg, self.params = rcfg, params
         self.max_len = max_len or min(rcfg.model.max_seq_len, 4096)
@@ -260,9 +270,11 @@ class Scheduler:
         self.preempt_policy = preempt_policy
         self._debug_checks = debug_checks if debug_checks is not None \
             else os.environ.get("REPRO_SERVE_DEBUG", "1") != "0"
+        self.obs = obs if obs is not None else Observability()
+        self.trace = self.obs.trace
         self.backend = backend if backend is not None else \
             make_backend(rcfg, params, mesh=mesh, page_size=page_size,
-                         sharding=sharding, fused=fused)
+                         sharding=sharding, fused=fused, obs=self.obs)
         if self.backend.page_size != page_size:
             raise ValueError(
                 f"backend page_size {self.backend.page_size} != scheduler "
@@ -279,7 +291,11 @@ class Scheduler:
         self.alloc = self.backend.alloc
         self._page_nbytes = 0            # filled lazily (preempt cost model)
         self.prefix: Optional[PrefixCache] = \
-            PrefixCache(self.alloc, page_size) if share_prefix else None
+            PrefixCache(self.alloc, page_size,
+                        stats=self.obs.metrics.stats_dict(
+                            "trie", {"hit_pages": 0, "miss_prompts": 0,
+                                     "evicted": 0})) \
+            if share_prefix else None
         self._pending: Set[int] = set()   # pages this admit wave will write
         self._wave_preempted: Set[int] = set()   # rids preempted this wave
         self.spec: Optional[CoarseDraft] = None
@@ -302,16 +318,33 @@ class Scheduler:
         self.queue: Deque[ScheduledRequest] = collections.deque()
         self.finished: Dict[int, ScheduledRequest] = {}
         self._next_rid = 0
-        self.stats = {"prefill_tokens": 0, "prefill_s": 0.0,
-                      "prefill_calls": 0, "decode_tokens": 0,
-                      "decode_s": 0.0, "decode_steps": 0,
-                      "shared_tokens": 0, "pages_allocated": 0,
-                      "pages_shared": 0, "draft_calls": 0,
-                      "verify_calls": 0, "tokens_drafted": 0,
-                      "tokens_accepted": 0, "requests_rejected": 0,
-                      "requests_failed": 0, "preemptions": 0,
-                      "pages_spilled": 0, "pages_restored": 0,
-                      "preempt_recomputes": 0}
+        self._wave = 0                 # scheduler iteration (trace scoping)
+        self._last_counters = None     # last (free_pages, queue_depth) sampled
+        # the metrics registry owns this dict (single-owner contract,
+        # docs/observability.md); it stays a plain dict the hot path
+        # mutates in place, so existing `stats[k] += n` / reset-to-zero
+        # code (and every external reader) is unchanged
+        self.stats = self.obs.metrics.stats_dict(
+            "scheduler",
+            {"prefill_tokens": 0, "prefill_s": 0.0,
+             "prefill_calls": 0, "decode_tokens": 0,
+             "decode_s": 0.0, "decode_steps": 0,
+             "shared_tokens": 0, "pages_allocated": 0,
+             "pages_shared": 0, "draft_calls": 0,
+             "verify_calls": 0, "tokens_drafted": 0,
+             "tokens_accepted": 0, "requests_rejected": 0,
+             "requests_failed": 0, "preemptions": 0,
+             "pages_spilled": 0, "pages_restored": 0,
+             "preempt_recomputes": 0})
+        m = self.obs.metrics
+        m.gauge("pool.free_pages", lambda: self.alloc.n_free)
+        m.gauge("scheduler.queue_depth", lambda: len(self.queue))
+        m.gauge("scheduler.n_active", lambda: self.n_active)
+        m.gauge("scheduler.accept_rate", self.accept_rate)
+        m.gauge("trie.hit_rate", self._trie_hit_rate)
+        m.gauge("engine.compiles_per_callable",
+                lambda: obs_profile.compiles_per_callable(
+                    self.backend.compile_counts))
 
     # -- submission ---------------------------------------------------------
 
@@ -369,6 +402,12 @@ class Scheduler:
                                tpot_target_s=tpot_target_s,
                                t_submit=time.perf_counter())
         self._next_rid += 1
+        if self.trace is not None:
+            self.trace.instant("submit", req.rid, args={
+                "prompt_len": len(prompt), "max_new": max_new,
+                "priority": req.priority,
+                "ttft_target_s": ttft_target_s,
+                "tpot_target_s": tpot_target_s})
         total = pages_needed(len(prompt) + max_new, self.page_size)
         limit = self.alloc.n_pages - 1
         if total > limit:
@@ -376,18 +415,42 @@ class Scheduler:
             self._fail(req, f"unservable: needs {total} pages "
                             f"({len(prompt)} prompt + {max_new} new tokens "
                             f"at page_size {self.page_size}) but the pool "
-                            f"holds {limit}")
+                            f"holds {limit}", rejected=True)
             return req
         self.queue.append(req)
+        if self.trace is not None:
+            self.trace.instant("queued", req.rid, wave=self._wave)
         return req
 
-    def _fail(self, req: ScheduledRequest, msg: str) -> None:
+    def _fail(self, req: ScheduledRequest, msg: str,
+              rejected: bool = False) -> None:
         """Per-request failure isolation: mark THIS request failed and
-        finished; the engine and every other request keep serving."""
+        finished; the engine and every other request keep serving.
+        ``rejected`` distinguishes submit-time rejection in the trace."""
         req.error = msg
         req.t_done = time.perf_counter()
         self.finished[req.rid] = req
         self.stats["requests_failed"] += 1
+        if self.trace is not None:
+            self.trace.instant("fail", req.rid, wave=self._wave, args={
+                "reason": msg, "rejected": rejected,
+                "n_out": len(req.out), "ttft_s": req.ttft,
+                "tpot_s": req.tpot, "latency_s": req.latency})
+        self._observe_terminal(req)
+
+    def _observe_terminal(self, req: ScheduledRequest) -> None:
+        """Record a finished request's latency samples (histograms skip
+        None — e.g. a request cancelled before prefill has no ttft)."""
+        m = self.obs.metrics
+        m.observe("request.ttft_s", req.ttft)
+        m.observe("request.tpot_s", req.tpot)
+        m.observe("request.latency_s", req.latency)
+
+    def _trie_hit_rate(self) -> float:
+        """Fraction of prompt tokens served from the prefix trie."""
+        shared = self.stats["shared_tokens"]
+        total = shared + self.stats["prefill_tokens"]
+        return shared / total if total else 0.0
 
     # -- scheduler iteration ------------------------------------------------
 
@@ -581,6 +644,11 @@ class Scheduler:
         self._clear_slot(slot)
         self._wave_preempted.add(req.rid)
         self.queue.append(req)       # re-ordered at the next admit wave
+        if self.trace is not None:
+            self.trace.instant(
+                "preempt", req.rid, slot, self._wave,
+                args={"mode": "recompute" if req.spill is None
+                      else "spill", "tokens": L, "pages": live})
 
     def _plan_or_preempt(self, req: ScheduledRequest,
                          protected: Set[int]) \
@@ -612,6 +680,11 @@ class Scheduler:
         self.top_ks[slot] = req.top_k
         self.top_ps[slot] = req.top_p
         self.seeds[slot] = req.seed
+        if self.trace is not None:
+            self.trace.instant("resume" if req.out else "admit",
+                               req.rid, slot, self._wave,
+                               args={"cached_tokens": cached,
+                                     "pages": len(pages)})
         if req.spill is not None:
             # spilled resume: scatter the host copy back bit-identically
             live = pages_needed(req.spill.length, self.page_size)
@@ -619,6 +692,9 @@ class Scheduler:
                                               req.spill.leaves)
             self.stats["pages_restored"] += live
             req.spill = None
+            if self.trace is not None:
+                self.trace.instant("restore", req.rid, slot, self._wave,
+                                   args={"pages": live})
         elif not req.out and self.prefix is not None:
             n_full = len(req.prompt) // self.page_size
             self.prefix.insert(req.prompt, pages[:n_full])
@@ -635,6 +711,7 @@ class Scheduler:
         n_active == 0 afterwards is normal — the caller re-admits)."""
         self._order_queue()
         self._wave_preempted.clear()
+        t0 = time.perf_counter()
         plans = []
         deferred: List[ScheduledRequest] = []
         filled: Set[int] = set()
@@ -677,6 +754,10 @@ class Scheduler:
                 self._draft_prefill(plans)
             self._batched_prefill(plans)
             self._pending.clear()
+            if self.trace is not None:
+                self.trace.span("admit_wave", t0, time.perf_counter(),
+                                wave=self._wave,
+                                args={"admitted": len(plans)})
         return len(plans)
 
     def _draft_prefill(self, plans) -> None:
@@ -732,6 +813,14 @@ class Scheduler:
         self.stats["prefill_tokens"] += int(n_new.sum())
         self.stats["prefill_s"] += now - t0
         self.stats["prefill_calls"] += 1
+        self.obs.metrics.observe("wave.prefill_s", now - t0)
+        if self.trace is not None:
+            self.trace.span("prefill", t0, now, wave=self._wave,
+                            args={"tokens": int(n_new.sum()),
+                                  "bucket": S, "slots": len(work)})
+            for slot, req, seq, c in work:
+                self.trace.span("prefill", t0, now, req.rid, slot,
+                                self._wave, args={"tokens": len(seq) - c})
         for slot, req, seq, _ in work:
             self.lengths[slot] = len(seq)
             if req.out:                # recompute resume: state only
@@ -739,6 +828,9 @@ class Scheduler:
             req.t_first = now
             tok = int(nxt[slot, 0])
             req.out.append(tok)
+            if self.trace is not None:
+                self.trace.instant("first_token", req.rid, slot,
+                                   self._wave)
             if self._is_done(req, tok):
                 self._reap(slot)
 
@@ -776,6 +868,15 @@ class Scheduler:
         self.stats["decode_tokens"] += n_act
         self.stats["decode_s"] += dt
         self.stats["decode_steps"] += 1
+        self.obs.metrics.observe("wave.decode_s", dt)
+        if self.trace is not None:
+            # per-slot spans before the reap loop clears slots
+            self.trace.span("decode", t0, t0 + dt, wave=self._wave,
+                            args={"n_active": n_act})
+            for slot, req in enumerate(self.slot_req):
+                if req is not None:
+                    self.trace.span("decode", t0, t0 + dt, req.rid,
+                                    slot, self._wave)
         for slot, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -836,6 +937,14 @@ class Scheduler:
         self.stats["tokens_drafted"] += int(n_draft.sum())
         self.stats["decode_s"] += dt
         self.stats["decode_steps"] += 1
+        self.obs.metrics.observe("wave.decode_s", dt)
+        if self.trace is not None:
+            self.trace.span("spec_wave", t0, t0 + dt, wave=self._wave,
+                            args={"drafted": int(n_draft.sum())})
+            for b, req in enumerate(self.slot_req):
+                if req is not None:
+                    self.trace.span("spec_wave", t0, t0 + dt, req.rid,
+                                    b, self._wave)
         for b, req in enumerate(self.slot_req):
             if req is None:
                 continue
@@ -867,12 +976,21 @@ class Scheduler:
         if self.spec is not None:
             self.spec.reset_slot(slot)
 
-    def _reap(self, slot: int) -> None:
+    def _reap(self, slot: int, outcome: str = "finish") -> None:
+        """Release a slot and finish its request. ``outcome`` names the
+        trace's terminal event — 'finish' for normal completion,
+        'cancel' when the caller aborted a running request (the trace
+        lifecycle invariant needs the distinction; the counters don't)."""
         req = self.slot_req[slot]
         req.t_done = time.perf_counter()
         self.finished[req.rid] = req
         self.backend.release(self.slot_pages[slot])
         self._clear_slot(slot)
+        if self.trace is not None:
+            self.trace.instant(outcome, req.rid, slot, self._wave, args={
+                "n_out": len(req.out), "ttft_s": req.ttft,
+                "tpot_s": req.tpot, "latency_s": req.latency})
+        self._observe_terminal(req)
 
     def cancel(self, req: ScheduledRequest) -> None:
         """Abort a queued or in-flight request: its slot and pages return
@@ -887,12 +1005,19 @@ class Scheduler:
             req.spill = None             # drop any preempted host copy
             req.t_done = time.perf_counter()
             self.finished[req.rid] = req
+            if self.trace is not None:
+                self.trace.instant("cancel", req.rid, wave=self._wave,
+                                   args={"n_out": len(req.out),
+                                         "ttft_s": req.ttft,
+                                         "tpot_s": req.tpot,
+                                         "latency_s": req.latency})
+            self._observe_terminal(req)
             return
         except ValueError:
             pass
         for slot, r in enumerate(self.slot_req):
             if r is req:
-                self._reap(slot)
+                self._reap(slot, outcome="cancel")
                 return
 
     def drop_prefix_cache(self) -> None:
@@ -910,7 +1035,17 @@ class Scheduler:
         everything else keeps decoding."""
         if not self.queue and not self.n_active:
             return False
+        self._wave += 1
         admitted = self._admit()
+        if self.trace is not None:
+            # counter tracks sample on change only: at steady state (no
+            # admissions/reaps) both values repeat wave after wave, and
+            # Perfetto counter tracks render step-wise anyway
+            sample = (self.alloc.n_free, len(self.queue))
+            if sample != self._last_counters:
+                self._last_counters = sample
+                self.trace.counter("pool.free_pages", sample[0])
+                self.trace.counter("scheduler.queue_depth", sample[1])
         if self.n_active:
             if self.spec is not None:
                 self._spec_wave()

@@ -47,6 +47,7 @@ import jax
 import numpy as np
 
 from repro.launch import steps as steps_mod
+from repro.obs import profile as obs_profile
 from repro.serve.cache import CacheBackend
 
 
@@ -102,14 +103,23 @@ class CoarseDraft:
                 max_batch, pages_per_slot), np.int32)
         self.lengths = np.zeros((max_batch,), np.int32)
         decode_fn = backend._decode_fn()
+        # the draft's jitted callables register in the fine backend's
+        # compile-counts dict, so engine.compiles_per_callable covers
+        # the whole wave (draft prefill + draft wave + fine verify)
         self._prefill_fn = jax.jit(
-            steps_mod.make_paged_serve_fn(rcfg_d, mesh, decode_fn),
+            obs_profile.count_traces(
+                "CoarseDraft.prefill",
+                steps_mod.make_paged_serve_fn(rcfg_d, mesh, decode_fn),
+                backend.compile_counts),
             donate_argnums=(1,))
         self._wave_fn = jax.jit(
-            steps_mod.make_draft_wave_fn(
-                rcfg_d, mesh, decode_fn, k=spec.k,
-                page_size=backend.page_size,
-                snapshot_state=backend.snapshot_state),
+            obs_profile.count_traces(
+                "CoarseDraft.wave",
+                steps_mod.make_draft_wave_fn(
+                    rcfg_d, mesh, decode_fn, k=spec.k,
+                    page_size=backend.page_size,
+                    snapshot_state=backend.snapshot_state),
+                backend.compile_counts),
             donate_argnums=(1,))
         self._greedy = (np.zeros((max_batch,), np.float32),
                         np.zeros((max_batch,), np.int32),

@@ -125,3 +125,29 @@ def test_static_analysis_doc_matches_registry():
     assert not undocumented, (
         f"registered rules missing from docs/static-analysis.md: "
         f"{undocumented}")
+
+
+def test_observability_doc_matches_catalog():
+    """Every metric in docs/observability.md's tables exists in
+    METRIC_CATALOG and every catalogued metric is documented — the
+    catalog and the doc cannot drift apart (metrics.py is stdlib-only,
+    so importing it keeps this job jax-free)."""
+    import sys
+    sys.path.insert(0, os.path.join(REPO, "src"))
+    from repro.obs.metrics import METRIC_CATALOG
+    body = open(os.path.join(REPO, "docs", "observability.md"),
+                encoding="utf-8").read()
+    named = set()
+    for line in body.splitlines():
+        m = re.match(r"\|\s*`([a-z_]+\.[a-z_]+)`\s*\|", line)
+        if m:
+            named.add(m.group(1))
+    assert named, "no metric table rows found in docs/observability.md"
+    ghosts = sorted(named - set(METRIC_CATALOG))
+    assert not ghosts, (
+        f"docs/observability.md documents metrics not in METRIC_CATALOG: "
+        f"{ghosts}")
+    undocumented = sorted(set(METRIC_CATALOG) - named)
+    assert not undocumented, (
+        f"catalogued metrics missing from docs/observability.md: "
+        f"{undocumented}")

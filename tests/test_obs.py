@@ -1,0 +1,316 @@
+"""Serve-layer observability: metrics registry, lifecycle trace,
+Perfetto export (PR 9).
+
+Covers the three contracts the obs subsystem makes:
+
+1. **Registry exactness** — histogram quantiles match numpy.percentile
+   bitwise (linear interpolation on raw samples, not bucket midpoints),
+   the snapshot exposes exactly the catalogued metrics, and the legacy
+   ``engine.stats`` / ``scheduler.stats`` dicts stay backwards
+   compatible (same keys, same reset idiom) with the registry as their
+   single owner.
+2. **Lifecycle invariant** — every submitted rid emits exactly one
+   terminal event (finish/fail/cancel) across seeded fuzz traffic with
+   a tight pool (rejections), deterministic preempt→resume, and a
+   dropped stream (cancel).
+3. **Perfetto schema** — the exported JSON is structurally valid
+   trace-event format: named tracks, non-negative span durations,
+   paired async begin/end per request.
+"""
+import jax
+import numpy as np
+import pytest
+
+from repro.configs.base import (MGRITConfig, ModelConfig, OptimizerConfig,
+                                RunConfig, ShapeConfig)
+from repro.models import transformer
+from repro.obs import (METRIC_CATALOG, Histogram, MetricsRegistry,
+                       TraceBuffer, lifecycle_violations, request_outcomes)
+from repro.obs.trace import INSTANT
+from repro.serve.engine import Request, ServeEngine
+from repro.serve.scheduler import Scheduler
+
+pytestmark = pytest.mark.serve
+
+VOCAB = 32
+MAX_LEN = 24
+
+
+def make_setup(seed: int = 0):
+    rcfg = RunConfig(
+        model=ModelConfig(name="obs_decoder", family="decoder", n_layers=4,
+                          d_model=16, n_heads=2, n_kv_heads=2, d_ff=32,
+                          vocab_size=VOCAB, act="gelu", norm="layernorm",
+                          dtype="float32"),
+        mgrit=MGRITConfig(enabled=True, cf=2, levels=2, fwd_iters=1,
+                          bwd_iters=1, n_open=1, n_close=1, pad_to=2),
+        optimizer=OptimizerConfig(),
+        shape=ShapeConfig("obs", "train", 16, 4))
+    params = transformer.init_model(jax.random.PRNGKey(seed), rcfg)
+    return rcfg, params
+
+
+@pytest.fixture(scope="module")
+def setup():
+    return make_setup()
+
+
+# -- metrics registry ---------------------------------------------------------
+
+@pytest.mark.parametrize("n", [1, 2, 7, 100, 1000])
+def test_histogram_quantiles_match_numpy(n):
+    """quantile() is numpy.percentile's linear interpolation on the raw
+    samples — exact, not a bucket approximation."""
+    rng = np.random.default_rng(n)
+    xs = rng.lognormal(mean=-3.0, sigma=2.0, size=n)
+    h = Histogram("request.ttft_s", "test")
+    for x in xs:
+        h.observe(float(x))
+    for q in (0.0, 0.25, 0.5, 0.9, 0.95, 0.99, 1.0):
+        np.testing.assert_allclose(
+            h.quantile(q), np.percentile(xs, 100 * q), rtol=0, atol=1e-12)
+    p = h.percentiles()
+    np.testing.assert_allclose(p["p50"], np.percentile(xs, 50), atol=1e-12)
+    assert h.count == n
+    np.testing.assert_allclose(h.sum, xs.sum(), rtol=1e-12)
+
+
+def test_histogram_prometheus_buckets_cumulative():
+    h = Histogram("request.ttft_s", "test")
+    for x in (0.001, 0.01, 0.1, 1.0, 1e6):   # 1e6 overflows every bound
+        h.observe(x)
+    counts = h.bucket_counts
+    assert sum(counts) == h.count == 5
+    assert counts[-1] == 1                   # the +Inf overflow bucket
+    # cumulative form never decreases and ends at count
+    cum = np.cumsum(counts)
+    assert list(cum) == sorted(cum) and cum[-1] == h.count
+
+
+def test_registry_snapshot_is_exactly_the_catalog(setup):
+    """A live engine's snapshot has one entry per catalogued metric —
+    nothing uncatalogued leaks in, nothing catalogued goes dark."""
+    rcfg, params = setup
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=4)
+    eng.generate([Request(prompt=np.arange(1, 6, dtype=np.int32),
+                          max_new_tokens=4)])
+    snap = eng.metrics_snapshot()
+    assert set(snap) == set(METRIC_CATALOG)
+    assert snap["scheduler.decode_tokens"] > 0
+    assert snap["request.ttft_s"]["count"] == 1
+    prom = eng.metrics_prometheus()
+    assert "# TYPE repro_scheduler_decode_tokens counter" in prom
+    assert "repro_scheduler_decode_tokens_total " in prom
+    assert 'repro_request_ttft_s_bucket{le="+Inf"} 1' in prom
+    assert "# TYPE repro_pool_free_pages gauge" in prom
+
+
+def test_uncatalogued_metrics_are_rejected():
+    m = MetricsRegistry()
+    with pytest.raises(KeyError, match="not a catalogued counter"):
+        m.stats_dict("scheduler", {"made_up_counter": 0})
+    with pytest.raises(KeyError, match="not a catalogued gauge"):
+        m.gauge("scheduler.decode_tokens", lambda: 0.0)  # it's a counter
+
+
+def test_engine_stats_backwards_compatible(setup):
+    """The registry owns scheduler.stats now, but every legacy key and
+    the in-place reset idiom (`stats[k] = 0`) keep working — both arms
+    of the observability flag."""
+    rcfg, params = setup
+    legacy = ("prefill_tokens", "decode_tokens", "decode_s", "shared_tokens",
+              "pages_allocated", "preemptions", "requests_rejected")
+    for obs_on in (True, False):
+        eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                          page_size=4, observability=obs_on)
+        eng.generate([Request(prompt=np.arange(1, 6, dtype=np.int32),
+                              max_new_tokens=4)])
+        s = eng.stats
+        assert set(legacy) <= set(s)
+        assert s["decode_tokens"] > 0
+        assert "compiles_per_callable" in s
+        sched = eng.scheduler
+        for k in sched.stats:
+            sched.stats[k] = type(sched.stats[k])(0)
+        assert eng.stats["decode_tokens"] == 0
+        if not obs_on:
+            assert eng.metrics_snapshot() == {}
+            assert eng.obs.trace is None
+            with pytest.raises(ValueError, match="no trace buffer"):
+                eng.save_trace("/dev/null")
+
+
+# -- lifecycle invariant ------------------------------------------------------
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_fuzz_exactly_one_terminal_per_request(setup, seed):
+    """Random traffic through a deliberately tight pool (admission
+    stalls, rejections, mixed priorities): every submitted rid gets
+    exactly one terminal event and the trace drops nothing."""
+    rcfg, params = setup
+    rng = np.random.default_rng(seed)
+    sched = Scheduler(rcfg, params, max_batch=3, page_size=4,
+                      max_len=MAX_LEN, n_pages=1 + 18,
+                      share_prefix=bool(seed % 2 == 0))
+    rids = []
+    for _ in range(12):
+        prompt = rng.integers(0, VOCAB, size=int(
+            rng.integers(1, 14))).astype(np.int32)
+        rids.append(sched.submit(
+            prompt, int(rng.integers(1, 8)),
+            priority=int(rng.integers(0, 3))))
+    done = sched.run()
+    assert set(done) >= set(rids)
+    tr = sched.trace
+    assert tr.dropped == 0
+    assert lifecycle_violations(tr.events(), rids=set(rids)) == []
+    outs = request_outcomes(tr.events())
+    for rid in rids:
+        assert outs[rid].terminal == ("fail" if done[rid].failed
+                                      else "finish")
+        assert outs[rid].n_out == len(done[rid].out)
+
+
+def test_preempt_resume_lifecycle_events(setup):
+    """A preempted-then-resumed request shows preempt + resume events
+    and still exactly one terminal; outcomes count the preemption."""
+    rcfg, params = setup
+    sched = Scheduler(rcfg, params, max_batch=1, page_size=4,
+                      max_len=MAX_LEN, share_prefix=False)
+    a = sched.submit_request(np.arange(2, 9, dtype=np.int32), 8, priority=5)
+    for _ in range(3):
+        sched.step()
+    b = sched.submit_request(np.array([5, 4, 3, 2, 1], np.int32), 4,
+                             priority=0)
+    sched.step()                      # urgent b preempts a
+    assert a.preemptions == 1
+    sched.run()
+    evs = sched.trace.events()
+    kinds_a = [e[3] for e in evs if e[0] == INSTANT and e[4] == a.rid]
+    assert "preempt" in kinds_a and "resume" in kinds_a
+    assert kinds_a.count("finish") == 1
+    assert lifecycle_violations(evs) == []
+    outs = request_outcomes(evs)
+    assert outs[a.rid].preemptions == 1
+    assert outs[b.rid].preemptions == 0
+
+
+def test_dropped_stream_emits_one_cancel(setup):
+    """Closing a streaming iterator mid-generation cancels the request:
+    exactly one 'cancel' terminal, pages back in the pool."""
+    rcfg, params = setup
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=4)
+    it = eng.submit(Request(prompt=np.arange(1, 7, dtype=np.int32),
+                            max_new_tokens=12), stream=True)
+    next(it)
+    it.close()
+    evs = eng.obs.trace.events()
+    assert lifecycle_violations(evs) == []
+    (outcome,) = request_outcomes(evs).values()
+    assert outcome.terminal == "cancel" and outcome.n_out >= 1
+    eng.scheduler.drop_prefix_cache()    # trie legitimately caches pages
+    assert eng.scheduler.alloc.n_free == eng.scheduler.alloc.n_pages - 1
+
+
+def test_rejected_request_is_a_fail_terminal(setup):
+    """An unservable request fails at submit: one 'fail' terminal with
+    rejected=True in the fold."""
+    rcfg, params = setup
+    sched = Scheduler(rcfg, params, max_batch=2, page_size=4,
+                      max_len=MAX_LEN, n_pages=1 + 2)
+    req = sched.submit_request(np.arange(1, 12, dtype=np.int32), 12)
+    assert req.failed
+    outs = request_outcomes(sched.trace.events())
+    assert outs[req.rid].terminal == "fail" and outs[req.rid].rejected
+
+
+# -- trace buffer + Perfetto export -------------------------------------------
+
+def test_ring_buffer_bounded():
+    tr = TraceBuffer(capacity=8)
+    for i in range(20):
+        tr.instant("submit", rid=i)
+    assert len(tr) == 8 and tr.dropped == 12
+    # survivors are the newest 8
+    assert [e[4] for e in tr.events()] == list(range(12, 20))
+
+
+def test_perfetto_export_schema(setup, tmp_path):
+    """Structural validation of the Chrome trace-event JSON: every
+    event carries ph/pid/ts, spans have dur >= 0, async b/e pair up
+    per rid, and scheduler/allocator/slot tracks are named."""
+    rcfg, params = setup
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=4)
+    eng.generate([Request(prompt=np.arange(1, 6 + i, dtype=np.int32),
+                          max_new_tokens=4) for i in range(3)])
+    path = tmp_path / "trace.json"
+    n = eng.save_trace(str(path))
+    import json
+    doc = json.loads(path.read_text())
+    evs = doc["traceEvents"]
+    assert len(evs) == n > 0
+    track_names = {e["args"]["name"] for e in evs if e["ph"] == "M"
+                   and e["name"] == "thread_name"}
+    assert {"scheduler", "slot 0", "slot 1"} <= track_names
+    begins, ends = set(), set()
+    for e in evs:
+        assert e["ph"] in ("M", "i", "X", "C", "b", "e")
+        if e["ph"] == "M":
+            continue
+        assert e["pid"] == 1 and "ts" in e
+        if e["ph"] == "X":
+            assert e["dur"] >= 0
+        elif e["ph"] == "i":
+            assert e["s"] == "t"
+        elif e["ph"] == "b":
+            begins.add(e["id"])
+        elif e["ph"] == "e":
+            ends.add(e["id"])
+    assert begins == ends and len(begins) == 3   # one async span per rid
+    span_kinds = {e["name"] for e in evs if e["ph"] == "X"}
+    assert {"prefill", "decode", "admit_wave"} <= span_kinds
+
+
+def test_trace_accounting_matches_scheduler_counters(setup):
+    """The bench_traffic cross-check in miniature: goodput, preemption
+    and rejection counts recomputed from the trace equal the
+    scheduler's own counters."""
+    rcfg, params = setup
+    sched = Scheduler(rcfg, params, max_batch=2, page_size=4,
+                      max_len=MAX_LEN, n_pages=1 + 6)
+    rng = np.random.default_rng(7)
+    rids = [sched.submit(rng.integers(0, VOCAB, size=int(
+                rng.integers(2, 10))).astype(np.int32),
+            int(rng.integers(1, 6)), priority=int(rng.integers(0, 2)))
+            for _ in range(8)]
+    done = sched.run()
+    outs = request_outcomes(sched.trace.events())
+    assert sum(o.preemptions for o in outs.values()) \
+        == sched.stats["preemptions"]
+    assert sum(o.rejected for o in outs.values()) \
+        == sched.stats["requests_rejected"]
+    assert sum(o.terminal == "finish" for o in outs.values()) \
+        == sum(not done[r].failed for r in rids)
+
+
+# -- compile-event counters ---------------------------------------------------
+
+def test_compile_counts_stable_across_repeat_traffic(setup):
+    """compiles_per_callable counts XLA traces; repeating identical
+    traffic must not grow it (the RC001 no-recompile contract as a
+    production metric)."""
+    rcfg, params = setup
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=4)
+    reqs = [Request(prompt=np.arange(1, 6, dtype=np.int32),
+                    max_new_tokens=4) for _ in range(2)]
+    eng.generate([Request(**{**r.__dict__}) for r in reqs])
+    counts_after_first = dict(eng.backend.compile_counts)
+    assert counts_after_first["PagedKVBackend.serve_step"] >= 1
+    eng.generate([Request(**{**r.__dict__}) for r in reqs])
+    assert dict(eng.backend.compile_counts) == counts_after_first
+    assert eng.stats["compiles_per_callable"] > 0
+    assert eng.metrics_snapshot()["engine.compiles_per_callable"] > 0
