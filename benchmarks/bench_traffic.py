@@ -5,7 +5,11 @@ fast as possible); this one measures the *open-loop* overload behavior
 ISSUE 7 added — requests arrive on a Poisson clock the engine does not
 control, carry priorities and TTFT/TPOT targets, and the scheduler must
 degrade gracefully when the offered load exceeds capacity (skip-ahead
-admission, preemption, per-request failure) instead of crashing.
+admission, preemption, per-request failure) instead of crashing. The
+overloaded (hi) leg runs with chunked-prefill interleaving ON
+(``prefill_chunk_tokens=32``) so the overload machinery — preemption of
+mid-ingest slots included — is exercised against the chunked ingest
+path under the same exact-accounting gates.
 
 SLO attainment is computed **from the lifecycle trace** (repro.obs.trace):
 each leg's goodput/preemption/rejection counts are reconstructed from the
@@ -84,9 +88,9 @@ N_POOL_PAGES = 7          # < pages_needed(MAX_LEN): a max_len request is
                           # co-reside, so the hi leg hits page pressure
 
 
-def _mk_engine(rcfg, params) -> ServeEngine:
+def _mk_engine(rcfg, params, **kw) -> ServeEngine:
     return ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=BATCH,
-                       page_size=PAGE, n_pages=1 + N_POOL_PAGES)
+                       page_size=PAGE, n_pages=1 + N_POOL_PAGES, **kw)
 
 
 def _requests(rng, n: int, oversized: bool = False):
@@ -303,7 +307,10 @@ def run(csv: CSV, trace_out: str = ""):
     stats = {"rejected": 0, "preempted": 0}
     legs = {}
     for leg, mult in (("lo", 0.5), ("hi", 3.0)):
-        leg_eng = _mk_engine(rcfg, params)       # fresh pool per leg
+        # the overloaded leg interleaves chunked prefill with decode, so
+        # page pressure also exercises mid-ingest preemption/recompute
+        leg_kw = dict(prefill_chunk_tokens=32) if leg == "hi" else {}
+        leg_eng = _mk_engine(rcfg, params, **leg_kw)  # fresh pool per leg
         leg_eng.generate(_requests(rng, BATCH))  # warm (shares jit cache)
         sched = leg_eng.scheduler
         for k in sched.stats:
@@ -321,6 +328,10 @@ def run(csv: CSV, trace_out: str = ""):
         stats["rejected"] += rejected
         stats["preempted"] += preempted
         if leg == "hi":
+            if sched.stats["prefill_chunks"] == 0:
+                raise RuntimeError(
+                    "traffic hi leg: chunked-prefill interleaving never "
+                    "engaged (prefill_chunks == 0)")
             with open(METRICS_MD, "w") as f:
                 f.write(_metrics_table(leg_eng))
             if trace_out:
@@ -349,6 +360,7 @@ def run(csv: CSV, trace_out: str = ""):
         f"cap_rps={cap:.1f};rate_lo={0.5 * cap:.1f};"
         f"rate_hi={3.0 * cap:.1f};rejected={stats['rejected']};"
         f"preempted={stats['preempted']};"
+        f"chunk_hi=32;"
         f"lost={legs['lo']['lost'] + legs['hi']['lost']}")
 
     _obs_overhead(csv)

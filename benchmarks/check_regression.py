@@ -68,6 +68,13 @@ REQUIRED_ROWS = (
     # being measured (check_obs_overhead re-asserts a looser ceiling
     # from the counters).
     "serve/obs_overhead",
+    # PR-10: token-granular prefix sharing (fork_partial vs whole-page
+    # matching, exact recomputed-token counters) and chunked-prefill
+    # interleaving (long-prompt TTFT vs the stalled serial control with
+    # a decode-throughput floor). check_prefix_partial /
+    # check_ttft_interleaved re-assert the in-row gates from the JSON.
+    "serve/prefix_partial",
+    "serve/ttft_interleaved",
 )
 
 
@@ -114,6 +121,73 @@ def check_prefix_sharing(cur: dict) -> list:
         else:
             print(f"ok    serve/prefix_shared: {key} {s[key]} < "
                   f"{b[key]} (no-sharing baseline)")
+    return failures
+
+
+def check_prefix_partial(cur: dict) -> list:
+    """Exact-count gate: token-granular matching must recompute strictly
+    fewer prompt tokens than whole-page matching (the in-row control)
+    and must actually have reused tokens via fork_partial."""
+    rec = cur.get("serve/prefix_partial")
+    if rec is None:
+        return []  # absence is check_required_rows' problem
+    c = _counters(rec)
+    failures = []
+    tok, whole = c.get("prefill_tok"), c.get("whole_page_tok")
+    if tok is None or whole is None:
+        failures.append("serve/prefix_partial: derived field lacks "
+                        "prefill_tok=/whole_page_tok= counters")
+    elif not tok < whole:
+        failures.append(
+            f"serve/prefix_partial: prefill_tok={tok} not strictly below "
+            f"whole-page control {whole}")
+    else:
+        print(f"ok    serve/prefix_partial: prefill_tok {tok} < {whole} "
+              f"(whole-page control; {c.get('tok_shared')} tokens reused "
+              f"over {c.get('hits')} partial hits)")
+    if not c.get("tok_shared", 0) > 0:
+        failures.append("serve/prefix_partial: tok_shared="
+                        f"{c.get('tok_shared')} — fork_partial never ran")
+    return failures
+
+
+def check_ttft_interleaved(cur: dict, decode_ceil: float = 1.15) -> list:
+    """Chunked-prefill interleaving must improve long-prompt TTFT over
+    the serial control without slowing the decode calls themselves
+    (mean wall time per decode call — occupancy-blind on purpose:
+    interleaving runs extra single-occupancy decode waves by design).
+    bench_serve raises in-run at a 1.10 per-call ratio; the JSON gate
+    re-asserts a looser 1.15 so a stale artifact still fails while CI
+    noise does not."""
+    rec = cur.get("serve/ttft_interleaved")
+    if rec is None:
+        return []  # absence is check_required_rows' problem
+    c = _counters(rec)
+    failures = []
+    speedup = c.get("ttft_speedup")
+    if speedup is None:
+        failures.append(
+            "serve/ttft_interleaved: derived field lacks ttft_speedup=")
+    elif not speedup > 1.0:
+        failures.append(
+            f"serve/ttft_interleaved: chunked TTFT not better than the "
+            f"serial control (speedup={speedup})")
+    else:
+        print(f"ok    serve/ttft_interleaved: TTFT {speedup:.2f}x better "
+              f"than serial admission")
+    ratio = c.get("decode_call_ratio")
+    if ratio is None:
+        failures.append("serve/ttft_interleaved: derived field lacks "
+                        "decode_call_ratio=")
+    elif ratio > decode_ceil:
+        failures.append(
+            f"serve/ttft_interleaved: decode calls {ratio}x slower than "
+            f"the serial control (ceiling {decode_ceil}; "
+            f"{c.get('decode_us_call')}us vs "
+            f"{c.get('serial_decode_us_call')}us per call)")
+    else:
+        print(f"ok    serve/ttft_interleaved: decode call ratio {ratio} "
+              f"<= {decode_ceil}")
     return failures
 
 
@@ -254,6 +328,8 @@ def main(argv=None) -> int:
                 "ERROR"):
             failures.append(f"{name}: crashed ({rec['derived']})")
     failures += check_prefix_sharing(cur)
+    failures += check_prefix_partial(cur)
+    failures += check_ttft_interleaved(cur)
     failures += check_fused_speedup(cur)
     failures += check_spec_accept(cur)
     failures += check_traffic_goodput(cur)

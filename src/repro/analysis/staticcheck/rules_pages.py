@@ -6,7 +6,9 @@ run under it).  The model, per function body:
 
 - acquire: `x = <anything>.alloc(...)` / `x = <anything>.alloc_view(...)`
   binds fresh refcounts to `x`; `<anything>.share(x)` bumps refcounts
-  on pages already bound to `x`.
+  on pages already bound to `x`; `state, x = <anything>.fork_partial(...)`
+  (the CacheBackend partial-page COW fork returns `(state, dst_page)`)
+  binds the freshly copied page to the *last* Name in the tuple target.
 - a `return` statement reachable after the acquire must satisfy one of:
   the returned expression mentions `x` (ownership handed to the
   caller); a release/free call naming `x` happened first; `x` escaped
@@ -30,6 +32,7 @@ from .core import Finding, ModuleInfo, Project, rule
 
 _SCOPE_BASENAMES = ("scheduler.py", "engine.py")
 _ACQUIRE = ("alloc", "alloc_view")
+_ACQUIRE_TUPLE = ("fork_partial",)   # returns (state, page): bind the page
 _RELEASE = ("release", "free")
 
 
@@ -72,10 +75,18 @@ def _acquisitions(mod: ModuleInfo, fn: ast.FunctionDef
     out = []
     for node in ast.walk(fn):
         if isinstance(node, ast.Assign) and isinstance(node.value, ast.Call):
-            if _call_tail(mod, node.value) in _ACQUIRE and \
-                    len(node.targets) == 1 and \
+            tail = _call_tail(mod, node.value)
+            if tail in _ACQUIRE and len(node.targets) == 1 and \
                     isinstance(node.targets[0], ast.Name):
                 out.append((node.targets[0].id, node.lineno))
+            elif tail in _ACQUIRE_TUPLE and len(node.targets) == 1 and \
+                    isinstance(node.targets[0], (ast.Tuple, ast.List)):
+                # `self.state, dst = backend.fork_partial(...)`: the new
+                # page rides in the last element of the tuple target
+                last = node.targets[0].elts[-1] if node.targets[0].elts \
+                    else None
+                if isinstance(last, ast.Name):
+                    out.append((last.id, node.lineno))
         elif isinstance(node, ast.Expr) and isinstance(node.value, ast.Call):
             call = node.value
             if _call_tail(mod, call) == "share" and call.args and \
@@ -103,7 +114,8 @@ def _handled_before(mod: ModuleInfo, fn: ast.FunctionDef, name: str,
             continue
         if isinstance(node, ast.Call):
             tail = _call_tail(mod, node)
-            if tail in _ACQUIRE or tail == "share":
+            if tail in _ACQUIRE or tail in _ACQUIRE_TUPLE or \
+                    tail == "share":
                 continue    # the acquire itself is not an escape
             if any(_mentions(a, name) for a in node.args) or any(
                     _mentions(kw.value, name) for kw in node.keywords):

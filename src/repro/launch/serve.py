@@ -7,6 +7,7 @@
       [--priority 0,1] [--ttft-slo 0.5] [--tpot-slo 0.1] \
       [--preempt-policy auto] \
       [--shared-prefix-len 0] [--no-share-prefix] [--stream] \
+      [--no-partial-prefix] [--prefill-chunk-tokens 0] \
       [--spec-cf 4 --spec-k 4] [--stats] [--mesh 1,2] \
       [--metrics-json metrics.json] [--trace-out trace.json]
 
@@ -81,6 +82,16 @@ def main(argv=None):
                          "(demonstrates prefix sharing)")
     ap.add_argument("--no-share-prefix", action="store_true",
                     help="disable the prefix cache / copy-on-write pages")
+    ap.add_argument("--no-partial-prefix", action="store_true",
+                    help="disable token-granular partial-page prefix "
+                         "sharing (whole-page trie matching only; "
+                         "docs/cache-backends.md)")
+    ap.add_argument("--prefill-chunk-tokens", type=int, default=0,
+                    help="> 0 interleaves chunked prefill with decode: "
+                         "at most this many prompt tokens ingest per "
+                         "scheduler wave, so long prompts never stall "
+                         "in-flight decode (docs/scheduling.md); output "
+                         "is bitwise identical either way")
     ap.add_argument("--stream", action="store_true",
                     help="stream the first request token-by-token")
     ap.add_argument("--spec-cf", type=int, default=0,
@@ -147,6 +158,8 @@ def main(argv=None):
                          max_batch=args.max_batch,
                          page_size=args.page_size, n_pages=args.n_pages,
                          share_prefix=not args.no_share_prefix,
+                         partial_prefix=not args.no_partial_prefix,
+                         prefill_chunk_tokens=args.prefill_chunk_tokens,
                          spec=spec, preempt_policy=args.preempt_policy)
     print(f"engine: paged continuous-batching via "
           f"{type(engine.backend).__name__}"
@@ -201,6 +214,13 @@ def main(argv=None):
     print(f"prefix sharing: {st['shared_tokens']} prompt tokens "
           f"reused, {st['pages_shared']} pages shared, "
           f"{st['pages_allocated']} pages allocated")
+    if st["prefix_partial_hits"]:
+        print(f"  token-granular: {st['prefix_partial_hits']} partial-"
+              f"page hits, {st['prefix_partial_tokens_shared']} tokens "
+              f"reused via fork_partial")
+    if st["prefill_chunks"]:
+        print(f"chunked prefill: {st['prefill_chunks']} ingest waves at "
+              f"budget {args.prefill_chunk_tokens} tokens")
     if st["requests_failed"] or st["preemptions"]:
         print(f"overload: {st['requests_rejected']} rejected, "
               f"{st['requests_failed']} failed, "

@@ -245,6 +245,15 @@ def paged_attention_apply(params, x, cfg: ModelConfig, *, rope, pk, pv,
     (``repro.serve.cache.copy_state_page``) happen host-side before the
     step is launched.
 
+    Partial-page ingest safety (token-granular sharing,
+    ``CacheBackend.fork_partial``): a slot may start with ``lengths[b]``
+    mid-page, its current page a whole-page copy of a donor whose rows
+    past ``lengths[b] % page_size`` are stale. That is safe here by
+    construction — K/V rows at positions ``>= lengths[b]`` are
+    scatter-written before any read of them, and the causal window
+    ``pos < lengths[b] + n_new[b]`` (masked per query) never exposes a
+    row this call did not either inherit as valid or just write.
+
     ``fused=True`` routes the attention core through the flash-decode
     paged kernel (:func:`repro.kernels.ops.paged_attention`) — the page
     table is walked in-kernel (or, in ref mode on CPU, gathered at

@@ -143,6 +143,18 @@ def init_mamba1_cache(cfg: ModelConfig, batch: int, n_layers: int):
 # from (after a copy-on-write fork if it must write into it). Page 0 is
 # the scratch page: writes from idle slots and padded prompt positions
 # land there, and reads at position 0 are masked to the zero state.
+#
+# Two contract notes for the PR-10 serve features (no model change was
+# needed for either):
+# - Chunked prefill resumes exactly: the state after `lengths` tokens is
+#   always readable from page (lengths-1)//page_size even mid-page (the
+#   in-progress page holds the running snapshot), so splitting a prompt
+#   into budget-bounded chunks replays the identical recurrence.
+# - Token-granular partial sharing (`CacheBackend.fork_partial`) does
+#   NOT apply here: a snapshot page has no "first n tokens" to reuse —
+#   it is only meaningful as the state after the full page — so snapshot
+#   backends raise and the scheduler falls back to whole-page matching
+#   (docs/cache-backends.md).
 
 
 def constrain_pools(conv_pool, h_pool, *, stacked: bool = False):

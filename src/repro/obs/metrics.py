@@ -91,6 +91,12 @@ METRIC_CATALOG: Dict[str, Tuple[str, str]] = {
         "counter", "spilled pages scattered back on resume"),
     "scheduler.preempt_recomputes": (
         "counter", "preemptions resolved by re-prefill instead of spill"),
+    "scheduler.prefix_partial_hits": (
+        "counter", "admissions that reused a token-granular partial page"),
+    "scheduler.prefix_partial_tokens_shared": (
+        "counter", "prompt tokens reused via partial-page fork_partial"),
+    "scheduler.prefill_chunks": (
+        "counter", "budget-bounded prefill ingest waves (chunked mode)"),
     # prefix-trie counters (legacy PrefixCache.stats keys, 1:1)
     "trie.hit_pages": (
         "counter", "physical pages served from the prefix trie"),

@@ -47,7 +47,8 @@ from typing import Deque, Dict, List, Optional, Tuple
 INSTANT, SPAN, COUNTER = "i", "X", "C"
 
 #: request-lifecycle instants the scheduler emits (counter names and
-#: span kinds — prefill/decode/spec_wave/admit_wave — ride alongside).
+#: span kinds — prefill/prefill_chunk/decode/spec_wave/admit_wave —
+#: ride alongside).
 EVENT_KINDS = ("submit", "queued", "admit", "resume", "first_token",
                "preempt", "restore", "finish", "fail", "cancel")
 

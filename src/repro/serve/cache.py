@@ -354,6 +354,37 @@ class CacheBackend:
             return state, dst
         return copy_state_page(state, page, dst), dst
 
+    def fork_partial(self, state, page: int, n_valid: int):
+        """Token-granular copy-on-write: copy ``page`` into a fresh
+        private page whose first ``n_valid`` tokens the caller reuses
+        (``1 <= n_valid < page_size`` — a full page is :meth:`fork`'s
+        business). The whole page is copied; entries beyond ``n_valid``
+        are stale but invisible — positional KV rows are overwritten
+        before any position attends to them, and rows past a slot's
+        length mask out of the causal window. ``page`` keeps all its
+        references (the caller holds one across this call so eviction
+        cannot recycle the source mid-copy). Only valid on
+        positional-page backends: a state *snapshot* page holds the
+        post-page-boundary state, which has no token-granular prefix to
+        reuse — snapshot backends fall back to whole-page matches
+        (``snapshot_state``, docs/cache-backends.md). Returns
+        (state, fresh page id) or (state, None) when the pool is
+        empty."""
+        if not 1 <= n_valid < self.page_size:
+            raise ValueError(
+                f"fork_partial n_valid={n_valid} outside [1, "
+                f"{self.page_size}): a 0-token copy is pointless and a "
+                f"full-page copy is fork()'s job")
+        if self.snapshot_state:
+            raise ValueError(
+                "fork_partial on a snapshot-state backend: snapshot "
+                "pages are only valid at page boundaries "
+                "(docs/cache-backends.md)")
+        dst = self.alloc.fork_partial(page)
+        if dst is None:
+            return state, None
+        return copy_state_page(state, page, dst), dst
+
     # -- preemption: spill / restore ----------------------------------------
     # The device half of scheduler preemption (docs/scheduling.md): a
     # victim slot's live pages are gathered to host memory, its refcounts

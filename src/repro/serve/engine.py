@@ -123,6 +123,8 @@ class ServeEngine:
                  spec: Optional[SpecConfig] = None,
                  prefix_cache_path: Optional[str] = None,
                  fused: bool = True, preempt_policy: str = "auto",
+                 partial_prefix: bool = True,
+                 prefill_chunk_tokens: int = 0,
                  observability: bool = True,
                  trace_capacity: int = 65536):
         """Args:
@@ -149,6 +151,18 @@ class ServeEngine:
             preempt_policy: 'auto' (recompute-vs-restore cost model),
                 'spill' / 'recompute' (force one side), or 'off' (never
                 preempt) — see docs/scheduling.md.
+            partial_prefix: token-granular prefix sharing on
+                positional-page backends (trie tail entries +
+                ``CacheBackend.fork_partial``; snapshot backends keep
+                whole-page matching either way — docs/cache-backends.md).
+                False restores exact whole-page-only matching.
+            prefill_chunk_tokens: > 0 interleaves chunked prefill with
+                decode — at most this many prompt tokens ingest per
+                scheduler wave, between decode waves, so a long prompt's
+                admission never stalls in-flight decode by more than one
+                chunk (docs/scheduling.md). 0 (default) keeps serial
+                whole-prompt admission. Token streams are bitwise
+                identical either way (tests/test_serve_equivalence.py).
             observability: build the engine's :class:`repro.obs.
                 Observability` bundle (metrics registry + lifecycle
                 trace + compile counters; docs/observability.md). False
@@ -170,7 +184,9 @@ class ServeEngine:
             rcfg, params, max_batch=max_batch, page_size=page_size,
             max_len=self.max_len, n_pages=n_pages, mesh=mesh,
             sharding=sharding, share_prefix=share_prefix, spec=spec,
-            fused=fused, preempt_policy=preempt_policy, obs=self.obs)
+            fused=fused, preempt_policy=preempt_policy,
+            partial_prefix=partial_prefix,
+            prefill_chunk_tokens=prefill_chunk_tokens, obs=self.obs)
         self.backend = self.scheduler.backend
         # dense-cache decode fn: the serial-forward oracle and the
         # apples-to-apples comparison probe (throughput_probe(paged=False));

@@ -21,9 +21,14 @@ per level, keyed by the page's token tuple) mapping shared prompt prefixes
 to the physical pages that already hold their state. A request whose
 prompt walks k trie levels maps those k pages read-only and skips
 re-prefilling ``k * page_size`` tokens (on snapshot backends it resumes
-from the last matched page's state snapshot). The trie pins each cached
-page with one allocator reference of its own; under pool pressure the
-scheduler evicts least-recently-matched leaves.
+from the last matched page's state snapshot). Positional-page backends
+additionally get **token-granular tails**: partial pages published at
+request completion and near-miss full pages are matched by longest
+common token prefix (:meth:`PrefixCache.match_tail`) and copied via
+``fork_partial`` so a prompt sharing only the first 37 tokens of a
+64-token page still reuses them. The trie pins each cached page with one
+allocator reference of its own; under pool pressure the scheduler evicts
+least-recently-matched leaves.
 
 Page ``SCRATCH_PAGE`` (id 0) is never allocated: the jitted step routes
 writes from padded prompt positions and unoccupied slots there, which keeps
@@ -140,18 +145,44 @@ class PageAllocator:
         self._ref[page] -= 1
         return got[0]
 
+    def fork_partial(self, page: int) -> Optional[int]:
+        """Token-granular copy-on-write, host half: allocate a fresh
+        private page (refcount 1) to receive a copy of ``page`` whose
+        first ``n_valid`` tokens the caller will reuse. Unlike
+        :meth:`fork`, the source keeps *all* its references — this is an
+        independent new page seeded from ``page``'s content, not a
+        detached reader (the caller holds its own reference on ``page``
+        across the device copy, so eviction cannot free it mid-copy).
+        Returns the fresh id, or None when the pool is empty."""
+        self._check_id(page)
+        if self._ref[page] < 1:
+            raise ValueError(f"fork_partial of unallocated page {page}")
+        got = self.alloc(1)
+        return None if got is None else got[0]
+
     def _check_id(self, p: int) -> None:
         if not 0 < p < self.n_pages:
             raise ValueError(f"bad page id {p}")
 
 
 class _PrefixNode:
-    __slots__ = ("children", "page", "tick")
+    __slots__ = ("children", "tails", "page", "tick")
 
     def __init__(self, page: int, tick: int):
         self.children: Dict[Tuple[int, ...], "_PrefixNode"] = {}
+        self.tails: Dict[Tuple[int, ...], "_PrefixNode"] = {}
         self.page = page
         self.tick = tick
+
+
+def _common_prefix(key: Tuple[int, ...], rest, cap: int) -> int:
+    """Leading tokens ``key`` and ``rest`` agree on, capped at ``cap``."""
+    n = 0
+    for a, b in zip(key, rest, strict=False):
+        if n >= cap or a != b:
+            break
+        n += 1
+    return n
 
 
 class PrefixCache:
@@ -163,12 +194,27 @@ class PrefixCache:
     (taken at :meth:`insert`); the page therefore outlives the request
     that prefilled it and later requests map it read-only via
     :meth:`match` + ``PageAllocator.share``.
+
+    **Token-granular tails** (positional-page backends only): each node
+    additionally carries *tail* entries — partial pages keyed by a token
+    tuple shorter than ``page_size``, published at request completion
+    (the page then also holds tokens past the prompt tail; only the
+    keyed prefix is ever reused). A later prompt that shares only the
+    first n tokens of a page finds the longest such entry — or the
+    longest common token prefix of a full-page key — via
+    :meth:`match_tail` and copies the source page with
+    ``CacheBackend.fork_partial`` instead of recomputing from the page
+    boundary. Tail entries pin their page like ordinary nodes and take
+    part in LRU eviction; they are **not** persisted by
+    :meth:`save`/:meth:`load` (a restart republishes them as requests
+    complete).
     """
 
     def __init__(self, alloc: PageAllocator, page_size: int, stats=None):
         self.alloc = alloc
         self.page_size = page_size
         self.children: Dict[Tuple[int, ...], _PrefixNode] = {}
+        self.tails: Dict[Tuple[int, ...], _PrefixNode] = {}
         self._tick = 0
         # counters may be injected (the scheduler hands in a dict the
         # metrics registry registered under the 'trie' namespace) so the
@@ -217,28 +263,105 @@ class PrefixCache:
             node.tick = self._tick
             children = node.children
 
+    def match_tail(self, prompt, matched_pages: int,
+                   pending=frozenset()) -> Optional[Tuple[int, int]]:
+        """Best token-granular partial match for the prompt's remainder
+        after ``matched_pages`` full trie pages: the longest common token
+        prefix among the stop node's tail entries *and* full-page child
+        keys (a near-miss full page is just a tail with ``page_size``
+        published tokens). Returns ``(src_page, n_tokens)`` with
+        ``1 <= n_tokens < page_size`` and ``n_tokens`` strictly below the
+        remainder length (at least one token is always recomputed for
+        its logits), or None. Pages in ``pending`` — written by an
+        in-flight wave, device content not landed — are skipped. The
+        caller must ``share`` the source page before any allocator
+        traffic (eviction) could free it, then release its reference
+        after the device copy."""
+        ps = self.page_size
+        rest = [int(t) for t in prompt[matched_pages * ps:]]
+        cap = min(len(rest) - 1, ps - 1)
+        if cap < 1:
+            return None
+        children, tails = self.children, self.tails
+        for i, key in enumerate(self._chunks(prompt)):
+            if i >= matched_pages:
+                break
+            node = children.get(key)
+            if node is None:          # caller matched deeper than us?
+                return None
+            children, tails = node.children, node.tails
+        best: Optional[Tuple[int, _PrefixNode]] = None
+        for entries in (tails, children):
+            for key, node in entries.items():
+                if node.page in pending:
+                    continue
+                n = _common_prefix(key, rest, cap)
+                if n >= 1 and (best is None or n > best[0]):
+                    best = (n, node)
+        if best is None:
+            return None
+        self._tick += 1
+        best[1].tick = self._tick
+        return best[1].page, best[0]
+
+    def insert_tail(self, prompt, page: int) -> bool:
+        """Publish the prompt's final partial page (its last
+        ``len(prompt) % page_size`` tokens live in physical ``page``) as
+        a tail entry under the node chain of its full pages. No-op —
+        returns False — when the prompt is page-aligned, an ancestor is
+        not cached, or an existing entry already covers the same tokens
+        (a longer entry subsumes a shorter one: common-prefix matching
+        serves both). A strictly-shorter entry that this one extends is
+        replaced. Takes one trie-owned reference on ``page``."""
+        ps = self.page_size
+        n = len(prompt) % ps
+        if n == 0:
+            return False
+        children, tails = self.children, self.tails
+        for key in self._chunks(prompt):
+            node = children.get(key)
+            if node is None:
+                return False
+            children, tails = node.children, node.tails
+        key = tuple(int(t) for t in prompt[len(prompt) - n:])
+        self._tick += 1
+        for other in list(tails):
+            if len(other) >= len(key) and other[:len(key)] == key:
+                tails[other].tick = self._tick     # subsumed: just touch
+                return False
+            if len(other) < len(key) and key[:len(other)] == other:
+                old = tails.pop(other)             # we extend it: replace
+                self.alloc.free([old.page])
+        self.alloc.share([page])
+        tails[key] = _PrefixNode(page, self._tick)
+        return True
+
     def _walk(self):
-        """Yields (parent_children, key, node) over the whole trie."""
+        """Yields (parent_dict, key, node) over the whole trie — full-page
+        nodes and tail entries alike (tail nodes have no children)."""
         stack = [(self.children, k) for k in list(self.children)]
+        stack += [(self.tails, k) for k in list(self.tails)]
         while stack:
             children, key = stack.pop()
             node = children[key]
             yield children, key, node
             stack.extend((node.children, k) for k in list(node.children))
+            stack.extend((node.tails, k) for k in list(node.tails))
 
     @property
     def n_cached_pages(self) -> int:
         return sum(1 for _ in self._walk())
 
     def evict(self, n_needed: int) -> int:
-        """Drop least-recently-matched leaves whose page only the trie
+        """Drop least-recently-matched leaves (full-page nodes with no
+        children and no tails, or tail entries) whose page only the trie
         still references, until ``n_needed`` pages have returned to the
         pool or nothing more can be freed. Returns pages freed."""
         freed = 0
         while freed < n_needed:
             leaves = [(node.tick, key, children)
                       for children, key, node in self._walk()
-                      if not node.children
+                      if not node.children and not node.tails
                       and self.alloc.refcount(node.page) == 1]
             if not leaves:
                 break
@@ -258,6 +381,7 @@ class PrefixCache:
         for _, _, node in list(self._walk()):
             self.alloc.free([node.page])
         self.children = {}
+        self.tails = {}
 
     # -- persistence --------------------------------------------------------
     # The trie + the device contents of its pinned pages round-trip
@@ -269,30 +393,47 @@ class PrefixCache:
     def save(self, path: str, state) -> int:
         """Write the trie structure + pinned page contents to ``path``.
         ``state`` is the backend's device state whose pages the trie
-        pins. Returns the number of pages saved."""
+        pins. Tail entries (token-granular partial pages) ride along in
+        parallel ``tail_*`` arrays, keys padded to page_size with -1.
+        Returns the number of pages saved (full + tail)."""
         import jax
         import numpy as np
 
         recs: List[Tuple[int, Tuple[int, ...], int]] = []
+        tail_recs: List[Tuple[int, Tuple[int, ...], int]] = []
 
-        def walk(children, parent):
+        def walk(children, tails, parent):
+            for key, node in tails.items():
+                tail_recs.append((parent, key, node.page))
             for key, node in children.items():
                 recs.append((parent, key, node.page))
-                walk(node.children, len(recs) - 1)
+                walk(node.children, node.tails, len(recs) - 1)
 
-        walk(self.children, -1)
+        walk(self.children, self.tails, -1)
+        ps = self.page_size
         pages = np.asarray([r[2] for r in recs], np.int32)
+        tail_pages = np.asarray([r[2] for r in tail_recs], np.int32)
+        tail_keys = np.full((len(tail_recs), ps), -1, np.int32)
+        for i, (_, key, _) in enumerate(tail_recs):
+            tail_keys[i, :len(key)] = key
         data = {
-            "page_size": np.int32(self.page_size),
+            "page_size": np.int32(ps),
             "parents": np.asarray([r[0] for r in recs], np.int32),
             "keys": np.asarray([r[1] for r in recs],
-                               np.int32).reshape(len(recs), self.page_size),
+                               np.int32).reshape(len(recs), ps),
             "pages": pages,
+            "tail_parents": np.asarray([r[0] for r in tail_recs],
+                                       np.int32),
+            "tail_keys": tail_keys,
+            "tail_lens": np.asarray([len(r[1]) for r in tail_recs],
+                                    np.int32),
+            "tail_pages": tail_pages,
         }
+        all_pages = np.concatenate([pages, tail_pages])
         for i, leaf in enumerate(jax.tree.leaves(state)):
-            data[f"leaf_{i}"] = np.asarray(leaf[:, pages])
+            data[f"leaf_{i}"] = np.asarray(leaf[:, all_pages])
         np.savez(path, **data)
-        return len(recs)
+        return len(recs) + len(tail_recs)
 
     def load(self, path: str, state):
         """Restore a saved cache into this (empty) trie: allocates fresh
@@ -333,12 +474,36 @@ class PrefixCache:
             children[key] = node
             nodes[i] = node
             kept.append(i)
-        if kept:
-            dst = jnp.asarray(new_ids[kept])
+        # tail entries (absent in files saved before token-granular
+        # sharing): attach to a surviving parent unless an equal-or-
+        # longer entry already covers the same tokens
+        m = len(d["tail_parents"]) if "tail_parents" in d.files else 0
+        tail_new = np.full((m,), -1, np.int32)
+        tail_kept: List[int] = []
+        for i in range(m):
+            parent = int(d["tail_parents"][i])
+            if parent >= 0 and parent not in nodes:
+                continue                       # parent node was dropped
+            owner = self.tails if parent < 0 else nodes[parent].tails
+            klen = int(d["tail_lens"][i])
+            key = tuple(int(t) for t in d["tail_keys"][i][:klen])
+            if any(len(o) >= klen and o[:klen] == key for o in owner):
+                continue                       # already cached/subsumed
+            got = self.alloc.alloc(1)
+            if got is None:
+                continue                       # pool full: drop entry
+            tail_new[i] = got[0]
+            self._tick += 1
+            owner[key] = _PrefixNode(got[0], self._tick)
+            tail_kept.append(i)
+        if kept or tail_kept:
+            src = kept + [n + i for i in tail_kept]
+            dst = jnp.asarray(np.concatenate(
+                [new_ids[kept], tail_new[tail_kept]]).astype(np.int32))
             leaves, treedef = jax.tree.flatten(state)
             leaves = [
                 leaf.at[:, dst].set(
-                    jnp.asarray(d[f"leaf_{j}"][:, kept], leaf.dtype))
+                    jnp.asarray(d[f"leaf_{j}"][:, src], leaf.dtype))
                 for j, leaf in enumerate(leaves)]
             state = jax.tree.unflatten(treedef, leaves)
-        return state, len(kept)
+        return state, len(kept) + len(tail_kept)

@@ -59,6 +59,26 @@ the same call that writes it — those matches drop the offending pages and
 recompute their tokens instead. Under pool pressure, least-recently-matched
 trie leaves are evicted.
 
+**Token-granular partial sharing** (``partial_prefix``, KV backends
+only): finished prompts also publish their partial tail page
+(``PrefixCache.insert_tail``); a later prompt matching only the first n
+tokens of such a page reuses them via ``CacheBackend.fork_partial`` — a
+whole-page COW *copy* (the source keeps all its references) appended to
+the new request's table with n tokens valid. Snapshot backends fall
+back to whole-page matching (docs/cache-backends.md).
+
+**Chunked prefill / decode interleaving** (``prefill_chunk_tokens`` >
+0, Sarathi-style): an admission wave plans pages and fills slots but
+ingests each prompt in budget-bounded chunks — one ingest call of at
+most the budget per scheduler wave, *before* that wave's decode, with
+mid-ingest slots skipped by decode/spec waves — so a long prompt never
+stalls in-flight decode by more than one chunk. Intermediate chunks'
+sampled tokens are discarded; the completing chunk emits the first
+token with counter 0 from the last prompt token's logits, so streams
+stay bitwise identical to serial admission (the differential harness in
+``tests/serve_oracle.py`` pins this; docs/scheduling.md has the wave
+ordering and starvation interaction).
+
 **Sampling** is per-request and lives inside the jitted step
 (``launch.steps.sample_tokens``): temperature 0 slots take the exact
 greedy argmax path, others draw from the temperature-scaled,
@@ -210,6 +230,8 @@ class Scheduler:
     def __init__(self, rcfg: RunConfig, params, *, max_batch: int = 8,
                  page_size: int = 16, max_len: int = 0, n_pages: int = 0,
                  mesh=None, sharding=None, share_prefix: bool = True,
+                 partial_prefix: bool = True,
+                 prefill_chunk_tokens: int = 0,
                  backend: Optional[CacheBackend] = None,
                  spec: Optional[SpecConfig] = None, fused: bool = True,
                  admit_lookahead: int = 8, starvation_limit: int = 16,
@@ -229,6 +251,26 @@ class Scheduler:
                 :func:`repro.serve.cache.make_backend` — the scheduler
                 itself stays host-side and mesh-blind.
             share_prefix: publish full prompt pages in the prefix trie.
+            partial_prefix: token-granular prefix sharing (positional-
+                page backends only): publish each finished request's
+                partial prompt-tail page and match near-miss prefixes by
+                longest common token prefix, reusing them via
+                ``CacheBackend.fork_partial``. Snapshot backends
+                (SSM/hybrid) ignore this and keep whole-page matching —
+                a snapshot is only valid at a page boundary. False
+                restores exact whole-page-only matching (the
+                differential harness's control arm).
+            prefill_chunk_tokens: > 0 interleaves chunked prefill with
+                decode (Sarathi-style): an admission wave maps pages and
+                fills slots but ingests each prompt in budget-bounded
+                chunks — at most this many tokens per scheduler wave
+                across all ingesting slots, between decode waves — so a
+                long prompt never stalls in-flight decode by more than
+                one chunk. Chunk buckets reuse ``bucket_len``'s shape
+                universe (no new jit shapes); emitted token streams are
+                bitwise identical to serial admission (0, the default:
+                one whole-prompt batched prefill per admission wave,
+                exactly the pre-chunking path).
             backend: pre-built CacheBackend (tests); otherwise built via
                 ``make_backend``.
             spec: SpecConfig to enable coarse-propagator speculative
@@ -264,6 +306,10 @@ class Scheduler:
         self.max_batch = max_batch
         if preempt_policy not in ("auto", "spill", "recompute", "off"):
             raise ValueError(f"bad preempt_policy {preempt_policy!r}")
+        if prefill_chunk_tokens < 0:
+            raise ValueError("prefill_chunk_tokens must be >= 0 "
+                             "(0 disables chunked-prefill interleaving)")
+        self.prefill_chunk_tokens = int(prefill_chunk_tokens)
         self.admit_lookahead = admit_lookahead
         self.starvation_limit = starvation_limit
         self.age_every = max(int(age_every), 1)
@@ -296,7 +342,12 @@ class Scheduler:
                             "trie", {"hit_pages": 0, "miss_prompts": 0,
                                      "evicted": 0})) \
             if share_prefix else None
+        # token-granular tails apply to positional pages only; snapshot
+        # backends fall back to whole-page matching (docs/cache-backends.md)
+        self.partial_prefix = bool(partial_prefix) and share_prefix \
+            and not self.backend.snapshot_state
         self._pending: Set[int] = set()   # pages this admit wave will write
+        self._ingest: Dict[int, np.ndarray] = {}   # slot -> target sequence
         self._wave_preempted: Set[int] = set()   # rids preempted this wave
         self.spec: Optional[CoarseDraft] = None
         if spec is not None:
@@ -335,7 +386,8 @@ class Scheduler:
              "tokens_accepted": 0, "requests_rejected": 0,
              "requests_failed": 0, "preemptions": 0,
              "pages_spilled": 0, "pages_restored": 0,
-             "preempt_recomputes": 0})
+             "preempt_recomputes": 0, "prefix_partial_hits": 0,
+             "prefix_partial_tokens_shared": 0, "prefill_chunks": 0})
         m = self.obs.metrics
         m.gauge("pool.free_pages", lambda: self.alloc.n_free)
         m.gauge("scheduler.queue_depth", lambda: len(self.queue))
@@ -520,8 +572,12 @@ class Scheduler:
         """Map pages for one fresh request: the longest trie-cached
         prompt prefix is shared read-only, fresh pages cover the rest,
         and a COW fork detaches the last shared page when the recomputed
-        tail must write into it. Returns (pages, cached_len) or None
-        when the pool cannot serve the request right now."""
+        tail must write into it. With token-granular sharing on, a
+        partial-tail / near-miss match past the last full shared page is
+        copied into a fresh private page (``fork_partial``) so only the
+        genuinely-unshared remainder is recomputed. Returns
+        (pages, cached_len) or None when the pool cannot serve the
+        request right now."""
         ps = self.page_size
         T = len(req.prompt)
         total = pages_needed(T + req.max_new_tokens, ps)
@@ -536,12 +592,23 @@ class Scheduler:
             # into the last shared page -> COW fork
             shared_len = T - 1
             fork_src = shared[-1]
-        n_fresh = total - len(shared)
+        partial = None                    # (src_page, n_tokens)
+        if self.partial_prefix and fork_src is None:
+            partial = self.prefix.match_tail(req.prompt, len(shared),
+                                             self._pending)
+            if partial is not None:
+                # hold the source across any eviction below: a
+                # trie-only page (refcount 1) would otherwise be an
+                # eviction candidate while we still need its content
+                self.alloc.share([partial[0]])
+        n_fresh = total - len(shared) - (partial is not None)
         fresh = self.backend.alloc_view(n_fresh)
         if fresh is None and self.prefix is not None:
             self.prefix.evict(n_fresh - self.alloc.n_free)
             fresh = self.backend.alloc_view(n_fresh)
         if fresh is None:
+            if partial is not None:
+                self.alloc.free([partial[0]])
             self.backend.release(shared)
             return None
         if fork_src is not None:
@@ -555,8 +622,26 @@ class Scheduler:
             if dst != fork_src:
                 self.stats["pages_allocated"] += 1
             shared[-1] = dst
+        if partial is not None:
+            src, n_tok = partial
+            self.state, dst = self.backend.fork_partial(self.state, src,
+                                                        n_tok)
+            if dst is None and self.prefix is not None:
+                self.prefix.evict(1)
+                self.state, dst = self.backend.fork_partial(
+                    self.state, src, n_tok)
+            self.alloc.free([src])               # drop the eviction hold
+            if dst is None:                      # needs one more page
+                self.backend.release(fresh + shared)
+                return None
+            shared.append(dst)
+            shared_len += n_tok
+            self.stats["pages_allocated"] += 1
+            self.stats["prefix_partial_hits"] += 1
+            self.stats["prefix_partial_tokens_shared"] += n_tok
         self.stats["pages_allocated"] += n_fresh
-        self.stats["pages_shared"] += len(shared) - (fork_src is not None)
+        self.stats["pages_shared"] += len(shared) \
+            - (fork_src is not None) - (partial is not None)
         self.stats["shared_tokens"] += shared_len
         return shared + fresh, shared_len
 
@@ -630,7 +715,11 @@ class Scheduler:
         L = int(self.lengths[slot])
         live = pages_needed(L, self.page_size)
         pages = self.slot_pages[slot]
-        if self._restore_beats_recompute(live, L):
+        # a mid-ingest victim (chunked prefill, no token emitted yet)
+        # always recomputes: it re-enters _plan_admit as a fresh request
+        # whose page layout (trie shares + partial fork) need not match
+        # a spill's, so a restored copy would scatter into the wrong map
+        if req.out and self._restore_beats_recompute(live, L):
             req.spill = SpilledPages(
                 length=L, leaves=self.backend.spill(self.state,
                                                     pages[:live]))
@@ -695,10 +784,14 @@ class Scheduler:
             if self.trace is not None:
                 self.trace.instant("restore", req.rid, slot, self._wave,
                                    args={"pages": live})
-        elif not req.out and self.prefix is not None:
+        elif not req.out and self.prefix is not None \
+                and self.prefill_chunk_tokens == 0:
             n_full = len(req.prompt) // self.page_size
             self.prefix.insert(req.prompt, pages[:n_full])
             self._pending.update(pages[cached // self.page_size:n_full])
+            # chunked mode (prefill_chunk_tokens > 0) defers this insert
+            # to ingest completion (_prefill_chunk): the pages hold no
+            # content yet and nothing marks them pending across waves
 
     def _admit(self) -> int:
         """Fill free slots from the queue in (priority, slack, arrival)
@@ -752,7 +845,16 @@ class Scheduler:
         if plans:
             if self.spec is not None:
                 self._draft_prefill(plans)
-            self._batched_prefill(plans)
+            if self.prefill_chunk_tokens > 0:
+                # chunked mode: the admission wave only maps pages; the
+                # prompts ingest in budget-bounded chunks between decode
+                # waves (_prefill_chunk). Fully-cached resumes (restored
+                # spills) have nothing to ingest and decode immediately.
+                for slot, req, cached in plans:
+                    if len(req.resume_seq) - cached > 0:
+                        self._ingest[slot] = req.resume_seq
+            else:
+                self._batched_prefill(plans)
             self._pending.clear()
             if self.trace is not None:
                 self.trace.span("admit_wave", t0, time.perf_counter(),
@@ -834,6 +936,80 @@ class Scheduler:
             if self._is_done(req, tok):
                 self._reap(slot)
 
+    def _prefill_chunk(self) -> None:
+        """One budget-bounded ingest wave (chunked-prefill interleaving,
+        ``prefill_chunk_tokens > 0``): take up to the budget of pending
+        prompt tokens across the ingesting slots — lowest slot first —
+        and write them with ONE jitted (max_batch, bucket) prefill call,
+        exactly the shape universe ``_batched_prefill`` uses (no new jit
+        shapes). A slot whose sequence completes this wave emits its
+        first token from this call's logits; incomplete slots discard
+        the mid-prompt sample (the sampling key folds in the emitted-
+        token counter, not the call count, so the final chunk's sample
+        is bitwise the serial prefill's). Decode waves run in the same
+        scheduler iteration for every non-ingesting slot, so a long
+        prompt delays decode by at most one chunk budget."""
+        budget = self.prefill_chunk_tokens
+        work = []                        # (slot, req, seq, start, take)
+        for slot in sorted(self._ingest):
+            if budget <= 0:
+                break
+            req = self.slot_req[slot]
+            seq = self._ingest[slot]
+            start = int(self.lengths[slot])
+            take = min(len(seq) - start, budget)
+            if take <= 0:
+                continue
+            budget -= take
+            work.append((slot, req, seq, start, take))
+        if not work:
+            return
+        S = bucket_len(max(t for *_, t in work), hi=self.max_len)
+        toks = np.zeros((self.max_batch, S), np.int32)
+        n_new = np.zeros((self.max_batch,), np.int32)
+        counters = np.zeros((self.max_batch,), np.int32)
+        for slot, req, seq, start, take in work:
+            toks[slot, :take] = seq[start:start + take]
+            n_new[slot] = take
+            counters[slot] = len(req.out)
+        t0 = time.perf_counter()
+        self.state, nxt = self.backend.prefill(
+            self.state, self._slot_batch(n_new, counters), toks)
+        nxt = np.asarray(nxt)
+        now = time.perf_counter()
+        self.stats["prefill_tokens"] += int(n_new.sum())
+        self.stats["prefill_s"] += now - t0
+        self.stats["prefill_calls"] += 1
+        self.stats["prefill_chunks"] += 1
+        self.obs.metrics.observe("wave.prefill_s", now - t0)
+        if self.trace is not None:
+            self.trace.span("prefill_chunk", t0, now, wave=self._wave,
+                            args={"tokens": int(n_new.sum()),
+                                  "bucket": S, "slots": len(work)})
+            for slot, req, _, start, take in work:
+                self.trace.span("prefill_chunk", t0, now, req.rid, slot,
+                                self._wave, args={"tokens": take})
+        for slot, req, seq, start, take in work:
+            self.lengths[slot] = start + take
+            if start + take < len(seq):
+                continue                 # more chunks to go
+            del self._ingest[slot]
+            if not req.out and self.prefix is not None:
+                # the deferred trie publish: pages now hold real content
+                n_full = len(req.prompt) // self.page_size
+                self.prefix.insert(req.prompt,
+                                   self.slot_pages[slot][:n_full])
+            if req.out:                  # recompute resume: state only
+                continue
+            req.t_first = now
+            tok = int(nxt[slot, 0])
+            req.out.append(tok)
+            if self.trace is not None:
+                self.trace.instant("first_token", req.rid, slot,
+                                   self._wave)
+            if self._is_done(req, tok):
+                self._reap(slot)
+
     def _check_cow(self, slot: int, req: ScheduledRequest) -> None:
         """COW invariant: the page this slot is about to write must be
         private. Replaces the bare ``assert`` (stripped under
@@ -853,7 +1029,9 @@ class Scheduler:
         n_new = np.zeros((self.max_batch,), np.int32)
         counters = np.zeros((self.max_batch,), np.int32)
         for slot, req in enumerate(self.slot_req):
-            if req is not None:
+            # mid-ingest slots (chunked prefill) have no pending token
+            # yet — they ride along masked out (n_new == 0)
+            if req is not None and slot not in self._ingest:
                 toks[slot, 0] = req.out[-1]
                 n_new[slot] = 1
                 counters[slot] = len(req.out)
@@ -874,11 +1052,11 @@ class Scheduler:
             self.trace.span("decode", t0, t0 + dt, wave=self._wave,
                             args={"n_active": n_act})
             for slot, req in enumerate(self.slot_req):
-                if req is not None:
+                if req is not None and slot not in self._ingest:
                     self.trace.span("decode", t0, t0 + dt, req.rid,
                                     slot, self._wave)
         for slot, req in enumerate(self.slot_req):
-            if req is None:
+            if req is None or slot in self._ingest:
                 continue
             self.lengths[slot] += 1       # last token now lives in the cache
             tok = int(nxt[slot, 0])
@@ -900,7 +1078,9 @@ class Scheduler:
         ingest = np.zeros((B, k + 1), np.int32)
         counters = np.zeros((B,), np.int32)
         for b, req in enumerate(self.slot_req):
-            if req is None:
+            if req is None or b in self._ingest:
+                # mid-ingest slots (chunked prefill) have nothing to
+                # verify yet: masked out like empty slots (n_in == 0)
                 continue
             # never draft past the request's budget: accepted+1 <= room
             n_draft[b] = min(k, req.max_new_tokens - len(req.out) - 1)
@@ -942,11 +1122,11 @@ class Scheduler:
             self.trace.span("spec_wave", t0, t0 + dt, wave=self._wave,
                             args={"drafted": int(n_draft.sum())})
             for b, req in enumerate(self.slot_req):
-                if req is not None:
+                if req is not None and b not in self._ingest:
                     self.trace.span("spec_wave", t0, t0 + dt, req.rid,
                                     b, self._wave)
         for b, req in enumerate(self.slot_req):
-            if req is None:
+            if req is None or b in self._ingest:
                 continue
             a = int(acc[b])
             self.stats["tokens_accepted"] += a
@@ -969,6 +1149,7 @@ class Scheduler:
         self.slot_req[slot] = None
         self.page_table[slot, :] = SCRATCH_PAGE
         self.lengths[slot] = 0
+        self._ingest.pop(slot, None)
         self.temps[slot] = 0.0
         self.top_ks[slot] = 0
         self.top_ps[slot] = 1.0
@@ -984,6 +1165,16 @@ class Scheduler:
         req = self.slot_req[slot]
         req.t_done = time.perf_counter()
         self.finished[req.rid] = req
+        if (self.partial_prefix and self.prefix is not None
+                and int(self.lengths[slot]) >= len(req.prompt)
+                and len(req.prompt) % self.page_size):
+            # token-granular publish: the prompt's partial tail page is
+            # fully ingested by now (the length guard excludes a request
+            # cancelled mid-ingest), so index it in the trie before the
+            # release below could free it
+            self.prefix.insert_tail(
+                req.prompt,
+                self.slot_pages[slot][len(req.prompt) // self.page_size])
         self.backend.release(self.slot_pages[slot])
         self._clear_slot(slot)
         if self.trace is not None:
@@ -1037,6 +1228,11 @@ class Scheduler:
             return False
         self._wave += 1
         admitted = self._admit()
+        if self._ingest:
+            # chunked-prefill interleaving: one budget-bounded ingest
+            # call, then the decode wave below still runs for every
+            # slot that is not mid-ingest
+            self._prefill_chunk()
         if self.trace is not None:
             # counter tracks sample on change only: at steady state (no
             # admissions/reaps) both values repeat wave after wave, and
@@ -1047,10 +1243,14 @@ class Scheduler:
                 self.trace.counter("pool.free_pages", sample[0])
                 self.trace.counter("scheduler.queue_depth", sample[1])
         if self.n_active:
-            if self.spec is not None:
-                self._spec_wave()
-            else:
-                self._decode_once()
+            # skip the decode call when every occupied slot is still
+            # ingesting its prompt (nothing has a pending token)
+            if any(r is not None and s not in self._ingest
+                   for s, r in enumerate(self.slot_req)):
+                if self.spec is not None:
+                    self._spec_wave()
+                else:
+                    self._decode_once()
         elif self.queue and admitted == 0:
             # nothing running and nothing admissible: the ordered head
             # cannot get pages even with the machine to itself (e.g.

@@ -1,4 +1,4 @@
-"""Shared conformance oracle for the serve-backend test suites.
+"""Shared conformance + differential oracles for the serve test suites.
 
 One implementation of "what the paged engine must reproduce": serial
 dense-cache decode (token by token, the seed design) combined with the
@@ -7,12 +7,25 @@ the request's own (seed, tokens_emitted) counter keying. Used by
 tests/test_serve_backends.py, tests/test_serve_fuzz.py (seeded tier-1
 twin), and tests/test_properties.py (hypothesis suite) so the three
 suites cannot silently drift apart.
+
+:func:`serve_equivalence` is the **differential serve-equivalence
+harness** (ISSUE 10): any workload runs twice through fresh engines —
+the control arm with chunked-prefill interleaving and token-granular
+partial sharing OFF (serial whole-prompt admission, whole-page trie
+matching: the pre-PR-10 engine) and the treatment arm with both ON —
+and every request's token stream must match **bitwise**, at temperature
+0 and under seeded sampling alike. :func:`chunk_wave_invariant` checks
+the wave-level latency contract on the treatment trace: at most one
+prefill-chunk ingest call per scheduler wave, never exceeding the chunk
+budget — i.e. no decode wave is delayed by more than one budget's worth
+of prefill.
 """
 import jax.numpy as jnp
 import numpy as np
 
 from repro.launch.steps import sample_tokens
 from repro.models import transformer
+from repro.obs.trace import SPAN, lifecycle_violations
 from repro.serve.engine import Request, ServeEngine
 
 
@@ -59,3 +72,68 @@ def dense_decode_oracle(rcfg, params, step, req, max_len: int) -> np.ndarray:
         if n < req.max_new_tokens - 1:
             lg, cache = step(params, cache, jnp.asarray([[tok]], jnp.int32))
     return np.asarray(out, np.int32)
+
+
+def chunk_wave_invariant(events, budget: int):
+    """Wave-level latency contract for chunked-prefill interleaving:
+    fold a trace's scheduler-track ``prefill_chunk`` spans by wave and
+    return violation messages (empty list = contract holds):
+
+    - at most ONE ingest call per scheduler wave (decode runs in the
+      same wave, so one call bounds how long decode waits), and
+    - no call ingests more than ``budget`` tokens.
+
+    Together these say: between any two consecutive decode waves the
+    engine spends at most one chunk budget on prefill.
+    """
+    msgs = []
+    per_wave = {}
+    for ph, _ts, _dur, kind, rid, _slot, wave, args in events:
+        if ph == SPAN and kind == "prefill_chunk" and rid < 0:
+            per_wave.setdefault(wave, []).append(
+                int((args or {}).get("tokens", 0)))
+    for wave, calls in sorted(per_wave.items()):
+        if len(calls) > 1:
+            msgs.append(f"wave {wave}: {len(calls)} prefill_chunk calls "
+                        f"(want at most 1)")
+        for tokens in calls:
+            if tokens > budget:
+                msgs.append(f"wave {wave}: prefill_chunk ingested "
+                            f"{tokens} tokens > budget {budget}")
+    return msgs
+
+
+def serve_equivalence(rcfg, params, reqs, *, chunk_tokens: int,
+                      check_sharing: bool = False, **engine_kw):
+    """Differential serve-equivalence harness (see module docstring).
+
+    Runs ``reqs`` (``engine_outputs``-style specs) twice: the control
+    arm serial + whole-page (``prefill_chunk_tokens=0,
+    partial_prefix=False``), the treatment arm interleaved + token-
+    granular (``prefill_chunk_tokens=chunk_tokens, partial_prefix=True``
+    — on snapshot backends the scheduler itself falls back to whole-page
+    matching). Asserts per-request **bitwise** token-stream equality,
+    a clean request lifecycle on the treatment trace, at least one
+    budget-bounded ingest wave, and the :func:`chunk_wave_invariant`.
+    ``check_sharing=True`` additionally requires the treatment arm to
+    have reused tokens via ``fork_partial``. Returns
+    (engine_off, engine_on, outputs) for further stats assertions."""
+    e_off, out_off = engine_outputs(
+        rcfg, params, reqs, prefill_chunk_tokens=0, partial_prefix=False,
+        **engine_kw)
+    e_on, out_on = engine_outputs(
+        rcfg, params, reqs, prefill_chunk_tokens=chunk_tokens,
+        partial_prefix=True, **engine_kw)
+    for i, (a, b) in enumerate(zip(out_off, out_on, strict=True)):
+        np.testing.assert_array_equal(
+            a, b, err_msg=f"request {i}: interleaved+partial-sharing "
+            f"stream diverged from the serial/whole-page engine")
+    events = e_on.obs.trace.events()
+    assert lifecycle_violations(events) == []
+    assert e_on.stats["prefill_chunks"] > 0, \
+        "treatment arm never took the chunked-ingest path"
+    assert chunk_wave_invariant(events, chunk_tokens) == []
+    if check_sharing:
+        assert e_on.stats["prefix_partial_tokens_shared"] > 0, \
+            "workload was built to partial-hit but fork_partial never ran"
+    return e_off, e_on, out_on

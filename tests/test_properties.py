@@ -278,7 +278,7 @@ def test_ssm_backend_page_ops_model_checked(n_pages, ops):
 # -- refcounted page allocator (serve path) ---------------------------------
 
 _ALLOC_OPS = st.lists(
-    st.tuples(st.integers(0, 3), st.integers(0, 10**6)),
+    st.tuples(st.integers(0, 4), st.integers(0, 10**6)),
     min_size=0, max_size=120)
 
 
@@ -321,6 +321,17 @@ def test_page_allocator_refcount_property(n_pages, ops):
             if live[p] == 0:
                 del live[p]
                 assert a.is_free(p)
+        elif op == 4 and live:                    # fork_partial (copy, not
+            p = sorted(live)[arg % len(live)]     # detach)
+            free_before = a.n_free
+            q = a.fork_partial(p)
+            assert (q is None) == (free_before == 0)
+            if q is not None:
+                # fresh private page; the SOURCE keeps every reference
+                # (unlike fork, which detaches one)
+                assert q != p and q not in live
+                assert a.refcount(p) == live[p]
+                live[q] = 1
         assert all(a.refcount(p) == r and r > 0 for p, r in live.items())
         assert a.n_free == n_pages - 1 - len(live)
     for p, r in list(live.items()):
@@ -329,3 +340,104 @@ def test_page_allocator_refcount_property(n_pages, ops):
     if n_pages > 1:
         with pytest.raises(ValueError):
             a.free([1])                           # and no double free
+        with pytest.raises(ValueError):
+            a.fork_partial(1)                     # fork of a freed page
+
+
+# -- partial-page COW (fork_partial) device model check ---------------------
+
+_FORKP_OPS = st.lists(
+    st.tuples(st.integers(0, 4), st.integers(0, 10**6)),
+    min_size=1, max_size=30)
+
+
+@settings(max_examples=25, deadline=None)
+@given(n_pages=st.integers(2, 8), ops=_FORKP_OPS)
+def test_kv_backend_fork_partial_model_checked(n_pages, ops):
+    """Random alloc_view/share/fork_partial/release traffic on a
+    PagedKVBackend, checked against a pure-dict refcount model — and
+    fork_partial must deep-copy the device page while leaving the
+    source's refcounts untouched (mirrors the PR-3 SSM page-op check
+    for the detaching fork)."""
+    rcfg, params, _, _ = _conf_setup("decoder")
+    from repro.serve.cache import make_backend
+    backend = make_backend(rcfg, params, page_size=4)
+    state = backend.init(2, n_pages)
+    live = {}                                     # page -> refcount model
+    fill = {}                                     # page -> fill value
+    leaves0 = jax.tree.leaves(state)
+
+    def set_page(p, val):
+        nonlocal state
+        leaves, treedef = jax.tree.flatten(state)
+        state = jax.tree.unflatten(
+            treedef, [leaf.at[:, p].set(val) for leaf in leaves])
+
+    for op, arg in ops:
+        if op == 0:                               # alloc_view
+            n = arg % n_pages
+            free_before = backend.alloc.n_free
+            got = backend.alloc_view(n)
+            assert (got is None) == (n > free_before)
+            for p in got or []:
+                live[p] = 1
+                fill[p] = float(p + 100 * len(fill))
+                set_page(p, fill[p])
+        elif op == 1 and live:                    # share
+            p = sorted(live)[arg % len(live)]
+            backend.share([p])
+            live[p] += 1
+        elif op == 2 and live:                    # fork_partial
+            p = sorted(live)[arg % len(live)]
+            n_valid = 1 + arg % (backend.page_size - 1)
+            free_before = backend.alloc.n_free
+            state, q = backend.fork_partial(state, p, n_valid)
+            assert (q is None) == (free_before == 0)
+            if q is not None:
+                assert q != p and q not in live
+                assert backend.alloc.refcount(p) == live[p]
+                live[q] = 1
+                fill[q] = fill[p]                 # whole page copied
+                for leaf in jax.tree.leaves(state):
+                    np.testing.assert_array_equal(
+                        np.asarray(leaf[:, q]), np.asarray(leaf[:, p]))
+        elif op == 3 and live:                    # release one reference
+            p = sorted(live)[arg % len(live)]
+            backend.release([p])
+            live[p] -= 1
+            if live[p] == 0:
+                del live[p]
+                del fill[p]
+        elif op == 4:                             # n_valid bounds raise
+            if live:
+                p = sorted(live)[arg % len(live)]
+                for bad in (0, backend.page_size):
+                    with pytest.raises(ValueError):
+                        backend.fork_partial(state, p, bad)
+        for p, r in live.items():
+            assert backend.alloc.refcount(p) == r and r > 0
+            for leaf in jax.tree.leaves(state):
+                np.testing.assert_array_equal(
+                    np.asarray(leaf[:, p]),
+                    np.full_like(np.asarray(leaf[:, p]), fill[p]))
+        assert backend.alloc.n_free == n_pages - 1 - len(live)
+    for p, r in list(live.items()):
+        backend.release([p] * r)
+    assert backend.alloc.n_free == n_pages - 1    # no leak
+    assert len(leaves0) == len(jax.tree.leaves(state))
+
+
+def test_fork_partial_rejected_on_snapshot_backends():
+    """A state snapshot has no token-granular prefix: fork_partial on
+    SSM/hybrid backends is a contract error, not a silent wrong answer
+    (the scheduler's partial_prefix flag falls back to whole-page
+    matching instead — docs/cache-backends.md)."""
+    from repro.serve.cache import make_backend
+
+    rcfg, params, _, _ = _conf_setup("ssm_mamba1")
+    backend = make_backend(rcfg, params, page_size=4)
+    state = backend.init(2, 4)
+    (page,) = backend.alloc_view(1)
+    with pytest.raises(ValueError, match="snapshot"):
+        backend.fork_partial(state, page, 2)
+    backend.release([page])

@@ -180,6 +180,12 @@ def test_scheduler_eos_frees_slot_early(setup):
     fin = sched2.run()[rid2]
     assert fin.out[:2] == probe.out[:2]
     assert len(fin.out) == 2
+    # the 3-token prompt's partial tail page stays pinned by the prefix
+    # trie (token-granular publish at reap); everything else is freed,
+    # and dropping the cache drains the pool fully
+    assert sched2.alloc.n_free + sched2.prefix.n_cached_pages \
+        == sched2.alloc.n_pages - 1
+    sched2.drop_prefix_cache()
     assert sched2.alloc.n_free == sched2.alloc.n_pages - 1
 
 

@@ -1,0 +1,171 @@
+"""Differential serve-equivalence: chunked interleaving + token-granular
+prefix sharing must be invisible in every token stream.
+
+The headline suite for the PR-10 harness (``serve_oracle.
+serve_equivalence``): any workload run with chunked-prefill/decode
+interleaving AND partial-page prefix sharing ON emits per-request
+**bitwise** the token streams of the serial whole-page engine — at
+temperature 0 and under seeded sampling, on attention, SSM, and hybrid
+backends — while the trace proves no decode wave waited for more than
+one chunk budget of prefill (``chunk_wave_invariant``).
+"""
+import jax
+import numpy as np
+import pytest
+from serve_oracle import chunk_wave_invariant, serve_equivalence
+
+from repro.configs.base import (MGRITConfig, ModelConfig, OptimizerConfig,
+                                RunConfig, SSMConfig, ShapeConfig)
+from repro.models import transformer
+from repro.obs.trace import SPAN
+from repro.serve.engine import Request, ServeEngine
+
+pytestmark = pytest.mark.serve
+
+VOCAB = 32
+MAX_LEN = 48
+
+
+def _setup(fam: str, seed: int = 0):
+    kw = dict(name=fam, family="decoder", n_layers=4, d_model=16,
+              n_heads=2, n_kv_heads=2, d_ff=32, vocab_size=VOCAB,
+              act="gelu", norm="layernorm", dtype="float32")
+    if fam == "ssm_mamba1":
+        kw.update(family="ssm", ssm=SSMConfig(version=1, d_state=8,
+                                              d_conv=3))
+    elif fam == "hybrid":
+        kw.update(family="hybrid", n_layers=5, hybrid_attn_every=2,
+                  ssm=SSMConfig(version=2, d_state=8, d_conv=3,
+                                headdim=16))
+    rcfg = RunConfig(
+        model=ModelConfig(**kw),
+        mgrit=MGRITConfig(enabled=True, cf=2, levels=2, fwd_iters=1,
+                          bwd_iters=1, n_open=1, n_close=1, pad_to=2),
+        optimizer=OptimizerConfig(),
+        shape=ShapeConfig(fam, "train", 16, 4))
+    params = transformer.init_model(jax.random.PRNGKey(seed), rcfg)
+    return rcfg, params
+
+
+def _workload(rng, n_reqs: int, page_size: int):
+    """Mixed specs: prompt lengths straddle page boundaries (one short
+    of, exactly on, and past a boundary), greedy and seeded-sampled
+    requests interleaved — the shapes that break chunk-resume math."""
+    common = rng.integers(0, VOCAB, size=page_size + 3).astype(np.int32)
+    reqs = []
+    for i in range(n_reqs):
+        n = int(rng.choice([page_size - 1, page_size, page_size + 1,
+                            2 * page_size + 3, 3 * page_size - 2,
+                            int(rng.integers(2, 3 * page_size))]))
+        prompt = rng.integers(0, VOCAB, size=n).astype(np.int32)
+        if rng.random() < 0.4:          # shared-prefix population
+            prompt = np.concatenate([common, prompt])[:MAX_LEN - 8]
+        kw = {}
+        if i % 2:
+            kw = dict(temperature=float(rng.uniform(0.3, 1.2)),
+                      top_k=int(rng.choice([0, 8])),
+                      top_p=float(rng.choice([1.0, 0.9])),
+                      seed=int(rng.integers(0, 1000)))
+        reqs.append((prompt, int(rng.integers(2, 7)), kw))
+    return reqs
+
+
+@pytest.mark.parametrize("fam,seed", [("decoder", 0), ("ssm_mamba1", 1),
+                                      ("hybrid", 2)])
+def test_interleaved_partial_bitwise_equal_all_families(fam, seed):
+    """The acceptance headline: every family, temp 0 AND seeded
+    sampling in one workload, chunk budget smaller than most prompts so
+    multi-wave ingest actually happens."""
+    rcfg, params = _setup(fam, seed)
+    rng = np.random.default_rng(seed)
+    reqs = _workload(rng, 8, page_size=8)
+    serve_equivalence(rcfg, params, reqs, chunk_tokens=10,
+                      max_len=MAX_LEN, max_batch=3, page_size=8)
+
+
+def test_partial_sharing_reuses_37_of_64_token_page():
+    """ISSUE 10's literal scenario: a prompt sharing only the first 37
+    tokens of a finished prompt's 64-token page reuses exactly those 37
+    tokens via fork_partial — bitwise equal to recomputing them."""
+    rcfg, params = _setup("decoder")
+    rng = np.random.default_rng(3)
+    base = rng.integers(0, VOCAB, size=64 + 37).astype(np.int32)
+    follow = np.concatenate(
+        [base[:64 + 37], rng.integers(0, VOCAB, size=9).astype(np.int32)])
+
+    def run(partial):
+        eng = ServeEngine(rcfg, params, max_len=256, max_batch=1,
+                          page_size=64, partial_prefix=partial)
+        outs = []
+        for p in (base, follow):        # sequential: tail publishes at reap
+            outs.append(eng.generate(
+                [Request(prompt=p.copy(), max_new_tokens=6)])[0].output)
+        return eng, outs
+
+    e_off, off = run(False)
+    e_on, on = run(True)
+    for a, b in zip(off, on, strict=True):
+        np.testing.assert_array_equal(a, b)
+    assert e_on.stats["prefix_partial_hits"] == 1
+    assert e_on.stats["prefix_partial_tokens_shared"] == 37
+    # exactly the 37 reused tokens disappear from recomputation
+    assert e_off.stats["prefill_tokens"] - e_on.stats["prefill_tokens"] == 37
+
+
+def test_chunked_ingest_interleaves_with_live_decode():
+    """A long prompt admitted while another request decodes must not
+    stall it: some scheduler wave carries BOTH a prefill_chunk span and
+    a decode span, and the wave invariant holds throughout."""
+    rcfg, params = _setup("decoder")
+    rng = np.random.default_rng(4)
+    budget = 8
+    eng = ServeEngine(rcfg, params, max_len=MAX_LEN, max_batch=2,
+                      page_size=8, prefill_chunk_tokens=budget)
+    short = Request(prompt=rng.integers(0, VOCAB, 4).astype(np.int32),
+                    max_new_tokens=12)
+    eng.submit(short)
+    eng.scheduler.step()                 # short is admitted and decoding
+    long = Request(
+        prompt=rng.integers(0, VOCAB, MAX_LEN - 10).astype(np.int32),
+        max_new_tokens=4)
+    eng.submit(long)
+    eng.scheduler.run()
+    assert short.error is None and long.error is None
+    events = eng.obs.trace.events()
+    assert chunk_wave_invariant(events, budget) == []
+    chunk_waves = {w for ph, _t, _d, k, rid, _s, w, _a in events
+                   if ph == SPAN and k == "prefill_chunk" and rid < 0}
+    decode_waves = {w for ph, _t, _d, k, rid, _s, w, _a in events
+                    if ph == SPAN and k == "decode" and rid < 0}
+    assert len(chunk_waves) >= 3         # multi-wave ingest happened
+    assert chunk_waves & decode_waves, \
+        "no wave ran decode alongside a prefill chunk — the long " \
+        "prompt stalled the running request"
+
+
+def test_spec_decode_composes_with_chunking():
+    """Speculative waves skip mid-ingest slots and stay bitwise equal
+    to the serial spec engine."""
+    from repro.serve.spec import SpecConfig
+    rcfg, params = _setup("decoder", seed=5)
+    rng = np.random.default_rng(5)
+    reqs = _workload(rng, 5, page_size=8)
+    serve_equivalence(rcfg, params, reqs, chunk_tokens=9,
+                      max_len=MAX_LEN, max_batch=3, page_size=8,
+                      spec=SpecConfig(cf=2, k=3))
+
+
+def test_equivalence_under_preemption_pressure():
+    """Small pool + mixed priorities: preemption (spill and the forced
+    mid-ingest recompute path) composes with interleaving bitwise."""
+    rcfg, params = _setup("decoder", seed=6)
+    rng = np.random.default_rng(6)
+    reqs = []
+    for i in range(8):
+        prompt = rng.integers(0, VOCAB, size=int(
+            rng.integers(4, 20))).astype(np.int32)
+        reqs.append((prompt, int(rng.integers(2, 6)),
+                     {"priority": int(rng.integers(0, 3))}))
+    serve_equivalence(rcfg, params, reqs, chunk_tokens=6,
+                      max_len=MAX_LEN, max_batch=2, page_size=4,
+                      n_pages=1 + 14)   # tight: forces preempt/skip-ahead

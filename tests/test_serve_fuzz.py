@@ -143,6 +143,82 @@ def test_backend_conformance_fuzz_seeded(fam, seed):
     assert eng.scheduler.n_active == 0
 
 
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_interleaved_vs_serial_differential_fuzz(setup, seed):
+    """Tier-1 seeded twin of the PR-10 differential harness: random
+    traffic — prompt lengths straddling page boundaries, streams
+    cancelled mid-flight, preemption pressure under a small pool —
+    driven step-by-step through the interleaved + token-granular engine
+    and the serial whole-page control with the same deterministic
+    cancel policy (cancel once ``len(out)`` reaches a per-request
+    threshold; decode emits at most one token per wave, so both arms
+    cancel at the identical emitted count). Every stream must match
+    bitwise, the interleaved trace must show exactly one terminal event
+    per rid, and the pool must drain."""
+    from repro.obs.trace import lifecycle_violations
+
+    rcfg, params = setup
+    page = 4
+    rng = np.random.default_rng(40 + seed)
+    common = rng.integers(0, VOCAB, size=page + 2).astype(np.int32)
+    specs = []                      # (prompt, max_new, kwargs, cancel_at)
+    for i in range(10):
+        n = int(rng.choice([page - 1, page, page + 1, 2 * page + 3,
+                            int(rng.integers(1, 14))]))
+        prompt = rng.integers(0, VOCAB, size=n).astype(np.int32)
+        if rng.random() < 0.4:      # partial-tail fodder: shared prefix
+            prompt = np.concatenate([common, prompt])[:MAX_LEN - 8]
+        kw = dict(priority=int(rng.integers(0, 3)))
+        if i % 3 == 0:
+            kw.update(temperature=float(rng.uniform(0.3, 1.2)),
+                      top_k=int(rng.choice([0, 8])),
+                      top_p=float(rng.choice([1.0, 0.9])),
+                      seed=int(rng.integers(0, 1000)))
+        # i in {2, 7}: guaranteed mid-flight drops every seed; others random
+        if i in (2, 7) or rng.random() < 0.2:
+            max_new = int(rng.integers(4, 8))
+            cancel_at = int(rng.integers(1, max_new - 1))
+        else:
+            max_new, cancel_at = int(rng.integers(2, 8)), None
+        specs.append((prompt, max_new, kw, cancel_at))
+
+    def drive(chunk_tokens, partial):
+        sched = Scheduler(rcfg, params, max_batch=3, page_size=page,
+                          max_len=MAX_LEN, n_pages=1 + 12,
+                          partial_prefix=partial,
+                          prefill_chunk_tokens=chunk_tokens)
+        live = [(sched.submit_request(p, m, **kw), c)
+                for p, m, kw, c in specs]
+        while sched.step():
+            for req, cancel_at in live:
+                if cancel_at is not None and not req.done \
+                        and len(req.out) >= cancel_at:
+                    sched.cancel(req)
+        return sched, live
+
+    s_off, live_off = drive(chunk_tokens=0, partial=False)
+    s_on, live_on = drive(chunk_tokens=5, partial=True)
+    for i, ((a, ca), (b, cb)) in enumerate(
+            zip(live_off, live_on, strict=True)):
+        assert a.done and b.done and a.error is None and b.error is None
+        np.testing.assert_array_equal(
+            np.asarray(a.out, np.int32), np.asarray(b.out, np.int32),
+            err_msg=f"request {i} diverged under interleaving")
+        if ca is not None:          # both arms dropped at the same count,
+            # mid-flight (first-emission waves carry prefill's first
+            # token plus the same wave's decode token, so the threshold
+            # can be crossed by one)
+            assert len(a.out) == len(b.out)
+            assert ca <= len(a.out) <= ca + 1 < specs[i][1]
+    assert s_on.stats["prefill_chunks"] > 0
+    assert lifecycle_violations(s_on.obs.trace.events()) == []
+    for sched in (s_off, s_on):
+        assert sched.n_active == 0
+        sched.drop_prefix_cache()
+        assert sched.alloc.n_free == sched.alloc.n_pages - 1
+        assert all(r == 0 for r in sched.alloc._ref[1:])
+
+
 def test_pool_too_small_fails_request_not_engine(setup):
     """Failure isolation (the old behavior raised RuntimeError out of
     `run()`, killing every in-flight request): a request that can never

@@ -138,6 +138,44 @@ def test_batched_churn_compiles_each_shape_once():
     _assert_trace_once(sigs, "paged serve step")
 
 
+def test_chunked_interleaving_reuses_serial_bucket_shapes():
+    """Chunked-prefill ingest rounds through ``bucket_len``'s existing
+    shape universe: every (bucket, batch) signature the chunked +
+    token-granular engine traces is traced exactly once AND already
+    exists in the serial whole-prompt engine's compiled set — chunking
+    adds no new jit shapes, so ``engine.compiles_per_callable`` stays
+    stable when the feature is switched on."""
+    rcfg, params = make_setup()
+    prompts = [np.arange(1, 8, dtype=np.int32),      # straddles a page
+               np.array([3, 1, 2], np.int32),
+               np.arange(4, 15, dtype=np.int32) % VOCAB,
+               np.arange(1, 8, dtype=np.int32),      # trie re-hit
+               np.array([7, 7, 1, 2, 5], np.int32)]
+
+    def drive(chunk):
+        sched = Scheduler(rcfg, params, max_batch=2, page_size=4,
+                          max_len=MAX_LEN, prefill_chunk_tokens=chunk)
+        sigs = _count_step_traces(sched.backend)
+        reqs = []
+        for i, p in enumerate(prompts):
+            reqs.append(sched.submit_request(p.copy(), 3 + (i % 3)))
+            sched.step()              # interleave admit/ingest with decode
+        done = sched.run()
+        assert all(not done[r.rid].failed for r in reqs)
+        if chunk:
+            assert sched.stats["prefill_chunks"] > 0
+        assert len(sigs) > 0
+        _assert_trace_once(sigs, f"paged serve step (chunk={chunk})")
+        return set(sigs)
+
+    serial = drive(0)
+    chunked = drive(5)
+    new = chunked - serial
+    assert not new, (
+        f"chunked ingest introduced {len(new)} jit shape(s) the serial "
+        f"engine never compiles")
+
+
 def test_spec_verify_compiles_each_shape_once():
     """The speculative verify wave is shape-stable too: one compile per
     (bucket, batch) signature across a mixed-length spec run."""

@@ -259,6 +259,43 @@ def test_pg001_silent_when_released_or_returned(tmp_path):
                  select="PG001") == []
 
 
+BAD_PG001_FORK_PARTIAL = """
+    class Scheduler:
+        def admit_partial(self, src, n_tok):
+            self.state, dst = self.backend.fork_partial(self.state, src, n_tok)
+            if dst is None:
+                return None                 # fork failed: fine
+            if self.occupied():
+                return None                 # LEAK: dst never released
+            return dst
+"""
+
+GOOD_PG001_FORK_PARTIAL = """
+    class Scheduler:
+        def admit_partial(self, shared, src, n_tok):
+            self.state, dst = self.backend.fork_partial(self.state, src, n_tok)
+            if dst is None:
+                return None
+            if self.occupied():
+                self.backend.release([dst])
+                return None
+            shared.append(dst)              # handoff: caller's list owns it
+            return shared
+"""
+
+
+def test_pg001_fork_partial_tuple_binding_catches_leak(tmp_path):
+    findings = _scan(tmp_path, "scheduler.py", BAD_PG001_FORK_PARTIAL,
+                     select="PG001")
+    assert _rules_of(findings) == {"PG001"}
+    assert any("`dst`" in f.message for f in findings)
+
+
+def test_pg001_fork_partial_silent_on_release_or_handoff(tmp_path):
+    assert _scan(tmp_path, "scheduler.py", GOOD_PG001_FORK_PARTIAL,
+                 select="PG001") == []
+
+
 def test_pg001_scope_is_scheduler_and_engine_only(tmp_path):
     # same leak in an out-of-scope file: the allocator's own internals
     # (kv_pages.py) and tests juggle refcounts legitimately
